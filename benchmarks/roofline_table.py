@@ -1,0 +1,61 @@
+"""Render EXPERIMENTS.md §Roofline tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh sp|mp]
+"""
+import argparse
+import glob
+import json
+import os
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load(mesh_tag: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRY, f"*_{mesh_tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append(rec)
+    rows.sort(key=lambda r: (r["meta"]["arch"],
+                             SHAPE_ORDER.get(r["meta"]["shape"], 9)))
+    return rows
+
+
+def fmt(x, digits=3):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}g}"
+
+
+def render(mesh_tag: str) -> str:
+    rows = load(mesh_tag)
+    out = [f"| arch | shape | compute s | memory s | collective s | "
+           f"dominant | peak GB/dev | coll GB/dev | model TFLOP |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for rec in rows:
+        r = rec["roofline"]
+        m = rec["meta"]
+        peak = (rec["memory"]["peak_per_device"] or 0) / 1e9
+        out.append(
+            f"| {m['arch']} | {m['shape']} | {fmt(r['compute_s'])} | "
+            f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+            f"{r['dominant']} | {peak:.1f} | "
+            f"{r['collective_bytes_per_device']/1e9:.1f} | "
+            f"{r['model_flops']/1e12:.0f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("sp", "mp"), default="sp")
+    args = ap.parse_args()
+    print(render(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

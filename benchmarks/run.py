@@ -1,0 +1,254 @@
+"""Benchmark harness — one benchmark per paper table/figure + system perf.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only fig3_consensus
+
+Benchmarks (the paper has one experiment, Fig. 3; the rest exercise the
+theory quantities the paper derives and our beyond-paper claims):
+
+  fig3_consensus        Sec. IV / Fig. 3: epochs to consensus + |w - w*|
+  thm1_epsilon_sweep    Thm. 1 epsilon vs (gamma, T_S, graph) — prediction
+                        vs measured final error
+  consensus_strategies  faithful gossip vs collapsed vs Chebyshev: wall time
+                        per epoch + rounds to target sigma (beyond-paper)
+  topology_sweep        ring/line/star/complete/torus: sigma_A + spectral gap
+  kernel_micro          Pallas-kernel (interpret) vs jnp-oracle parity +
+                        CPU wall time (correctness harness, not TPU perf)
+  lm_epoch_throughput   DFL epoch wall time on a smoke LM (CPU reference)
+
+Each prints `name,metric,value` CSV rows and writes
+experiments/bench_results.csv.
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS = []
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def record(name, metric, value):
+    RESULTS.append((name, metric, value))
+    print(f"{name},{metric},{value}")
+
+
+def bench_fig3_consensus():
+    """Paper Fig. 3: 5x5, T_C=250, T_S=25 — epochs to consensus & error."""
+    from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
+                            init_dfl_state)
+    from repro.data import RegressionSpec, make_regression_data
+    from repro.optim import sgd
+
+    topo = FLTopology(num_servers=5, clients_per_server=5, t_client=250,
+                      t_server=25, graph_kind="ring")
+    data = make_regression_data(topo, RegressionSpec(), seed=0)
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+
+    def loss_fn(w, batch, rng):
+        xx, yy = batch
+        return 0.5 * jnp.mean((xx @ w - yy) ** 2), {}
+
+    gamma = 0.5 / (9.0 * topo.t_client)
+    cfg = DFLConfig(topology=topo)
+    opt = sgd(gamma)
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt))
+    state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+    batches = (jnp.broadcast_to(x, (topo.t_client,) + x.shape),
+               jnp.broadcast_to(y, (topo.t_client,) + y.shape))
+    w_star = np.linalg.lstsq(np.asarray(x).reshape(-1, 2),
+                             np.asarray(y).reshape(-1), rcond=None)[0]
+    consensus_epoch = None
+    for epoch in range(200):
+        state, metrics = step(state, batches)
+        servers = np.asarray(state.client_params[:, 0])
+        err = float(np.linalg.norm(servers - w_star, axis=-1).max())
+        if consensus_epoch is None and float(
+                metrics.server_disagreement) < 1e-3 and err < 0.05:
+            consensus_epoch = epoch
+    record("fig3_consensus", "epochs_to_consensus_near_wstar",
+           consensus_epoch)
+    record("fig3_consensus", "server_iters_to_consensus",
+           (consensus_epoch + 1) * topo.t_server
+           if consensus_epoch is not None else -1)
+    record("fig3_consensus", "final_max_err", round(err, 5))
+    record("fig3_consensus", "paper_claim_epochs", 160)
+
+
+def bench_thm1_epsilon_sweep():
+    from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
+                            init_dfl_state)
+    from repro.data import RegressionSpec, make_regression_data
+    from repro.optim import sgd
+
+    for (t_c, t_s, graph) in [(25, 5, "ring"), (25, 25, "ring"),
+                              (50, 10, "line"), (25, 5, "complete")]:
+        topo = FLTopology(num_servers=5, clients_per_server=5, t_client=t_c,
+                          t_server=t_s, graph_kind=graph)
+        data = make_regression_data(topo, RegressionSpec(heterogeneity=1.0),
+                                    seed=1)
+        x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+
+        def loss_fn(w, batch, rng):
+            xx, yy = batch
+            return 0.5 * jnp.mean((xx @ w - yy) ** 2), {}
+
+        gamma = 0.4 / (9.0 * t_c)
+        cfg = DFLConfig(topology=topo)
+        opt = sgd(gamma)
+        step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt))
+        state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+        batches = (jnp.broadcast_to(x, (t_c,) + x.shape),
+                   jnp.broadcast_to(y, (t_c,) + y.shape))
+        for _ in range(150):
+            state, _ = step(state, batches)
+        w_star = np.linalg.lstsq(np.asarray(x).reshape(-1, 2),
+                                 np.asarray(y).reshape(-1), rcond=None)[0]
+        servers = np.asarray(state.client_params[:, 0])
+        err = float(np.linalg.norm(servers - w_star, axis=-1).max())
+        eps = topo.epsilon_bound(gamma, mu=1.0, lsmooth=9.0, theta=80.0)
+        tag = f"tc{t_c}_ts{t_s}_{graph}"
+        record("thm1_epsilon", f"{tag}_measured_err", round(err, 5))
+        record("thm1_epsilon", f"{tag}_predicted_eps", round(eps, 5))
+        record("thm1_epsilon", f"{tag}_bound_holds", bool(err <= eps))
+
+
+def bench_consensus_strategies():
+    from repro.core import consensus as cns
+    from repro.core import topology as tp
+
+    m, t_s = 8, 25
+    a_np = tp.metropolis_weights(tp.ring_graph(m))
+    a = jnp.asarray(a_np, jnp.float32)
+    a_eff = jnp.asarray(cns.collapse_mixing(a_np, t_s), jnp.float32)
+    tree = {"w": jax.random.normal(jax.random.key(0), (m, 1_000_000))}
+    lam2 = float(np.sort(np.abs(np.linalg.eigvalsh(a_np)))[::-1][1])
+
+    funcs = {
+        "gossip_25rounds": jax.jit(lambda t: cns.gossip_scan(a, t, t_s)),
+        "collapsed_1round": jax.jit(lambda t: cns.gossip_collapsed(a_eff, t)),
+        "chebyshev_5rounds": jax.jit(
+            lambda t: cns.gossip_chebyshev(a, t, 5, lam2)),
+    }
+    base = None
+    for name, fn in funcs.items():
+        out = fn(tree)
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(5):
+            out = fn(tree)
+            jax.block_until_ready(out)
+        dt = (time.time() - t0) / 5
+        record("consensus_strategies", f"{name}_ms", round(dt * 1000, 2))
+        dis = float(jnp.linalg.norm(out["w"] - out["w"].mean(0)))
+        record("consensus_strategies", f"{name}_residual_disagreement",
+               round(dis, 6))
+        if name.startswith("gossip"):
+            base = out
+        elif name.startswith("collapsed"):
+            diff = float(jnp.abs(out["w"] - base["w"]).max())
+            record("consensus_strategies", "collapsed_vs_gossip_maxdiff",
+                   round(diff, 8))
+    sig, rounds = 1.0, 0
+    while sig > 0.01 and rounds < 500:
+        rounds += 1
+        sig = tp.sigma_a(a_np, rounds)
+    record("consensus_strategies", "gossip_rounds_to_sigma_0.01", rounds)
+    k = 1
+    while cns.chebyshev_coefficients(a_np, k) > 0.01 and k < 500:
+        k += 1
+    record("consensus_strategies", "chebyshev_rounds_to_sigma_0.01", k)
+
+
+def bench_topology_sweep():
+    from repro.core import topology as tp
+    for kind in ("ring", "line", "star", "complete"):
+        for m in (5, 16):
+            a = tp.metropolis_weights(tp.build_graph(kind, m))
+            record("topology_sweep", f"{kind}_M{m}_sigma_T25",
+                   round(tp.sigma_a(a, 25), 6))
+            record("topology_sweep", f"{kind}_M{m}_spectral_gap",
+                   round(tp.spectral_gap(a), 6))
+    a = tp.metropolis_weights(tp.torus_2d_graph(4, 4))
+    record("topology_sweep", "torus_M16_sigma_T25",
+           round(tp.sigma_a(a, 25), 6))
+
+
+def bench_kernel_micro():
+    from repro.kernels import ops, ref
+
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (2, 512, 8, 64))
+    kv = jax.random.normal(key, (2, 512, 2, 64))
+
+    def time_it(fn, *args):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.time()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out, (time.time() - t0) * 1000
+
+    o_k, t_k = time_it(lambda a, b, c: ops.flash_attention(a, b, c), q, kv, kv)
+    o_r, t_r = time_it(jax.jit(
+        lambda a, b, c: ref.attention_ref(a, b, c)), q, kv, kv)
+    record("kernel_micro", "flash_attn_err", float(jnp.abs(o_k - o_r).max()))
+    record("kernel_micro", "flash_attn_interpret_ms", round(t_k, 1))
+    record("kernel_micro", "flash_attn_jnp_ms", round(t_r, 1))
+
+    xs = jax.random.normal(key, (2, 512, 4, 64))
+    bs = jax.random.normal(key, (2, 512, 1, 128)) * 0.5
+    cs = jax.random.normal(key, (2, 512, 1, 128)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 512, 4)))
+    ac = -jnp.exp(jnp.linspace(-1, 1, 4))
+    (y_k, _), t_k = time_it(
+        lambda *a: ops.ssd_scan(*a, chunk=128), xs, bs, cs, dt, ac)
+    (y_r, _), t_r = time_it(jax.jit(ref.ssd_scan_ref), xs, bs, cs, dt, ac)
+    record("kernel_micro", "ssd_err", float(jnp.abs(y_k - y_r).max()))
+    record("kernel_micro", "ssd_interpret_ms", round(t_k, 1))
+    record("kernel_micro", "ssd_naive_ms", round(t_r, 1))
+
+
+def bench_lm_epoch_throughput():
+    from repro.launch.train import train
+    t0 = time.time()
+    res = train("smollm-360m", servers=2, clients=2, t_client=3, t_server=5,
+                epochs=3, seq_len=128, per_client_batch=2, gamma=0.05,
+                log_every=100)
+    dt = time.time() - t0
+    tokens = 3 * 3 * 4 * 2 * 128
+    record("lm_epoch_throughput", "smoke_tokens_per_s", round(tokens / dt, 1))
+    record("lm_epoch_throughput", "loss_delta",
+           round(res["history"]["loss"][0] - res["history"]["loss"][-1], 4))
+
+
+BENCHES = {
+    "fig3_consensus": bench_fig3_consensus,
+    "thm1_epsilon_sweep": bench_thm1_epsilon_sweep,
+    "consensus_strategies": bench_consensus_strategies,
+    "topology_sweep": bench_topology_sweep,
+    "kernel_micro": bench_kernel_micro,
+    "lm_epoch_throughput": bench_lm_epoch_throughput,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=tuple(BENCHES), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,metric,value")
+    for name in names:
+        BENCHES[name]()
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "bench_results.csv"), "w") as f:
+        f.write("name,metric,value\n")
+        for row in RESULTS:
+            f.write(",".join(str(r) for r in row) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Reproduce Sec. IV / Fig. 3 of the paper exactly.
+
+    PYTHONPATH=src python examples/paper_repro.py
+
+5 servers x 5 clients, D = 100 points per client, w* = (5, 2),
+T_C = 250 client iterations, T_S = 25 server iterations per epoch.
+Fig. 3(b)'s claim: all servers reach consensus after ~160 epochs (~4000
+server iterations) and the common value approaches w*.
+
+Writes experiments/paper_repro.csv with per-epoch server trajectories
+(the data behind both panels of Fig. 3).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DFLConfig, FLTopology, build_dfl_epoch_step, init_dfl_state
+from repro.data import RegressionSpec, make_regression_data
+from repro.optim import sgd
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def main():
+    topo = FLTopology(num_servers=5, clients_per_server=5,
+                      t_client=250, t_server=25, graph_kind="ring")
+    spec = RegressionSpec(w_star=(5.0, 2.0), points_per_client=100)
+    data = make_regression_data(topo, spec, seed=0)
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+
+    def loss_fn(w, batch, rng):
+        xx, yy = batch
+        return 0.5 * jnp.mean((xx @ w - yy) ** 2), {}
+
+    # L for this data (max client Hessian eigenvalue) ~ 9; the paper's rule
+    # gamma < min{1/(L T_C), 1/(mu T_C)}
+    lsmooth = 9.0
+    gamma = 0.5 / (lsmooth * topo.t_client)
+    optimizer = sgd(gamma)
+    cfg = DFLConfig(topology=topo, consensus_mode="gossip")
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, optimizer))
+    state = init_dfl_state(cfg, jnp.zeros((2,)), optimizer, jax.random.key(0))
+    batches = (jnp.broadcast_to(x, (topo.t_client,) + x.shape),
+               jnp.broadcast_to(y, (topo.t_client,) + y.shape))
+
+    w_star = np.linalg.lstsq(np.asarray(x).reshape(-1, 2),
+                             np.asarray(y).reshape(-1), rcond=None)[0]
+    print(f"least-squares w* over all 2500 points: {w_star}")
+    print(f"sigma_A = {topo.sigma():.6f}  gamma = {gamma:.3e}  "
+          f"epsilon(Thm 1) = {topo.epsilon_bound(gamma, 1.0, lsmooth, 60.0):.4f}")
+
+    rows = []
+    consensus_epoch = None
+    for epoch in range(200):
+        state, metrics = step(state, batches)
+        servers = np.asarray(state.client_params[:, 0])      # (M, 2)
+        dis = float(metrics.server_disagreement)
+        err = float(np.linalg.norm(servers - w_star, axis=-1).max())
+        rows.append([epoch, dis, err] + servers.reshape(-1).tolist())
+        # Fig. 3(b)'s event: servers agree on a COMMON value that is CLOSE
+        # to w* (identical-init disagreement is trivially 0 at epoch 0, so
+        # consensus alone is not the signal)
+        if consensus_epoch is None and dis < 1e-3 and err < 0.05:
+            consensus_epoch = epoch
+        if epoch % 25 == 0:
+            print(f"epoch {epoch:3d} ({(epoch + 1) * topo.t_server:5d} server "
+                  f"iters)  disagreement={dis:.3e}  max|w_i - w*|={err:.4f}")
+
+    os.makedirs(OUT, exist_ok=True)
+    header = "epoch,disagreement,max_err," + ",".join(
+        f"s{i}_{c}" for i in range(5) for c in ("slope", "intercept"))
+    np.savetxt(os.path.join(OUT, "paper_repro.csv"),
+               np.asarray(rows), delimiter=",", header=header, comments="")
+    print(f"\nconsensus (<1e-3) reached at epoch {consensus_epoch} "
+          f"(~{(consensus_epoch + 1) * topo.t_server} server iterations; "
+          f"paper: ~160 epochs / ~4000)")
+    print("final servers:", np.round(np.asarray(state.client_params[:, 0]), 4))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the DFL algorithm on the paper's own problem in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the Sec.-IV setup (5 servers x 5 clients, linear regression with
+w* = (5, 2)), runs the DFL epoch loop, and prints how each server's model
+converges to w* while the servers agree with each other.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import DFLConfig, FLTopology, build_dfl_epoch_step, init_dfl_state
+from repro.data import RegressionSpec, make_regression_data
+from repro.optim import sgd
+
+
+def main():
+    topo = FLTopology(num_servers=5, clients_per_server=5,
+                      t_client=50, t_server=25, graph_kind="ring")
+    data = make_regression_data(topo, RegressionSpec(w_star=(5.0, 2.0)))
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+
+    def loss_fn(w, batch, rng):
+        xx, yy = batch
+        return 0.5 * jnp.mean((xx @ w - yy) ** 2), {}
+
+    gamma = 0.4 / (9.0 * topo.t_client)          # < 1/(L T_C)  (Thm. 1)
+    optimizer = sgd(gamma)
+    cfg = DFLConfig(topology=topo, consensus_mode="gossip")
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, optimizer))
+    state = init_dfl_state(cfg, jnp.zeros((2,)), optimizer, jax.random.key(0))
+
+    batches = (jnp.broadcast_to(x, (topo.t_client,) + x.shape),
+               jnp.broadcast_to(y, (topo.t_client,) + y.shape))
+    print(f"sigma_A = {topo.sigma():.4f}   gamma = {gamma:.2e}")
+    for epoch in range(101):
+        state, metrics = step(state, batches)
+        if epoch % 20 == 0:
+            servers = state.client_params[:, 0]          # (M, 2)
+            err = jnp.linalg.norm(servers - jnp.array([5.0, 2.0]), axis=-1)
+            print(f"epoch {epoch:3d}  loss={float(metrics.loss[-1].mean()):.4f}  "
+                  f"max|w_i - w*|={float(err.max()):.4f}  "
+                  f"disagreement={float(metrics.server_disagreement):.2e}")
+    print("final server models:")
+    for i, w in enumerate(state.client_params[:, 0]):
+        print(f"  server {i}: w = ({float(w[0]):.4f}, {float(w[1]):.4f})")
+
+
+if __name__ == "__main__":
+    main()

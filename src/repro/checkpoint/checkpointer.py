@@ -1,0 +1,162 @@
+"""Sharded checkpointing without external deps (orbax is unavailable here).
+
+Format: one ``.npz`` per save holding every leaf (flattened key-paths as
+archive names) + a JSON manifest with treedef, dtypes, shapes and FL
+metadata (epoch, topology).  Arrays are gathered to host before writing —
+fine at the scales this container runs; on a real pod each host would write
+its addressable shards (the manifest layout already carries the pspec
+strings needed to re-shard on restore, so swapping the IO layer for a
+distributed one does not change the format).
+
+Fault-tolerance path (DESIGN.md §2): ``Checkpointer.restore_dropped`` maps a
+checkpoint taken with M servers onto a surviving (M-1)-server topology after
+graph surgery — the failed server's clients are orphaned and its model row is
+dropped; surviving rows re-index densely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import FLTopology
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, Any]:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}/{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (tuple, list)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/#{i}", v)
+        else:
+            flat[prefix] = node
+
+    rec("", tree)
+    return flat
+
+
+def _unflatten_from_paths(flat: Dict[str, Any], template: Any) -> Any:
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else str(k), node[k])
+                    for k in node}
+        if isinstance(node, tuple):
+            return tuple(rec(f"{prefix}/#{i}", v) for i, v in enumerate(node))
+        if isinstance(node, list):
+            return [rec(f"{prefix}/#{i}", v) for i, v in enumerate(node)]
+        return flat[prefix]
+
+    return rec("", template)
+
+
+def save_pytree(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
+    flat = {k: np.asarray(v) for k, v in _flatten_with_paths(tree).items()}
+    # np.savez cannot serialise ml_dtypes bfloat16 — store the u16 bit
+    # pattern under a marker key and view it back on restore
+    flat = {(f"__bf16__{k}" if v.dtype == jnp.bfloat16 else k):
+            (v.view(np.uint16) if v.dtype == jnp.bfloat16 else v)
+            for k, v in flat.items()}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp[:-4], **flat)   # np.savez appends .npz
+    os.replace(tmp, path)
+    manifest = {
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "meta": meta or {},
+        "time": time.time(),
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore_pytree(path: str, template: Any) -> Any:
+    with np.load(path) as z:
+        flat = {}
+        for k in z.files:
+            if k.startswith("__bf16__"):
+                flat[k[len("__bf16__"):]] = z[k].view(jnp.bfloat16)
+            else:
+                flat[k] = z[k]
+    restored = _unflatten_from_paths(flat, template)
+    return jax.tree.map(
+        lambda t, r: jnp.asarray(r, getattr(t, "dtype", None)), template,
+        restored)
+
+
+@dataclasses.dataclass
+class Checkpointer:
+    directory: str
+    keep: int = 3
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
+        path = self._path(step)
+        save_pytree(path, tree, meta={"step": step, **(meta or {})})
+        self._gc()
+        return path
+
+    def latest_step(self) -> Optional[int]:
+        if not os.path.isdir(self.directory):
+            return None
+        steps = [int(f[5:13]) for f in os.listdir(self.directory)
+                 if f.startswith("ckpt_") and f.endswith(".npz")]
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return restore_pytree(self._path(step), template), step
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        files = sorted(f for f in os.listdir(self.directory)
+                       if f.startswith("ckpt_") and f.endswith(".npz"))
+        for f in files[: -self.keep]:
+            os.remove(os.path.join(self.directory, f))
+            j = os.path.join(self.directory, f + ".json")
+            if os.path.exists(j):
+                os.remove(j)
+
+    # -- fault tolerance -----------------------------------------------------
+    def restore_dropped(self, template: Any, dropped_server: int,
+                        old_topo: FLTopology,
+                        step: Optional[int] = None) -> Tuple[Any, FLTopology]:
+        """Restore a checkpoint from an M-server run into an (M-1)-server
+        topology: drop the failed server's row on every (M, N, ...) leaf.
+        ``template`` must already have the new (M-1)-sized leading axes."""
+        new_topo, keep = old_topo.drop_server(dropped_server)
+
+        # build an M-sized template by re-inserting a dummy row
+        def widen(leaf):
+            if hasattr(leaf, "shape") and leaf.ndim >= 1 and \
+                    leaf.shape[0] == old_topo.num_servers - 1:
+                return jnp.zeros((old_topo.num_servers,) + leaf.shape[1:],
+                                 leaf.dtype)
+            return leaf
+
+        wide_template = jax.tree.map(widen, template)
+        restored, _ = self.restore(wide_template, step)
+
+        def narrow(t, r):
+            if hasattr(t, "shape") and r.ndim >= 1 and \
+                    r.shape[0] == old_topo.num_servers and \
+                    t.shape[:1] == (old_topo.num_servers - 1,):
+                return r[np.asarray(keep)]
+            return r
+
+        return jax.tree.map(narrow, template, restored), new_topo

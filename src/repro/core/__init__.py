@@ -1,0 +1,15 @@
+"""Core: the paper's DFL protocol (topology, consensus, epoch step)."""
+from repro.core.topology import (FLTopology, build_graph, is_connected,
+                                 metropolis_weights, uniform_weights,
+                                 check_mixing_matrix, sigma_a, spectral_gap)
+from repro.core.consensus import (mix_pytree, gossip_scan, gossip_collapsed,
+                                  gossip_chebyshev, collapse_mixing,
+                                  chebyshev_coefficients, make_ring_gossip)
+from repro.core.dfl import (DFLConfig, DFLState, DFLMetrics,
+                            build_dfl_epoch_step, build_fedavg_epoch_step,
+                            build_local_only_epoch_step, init_dfl_state,
+                            replicate_to_clients, server_mean,
+                            broadcast_to_clients, global_mean,
+                            disagreement_norm, max_client_drift)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

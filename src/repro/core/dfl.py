@@ -1,0 +1,312 @@
+"""The DFL algorithm (Algorithm 1) as a composable JAX training step.
+
+One *epoch step* is the paper's full cycle, compiled as a single jitted
+program so that XLA schedules the local compute and the two communication
+phases (client->server aggregation, server<->server gossip) together:
+
+    1. local period     — lax.scan of T_C per-client SGD steps, vmapped over
+                          the (M, N) client grid          (Eq. 3)
+    2. aggregation      — mean over the client axis       (Eq. 4)
+    3. consensus period — T_S gossip rounds  W <- A W     (Eq. 5/7)
+    4. broadcast        — server model back to its N clients
+
+State layout: every parameter leaf carries leading axes ``(M, N, *w)``
+sharded over the mesh axes ``("server", "client")`` — each device holds only
+its own client's copy, so per-client models cost no per-device memory over
+plain data parallelism.  Optimizer state follows the same layout and stays
+client-local (the paper's SGD is stateless; for stateful optimizers this is
+the natural privacy-preserving choice — moments never leave the client).
+
+``consensus_mode``:
+    "gossip"     faithful T_S-round schedule (the paper)
+    "collapsed"  beyond-paper: one round with A_eff = A^{T_S} (identical math)
+    "chebyshev"  beyond-paper: accelerated polynomial gossip
+    "exact_mean" idealised sigma_A=0 limit == hierarchical FL with a root
+                 aggregator (the baseline the paper argues against)
+    "none"       no inter-server communication (fully local ablation)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus as cns
+from repro.core.topology import FLTopology
+from repro.optim import Optimizer
+
+LossFn = Callable[[Any, Any, jax.Array], Tuple[jax.Array, Any]]
+# (params, batch, rng) -> (scalar loss, aux)
+
+
+class DFLState(NamedTuple):
+    """Carried across epochs. ``client_params`` leaves: (M, N, *w)."""
+
+    client_params: Any
+    opt_state: Any
+    epoch: jax.Array          # int32 scalar
+    rng: jax.Array
+
+
+class DFLMetrics(NamedTuple):
+    loss: jax.Array                 # (T_C, M, N) per local step per client
+    server_disagreement: jax.Array  # ||W - 1 wbar'||_F after consensus (Lemma 1 LHS)
+    client_drift: jax.Array         # max_ij ||w^{ij} - w^i_p|| before aggregation (Lemma 3 LHS)
+    grad_norm: jax.Array            # mean per-client grad norm of last local step
+
+
+@dataclasses.dataclass(frozen=True)
+class DFLConfig:
+    topology: FLTopology
+    consensus_mode: str = "gossip"   # gossip | gossip_blocked | collapsed | chebyshev | exact_mean | none
+    chebyshev_rounds: Optional[int] = None  # default: ceil(sqrt(T_S * gap stuff)) picked by caller
+    param_dtype: Any = jnp.float32
+    # NamedSharding for the flattened (M, D) gossip matrix in
+    # consensus_mode="gossip_blocked" (e.g. P("server", ("replica","model"))).
+    gossip_flat_sharding: Optional[Any] = None
+    # Production override: a callable server_tree -> server_tree implementing
+    # the T_S-round gossip (e.g. consensus.make_gossip_shard_map).  Same math
+    # as "gossip"; used by the launcher where mesh/leaf specs are known.
+    consensus_override: Optional[Callable[[Any], Any]] = None
+    # "full": compute the Lemma-1/Lemma-3 diagnostics (server disagreement,
+    # client drift, grad norm) every epoch — the right setting for the
+    # paper-scale simulations and tests.  "light": skip them (zeros) — at
+    # 100B+ scale each is a full-parameter-tree reduction whose f32
+    # intermediates rival the model itself in HBM.
+    metrics: str = "full"
+    # Gradient accumulation: each local iteration's per-client batch is
+    # processed in this many sequential microbatches with the summed (mean)
+    # gradient applied once — identical math to Eq. 3's full-batch gradient,
+    # 1/n the activation footprint.  The per-device activation knob for the
+    # 100B+ archs (DESIGN.md §2).
+    grad_microbatches: int = 1
+
+
+# ---------------------------------------------------------------------------
+# helpers on the (M, N, ...) layout
+# ---------------------------------------------------------------------------
+
+
+def replicate_to_clients(params: Any, m: int, n: int) -> Any:
+    """Initial broadcast: shared w_0 across all servers and clients."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None, None], (m, n) + p.shape), params)
+
+
+def server_mean(client_tree: Any) -> Any:
+    """Eq. 4: w^i = (1/N) sum_j w^{ij}  — mean over the client axis."""
+    return jax.tree.map(lambda x: x.mean(axis=1), client_tree)
+
+
+def broadcast_to_clients(server_tree: Any, n: int) -> Any:
+    """End-of-epoch broadcast: every client restarts from its server model."""
+    return jax.tree.map(
+        lambda s: jnp.broadcast_to(s[:, None], s.shape[:1] + (n,) + s.shape[1:]),
+        server_tree)
+
+
+def global_mean(client_tree: Any) -> Any:
+    """w̄ — mean over all servers and clients (analysis quantity)."""
+    return jax.tree.map(lambda x: x.mean(axis=(0, 1)), client_tree)
+
+
+def _tree_sq_norm(tree: Any) -> jax.Array:
+    # reduce with an f32 accumulator WITHOUT first materialising an f32
+    # copy of each (possibly multi-GB bf16) leaf
+    return sum(jnp.sum(jnp.square(l), dtype=jnp.float32)
+               for l in jax.tree.leaves(tree))
+
+
+def disagreement_norm(server_tree: Any) -> jax.Array:
+    """||W - 1 wbar'||_F over the stacked server models (Lemma 1 LHS).
+
+    Uses sum_i ||w_i||^2 - M ||wbar||^2 (per leaf) instead of materialising
+    the (M, ...) deviation tensor: under pjit the naive form all-gathers an
+    f32 copy of every parameter leaf across the server axis (~2 GB/leaf at
+    27B), whereas this form is shard-local squares + one tiny all-reduce."""
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree.leaves(server_tree):
+        m = leaf.shape[0]
+        s_sq = jnp.sum(jnp.square(leaf), dtype=jnp.float32)
+        mean = leaf.mean(axis=0, dtype=jnp.float32)
+        total += s_sq - m * jnp.sum(jnp.square(mean))
+    return jnp.sqrt(jnp.maximum(total, 0.0))
+
+
+def max_client_drift(client_tree: Any, server_tree: Any) -> jax.Array:
+    """max_{ij} ||w^{ij} - w^i|| (Lemma 3 LHS).
+
+    ||c - s||^2 = sum c^2 - 2 sum c*s + sum s^2 per (i, j): three bf16
+    elementwise products reduced with f32 accumulators — no (M, N, params)
+    f32 deviation tensor (the naive form held ~8 f32 expert-table copies)."""
+    sq = None
+    for c, s in zip(jax.tree.leaves(client_tree),
+                    jax.tree.leaves(server_tree)):
+        axes = tuple(range(2, c.ndim))
+        sb = s[:, None]
+        term = (jnp.sum(jnp.square(c), axis=axes, dtype=jnp.float32)
+                - 2.0 * jnp.sum(c * sb, axis=axes, dtype=jnp.float32)
+                + jnp.sum(jnp.square(sb), axis=axes, dtype=jnp.float32))
+        sq = term if sq is None else sq + term
+    return jnp.sqrt(jnp.maximum(jnp.max(sq), 0.0))
+
+
+# ---------------------------------------------------------------------------
+# the epoch step builder
+# ---------------------------------------------------------------------------
+
+
+def build_dfl_epoch_step(
+    cfg: DFLConfig,
+    loss_fn: LossFn,
+    optimizer: Optimizer,
+    donate: bool = True,
+) -> Callable[[DFLState, Any], Tuple[DFLState, DFLMetrics]]:
+    """Return ``epoch_step(state, batches) -> (state, metrics)``.
+
+    ``batches`` leaves are ``(T_C, M, N, *per_client_batch)`` — one
+    microbatch per client per local iteration.  The returned function is NOT
+    jitted; callers wrap it in jax.jit with the desired shardings.
+    """
+    topo = cfg.topology
+    m, n = topo.num_servers, topo.clients_per_server
+    a_np = topo.mixing_matrix() if m > 1 else np.ones((1, 1))
+    a = jnp.asarray(a_np, jnp.float32)
+    a_eff = jnp.asarray(cns.collapse_mixing(a_np, topo.t_server), jnp.float32)
+    lam2 = float(np.sort(np.abs(np.linalg.eigvalsh(a_np)))[::-1][1]) if m > 1 else 0.0
+    cheb_rounds = cfg.chebyshev_rounds or max(1, int(np.ceil(np.sqrt(topo.t_server))))
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    # vmap over clients within a server, then over servers
+    client_grad = jax.vmap(jax.vmap(grad_fn))
+
+    n_micro = max(cfg.grad_microbatches, 1)
+
+    def local_step(carry, batch_t):
+        params, opt_state, rng = carry
+        rng, sub = jax.random.split(rng)
+        keys = jax.random.split(sub, (m, n))  # typed keys: pass jax.random.key()
+        if n_micro == 1:
+            (loss, _aux), grads = client_grad(params, batch_t, keys)
+        else:
+            # split the per-client batch dim (axis 2 after (M, N)) into
+            # n_micro sequential microbatches; average the gradients.
+            def split(leaf):
+                b = leaf.shape[2]
+                assert b % n_micro == 0, (leaf.shape, n_micro)
+                mb = leaf.reshape(leaf.shape[:2] + (n_micro, b // n_micro)
+                                  + leaf.shape[3:])
+                return jnp.moveaxis(mb, 2, 0)     # (n_micro, M, N, b/n, ...)
+            micro_batches = jax.tree.map(split, batch_t)
+
+            # accumulate in the PARAM dtype: an f32 accumulator doubles to
+            # 2x params f32 once the while-loop double-buffers it; scaling
+            # each microgradient by 1/n first keeps bf16 accumulation well-
+            # conditioned (grads are same-scale summands).
+            def micro_step(g_acc, mb):
+                (mloss, _maux), g = client_grad(params, mb, keys)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + (x / n_micro).astype(a.dtype), g_acc, g)
+                return g_acc, mloss
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.param_dtype),
+                              params)
+            grads, mlosses = jax.lax.scan(micro_step, g0, micro_batches)
+            loss = mlosses.mean(axis=0)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        if cfg.metrics == "full":
+            gnorm = jnp.sqrt(_tree_sq_norm(grads) / (m * n))
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+        return (params, opt_state, rng), (loss, gnorm)
+
+    def apply_consensus(server_tree):
+        if m == 1 or cfg.consensus_mode == "none" or topo.t_server == 0:
+            return server_tree
+        if cfg.consensus_override is not None:
+            return cfg.consensus_override(server_tree)
+        if cfg.consensus_mode == "gossip":
+            return cns.gossip_scan(a, server_tree, topo.t_server)
+        if cfg.consensus_mode == "gossip_blocked":
+            return cns.gossip_scan_blocked(
+                a, server_tree, topo.t_server,
+                flat_sharding=cfg.gossip_flat_sharding)
+        if cfg.consensus_mode == "collapsed":
+            return cns.gossip_collapsed(a_eff, server_tree)
+        if cfg.consensus_mode == "chebyshev":
+            return cns.gossip_chebyshev(a, server_tree, cheb_rounds, lam2)
+        if cfg.consensus_mode == "exact_mean":
+            mean = jax.tree.map(lambda x: x.mean(axis=0, keepdims=True), server_tree)
+            return jax.tree.map(lambda x, mu: jnp.broadcast_to(mu, x.shape),
+                                server_tree, mean)
+        raise ValueError(f"unknown consensus mode {cfg.consensus_mode!r}")
+
+    def epoch_step(state: DFLState, batches: Any) -> Tuple[DFLState, DFLMetrics]:
+        # ---- 1. local period: T_C client SGD iterations (Eq. 3) ----
+        carry = (state.client_params, state.opt_state, state.rng)
+        (params, opt_state, rng), (losses, gnorms) = jax.lax.scan(
+            local_step, carry, batches)
+
+        # Lemma 3 LHS: drift of each client from its start-of-epoch server
+        # model w^i_p (== the broadcast client params at epoch entry).
+        if cfg.metrics == "full":
+            start_server = jax.tree.map(lambda x: x[:, 0],
+                                        state.client_params)
+            drift = max_client_drift(params, start_server)
+        else:
+            drift = jnp.zeros((), jnp.float32)
+
+        # ---- 2. aggregation at each server (Eq. 4) ----
+        server = server_mean(params)
+
+        # ---- 3. consensus period: T_S gossip rounds (Eq. 5/7) ----
+        server = apply_consensus(server)
+        disagreement = (disagreement_norm(server) if cfg.metrics == "full"
+                        else jnp.zeros((), jnp.float32))
+
+        # ---- 4. broadcast w^i_p back to C_i ----
+        params = broadcast_to_clients(server, n)
+
+        new_state = DFLState(params, opt_state, state.epoch + 1, rng)
+        metrics = DFLMetrics(loss=losses, server_disagreement=disagreement,
+                             client_drift=drift, grad_norm=gnorms[-1])
+        return new_state, metrics
+
+    return epoch_step
+
+
+def init_dfl_state(cfg: DFLConfig, params: Any, optimizer: Optimizer,
+                   rng: jax.Array) -> DFLState:
+    """Replicate shared w_0 (Alg. 1 'Initialize') and build optimizer state."""
+    topo = cfg.topology
+    client_params = replicate_to_clients(params, topo.num_servers,
+                                         topo.clients_per_server)
+    opt_state = optimizer.init(client_params)
+    return DFLState(client_params, opt_state,
+                    jnp.zeros((), jnp.int32), rng)
+
+
+# ---------------------------------------------------------------------------
+# baselines the paper compares against (conceptually)
+# ---------------------------------------------------------------------------
+
+
+def build_fedavg_epoch_step(topology: FLTopology, loss_fn: LossFn,
+                            optimizer: Optimizer) -> Callable:
+    """Classic single-server FedAvg: same local period, aggregation is a
+    global mean (the single central server), no gossip.  Implemented as DFL
+    with consensus_mode='exact_mean' — the sigma_A=0 idealisation that
+    Theorem 1's epsilon collapses to."""
+    cfg = DFLConfig(topology=topology, consensus_mode="exact_mean")
+    return build_dfl_epoch_step(cfg, loss_fn, optimizer)
+
+
+def build_local_only_epoch_step(topology: FLTopology, loss_fn: LossFn,
+                                optimizer: Optimizer) -> Callable:
+    """No-communication ablation (lower bound on agreement)."""
+    cfg = DFLConfig(topology=topology, consensus_mode="none")
+    return build_dfl_epoch_step(cfg, loss_fn, optimizer)

@@ -1,0 +1,271 @@
+"""Server graphs and FL topology.
+
+The paper (Sec. II-A) models inter-server communication as a connected
+undirected graph ``G``.  This module builds the standard graph families used
+in the simulations and in our benchmarks, derives doubly-stochastic mixing
+matrices ``A`` satisfying Eq. (6), and computes the contraction factor
+
+    sigma_A = || A^{T_S} - (1/M) 11' ||_2
+
+that drives Theorem 1.  It also implements *graph surgery* — removing a
+failed server and re-deriving a valid mixing matrix — which is the
+fault-tolerance story of the multi-server design.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# graph construction
+# ---------------------------------------------------------------------------
+
+
+def ring_graph(m: int) -> np.ndarray:
+    """Adjacency of a ring (cycle) over ``m`` servers (no self loops)."""
+    if m < 2:
+        return np.zeros((m, m), dtype=bool)
+    adj = np.zeros((m, m), dtype=bool)
+    idx = np.arange(m)
+    adj[idx, (idx + 1) % m] = True
+    adj[(idx + 1) % m, idx] = True
+    return adj
+
+
+def complete_graph(m: int) -> np.ndarray:
+    adj = np.ones((m, m), dtype=bool)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def star_graph(m: int) -> np.ndarray:
+    """Server 0 is the hub (degenerates to hierarchical FL — used as the
+    baseline topology the paper argues against)."""
+    adj = np.zeros((m, m), dtype=bool)
+    adj[0, 1:] = True
+    adj[1:, 0] = True
+    return adj
+
+
+def line_graph(m: int) -> np.ndarray:
+    adj = np.zeros((m, m), dtype=bool)
+    i = np.arange(m - 1)
+    adj[i, i + 1] = True
+    adj[i + 1, i] = True
+    return adj
+
+
+def erdos_renyi_graph(m: int, p: float, seed: int = 0) -> np.ndarray:
+    """Random connected graph: sample until connected (adds a ring as a
+    fallback spanning structure after 100 tries)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(100):
+        upper = rng.random((m, m)) < p
+        adj = np.triu(upper, 1)
+        adj = adj | adj.T
+        if is_connected(adj):
+            return adj
+    return ring_graph(m) | adj
+
+
+def torus_2d_graph(rows: int, cols: int) -> np.ndarray:
+    """2-D torus — matches the physical ICI topology of a TPU pod slice, so
+    gossip edges ride single physical links."""
+    m = rows * cols
+    adj = np.zeros((m, m), dtype=bool)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for dr, dc in ((1, 0), (0, 1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                if i != j:
+                    adj[i, j] = adj[j, i] = True
+    return adj
+
+
+GRAPH_BUILDERS = {
+    "ring": ring_graph,
+    "complete": complete_graph,
+    "star": star_graph,
+    "line": line_graph,
+}
+
+
+def build_graph(kind: str, m: int, **kw) -> np.ndarray:
+    if kind == "erdos_renyi":
+        return erdos_renyi_graph(m, kw.get("p", 0.5), kw.get("seed", 0))
+    if kind == "torus":
+        rows = kw.get("rows") or int(np.sqrt(m))
+        return torus_2d_graph(rows, m // rows)
+    return GRAPH_BUILDERS[kind](m)
+
+
+def is_connected(adj: np.ndarray) -> bool:
+    """Assumption 1 check (BFS)."""
+    m = adj.shape[0]
+    if m == 0:
+        return False
+    if m == 1:
+        return True
+    seen = np.zeros(m, dtype=bool)
+    frontier = [0]
+    seen[0] = True
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for u in np.nonzero(adj[v])[0]:
+                if not seen[u]:
+                    seen[u] = True
+                    nxt.append(u)
+        frontier = nxt
+    return bool(seen.all())
+
+
+# ---------------------------------------------------------------------------
+# mixing matrices  (Eq. 6: doubly stochastic, support = G + self loops,
+#                   positive entries bounded below by alpha)
+# ---------------------------------------------------------------------------
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights: symmetric, doubly stochastic, positive on
+    the diagonal for any connected graph — the standard constructive choice
+    satisfying Eq. (6)."""
+    m = adj.shape[0]
+    deg = adj.sum(1)
+    a = np.zeros((m, m))
+    for i in range(m):
+        for j in np.nonzero(adj[i])[0]:
+            a[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        a[i, i] = 1.0 - a[i].sum()
+    return a
+
+
+def uniform_weights(adj: np.ndarray) -> np.ndarray:
+    """Equal-neighbour weights 1/(max_deg+1) — also doubly stochastic."""
+    m = adj.shape[0]
+    dmax = int(adj.sum(1).max()) if m else 0
+    a = adj.astype(float) / (dmax + 1)
+    np.fill_diagonal(a, 0.0)
+    a += np.diag(1.0 - a.sum(1))
+    return a
+
+
+def check_mixing_matrix(a: np.ndarray, adj: Optional[np.ndarray] = None,
+                        atol: float = 1e-10) -> None:
+    """Validate Eq. (6): row/col sums 1, non-negative, support matches G."""
+    m = a.shape[0]
+    if not np.allclose(a.sum(0), 1.0, atol=atol):
+        raise ValueError("columns must sum to 1")
+    if not np.allclose(a.sum(1), 1.0, atol=atol):
+        raise ValueError("rows must sum to 1")
+    if (a < -atol).any():
+        raise ValueError("entries must be non-negative")
+    if adj is not None:
+        off = ~np.eye(m, dtype=bool)
+        if ((a > atol) & off & ~adj).any():
+            raise ValueError("positive weight on a non-edge")
+
+
+def sigma_a(a: np.ndarray, t_s: int) -> float:
+    """sigma_A = ||A^{T_S} - (1/M) 11'||_2  (spectral norm) — the consensus
+    contraction factor of Lemma 1."""
+    m = a.shape[0]
+    at = np.linalg.matrix_power(a, t_s)
+    return float(np.linalg.norm(at - np.ones((m, m)) / m, ord=2))
+
+
+def spectral_gap(a: np.ndarray) -> float:
+    """1 - |lambda_2(A)| for symmetric doubly-stochastic A."""
+    ev = np.sort(np.abs(np.linalg.eigvalsh(a)))[::-1]
+    return float(1.0 - (ev[1] if len(ev) > 1 else 0.0))
+
+
+# ---------------------------------------------------------------------------
+# FL topology: servers x clients mapped onto mesh replica slots
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FLTopology:
+    """The paper's system model: M servers, N clients each, graph G, epoch
+    split (T_C, T_S) — plus the mesh factoring used on hardware."""
+
+    num_servers: int                 # M
+    clients_per_server: int          # N
+    t_client: int                    # T_C
+    t_server: int                    # T_S
+    graph_kind: str = "ring"
+    mixing: str = "metropolis"       # metropolis | uniform
+    intra_client_replicas: int = 1   # R: FSDP degree inside one client
+
+    def __post_init__(self):
+        if self.num_servers < 1 or self.clients_per_server < 1:
+            raise ValueError("need at least 1 server and 1 client")
+        if self.t_client < 1 or self.t_server < 0:
+            raise ValueError("T_C >= 1, T_S >= 0")
+        adj = self.adjacency()
+        if self.num_servers > 1 and not is_connected(adj):
+            raise ValueError("Assumption 1 violated: server graph must be connected")
+
+    # -- graph/mixing --------------------------------------------------------
+    def adjacency(self) -> np.ndarray:
+        return build_graph(self.graph_kind, self.num_servers)
+
+    def mixing_matrix(self) -> np.ndarray:
+        adj = self.adjacency()
+        a = metropolis_weights(adj) if self.mixing == "metropolis" else uniform_weights(adj)
+        check_mixing_matrix(a, adj)
+        return a
+
+    def sigma(self) -> float:
+        if self.num_servers == 1:
+            return 0.0
+        return sigma_a(self.mixing_matrix(), self.t_server)
+
+    # -- sizes ---------------------------------------------------------------
+    @property
+    def num_clients(self) -> int:
+        return self.num_servers * self.clients_per_server
+
+    @property
+    def epoch_len(self) -> int:  # T_E
+        return self.t_client + self.t_server
+
+    @property
+    def replica_slots(self) -> int:
+        return self.num_clients * self.intra_client_replicas
+
+    # -- Theorem 1 machinery --------------------------------------------------
+    def max_step_size(self, mu: float, lsmooth: float) -> float:
+        """gamma < min{1/(L T_C), 1/(mu T_C)} (Thm. 1)."""
+        return 1.0 / (max(mu, lsmooth) * self.t_client)
+
+    def epsilon_bound(self, gamma: float, mu: float, lsmooth: float,
+                      theta: float, w0_disagreement: float = 0.0) -> float:
+        """The Thm-1 tolerance  eps = sqrt(M) g th T_C s/(1-s) + Y0/(1-L)."""
+        m = self.num_servers
+        s = self.sigma()
+        tc = self.t_client
+        lam = np.sqrt(max(0.0, 1.0 - gamma * mu * tc))
+        y0 = ((gamma * tc) ** 2 * theta * lsmooth * (1 + np.sqrt(m) * s / (1 - s))
+              + gamma * tc * lsmooth * w0_disagreement)
+        return float(np.sqrt(m) * gamma * theta * tc * s / (1 - s) + y0 / (1 - lam))
+
+    # -- fault tolerance -------------------------------------------------------
+    def drop_server(self, server_idx: int) -> Tuple["FLTopology", np.ndarray]:
+        """Graph surgery after a server failure: remove the node, keep the
+        induced subgraph if still connected else fall back to a ring over the
+        survivors.  Returns (new topology, survivor index map)."""
+        m = self.num_servers
+        if not 0 <= server_idx < m:
+            raise ValueError("bad server index")
+        if m == 1:
+            raise ValueError("cannot drop the only server")
+        keep = np.array([i for i in range(m) if i != server_idx])
+        sub = self.adjacency()[np.ix_(keep, keep)]
+        kind = self.graph_kind if is_connected(sub) else "ring"
+        new = dataclasses.replace(self, num_servers=m - 1, graph_kind=kind)
+        return new, keep

@@ -1,0 +1,6 @@
+from repro.data.pipeline import (DataConfig, FLDataPipeline,
+                                 make_regression_data, RegressionSpec,
+                                 synthetic_lm_batch)
+
+__all__ = ["DataConfig", "FLDataPipeline", "make_regression_data",
+           "RegressionSpec", "synthetic_lm_batch"]

@@ -1,0 +1,127 @@
+"""Data pipeline for DFL training.
+
+The defining property of federated data is *per-client ownership*: client
+(i, j) only ever sees its shard D^{ij} (Sec. II-B).  The pipeline therefore
+indexes every batch by (server, client) and emits stacked arrays of shape
+``(T_C, M, N, per_client_batch, ...)`` — one microbatch per client per local
+iteration — which is exactly what ``dfl.build_dfl_epoch_step`` consumes.
+
+Two sources:
+* ``make_regression_data`` — the paper's Sec.-IV synthetic linear-regression
+  task (D points per client around a ground-truth w*), with an optional
+  heterogeneity knob (per-client covariate shift) to exercise non-IID FL.
+* ``synthetic_lm_batch`` / ``FLDataPipeline`` — deterministic token streams
+  for LM training: an infinite zipf-ish synthetic corpus, seeded per client,
+  so runs are reproducible without external datasets (container is offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.topology import FLTopology
+
+
+# ---------------------------------------------------------------------------
+# the paper's Sec.-IV regression task
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegressionSpec:
+    w_star: Tuple[float, ...] = (5.0, 2.0)   # paper: w* = (5, 2) (slope, intercept)
+    points_per_client: int = 100             # paper: D = 100
+    noise_std: float = 0.5
+    x_range: Tuple[float, float] = (-5.0, 5.0)
+    heterogeneity: float = 0.0               # per-client covariate shift
+
+
+def make_regression_data(topo: FLTopology, spec: RegressionSpec,
+                         seed: int = 0) -> Dict[str, np.ndarray]:
+    """Returns {'x': (M, N, D, d), 'y': (M, N, D)} with d = len(w_star);
+    the last feature is the constant 1 (intercept)."""
+    rng = np.random.default_rng(seed)
+    m, n, d_pts = topo.num_servers, topo.clients_per_server, spec.points_per_client
+    d = len(spec.w_star)
+    lo, hi = spec.x_range
+    xs = rng.uniform(lo, hi, size=(m, n, d_pts, d - 1))
+    if spec.heterogeneity:
+        shift = rng.normal(scale=spec.heterogeneity, size=(m, n, 1, d - 1))
+        xs = xs + shift
+    feats = np.concatenate([xs, np.ones((m, n, d_pts, 1))], axis=-1)
+    w = np.asarray(spec.w_star)
+    y = feats @ w + rng.normal(scale=spec.noise_std, size=(m, n, d_pts))
+    return {"x": feats.astype(np.float32), "y": y.astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# synthetic LM token streams
+# ---------------------------------------------------------------------------
+
+
+def synthetic_lm_batch(key: jax.Array, vocab: int, shape: Tuple[int, ...],
+                       alpha: float = 1.1) -> jax.Array:
+    """Zipf-distributed token ids (harmonic tail ~ natural-language unigram
+    stats) with deterministic bigram structure so a model can actually
+    reduce loss: token_t depends weakly on token_{t-1}."""
+    k1, k2 = jax.random.split(key)
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    probs = ranks ** -alpha
+    probs = probs / probs.sum()
+    base = jax.random.choice(k1, vocab, shape=shape, p=probs)
+    # inject learnable bigram structure: with p=0.5, next = (prev*7+3) % vocab
+    mix = jax.random.bernoulli(k2, 0.5, shape)
+    rolled = (jnp.roll(base, 1, axis=-1) * 7 + 3) % vocab
+    return jnp.where(mix, rolled, base).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    per_client_batch: int
+    vocab_size: int
+    seed: int = 0
+
+
+class FLDataPipeline:
+    """Infinite iterator of per-epoch stacked batches for DFL.
+
+    Each client's stream is an independently seeded generator —
+    fold_in(seed, server_idx * N + client_idx) — mirroring disjoint D^{ij}.
+    """
+
+    def __init__(self, topo: FLTopology, cfg: DataConfig,
+                 arch: Optional[ArchConfig] = None):
+        self.topo = topo
+        self.cfg = cfg
+        self.arch = arch
+        self._epoch = 0
+
+    def epoch_batches(self, epoch: Optional[int] = None) -> Dict[str, jax.Array]:
+        """Batch pytree with leaves (T_C, M, N, b, ...)."""
+        e = self._epoch if epoch is None else epoch
+        topo, cfg = self.topo, self.cfg
+        key = jax.random.fold_in(jax.random.key(cfg.seed), e)
+        shape = (topo.t_client, topo.num_servers, topo.clients_per_server,
+                 cfg.per_client_batch, cfg.seq_len)
+        batch = {"tokens": synthetic_lm_batch(key, cfg.vocab_size, shape)}
+        if self.arch is not None and self.arch.frontend is not None:
+            fe = self.arch.frontend
+            fkey = jax.random.fold_in(key, 1)
+            emb_shape = shape[:-1] + (fe.num_tokens, fe.embed_dim)
+            name = ("patch_embeds" if fe.kind == "vision_patches" else "frames")
+            batch[name] = jax.random.normal(fkey, emb_shape, jnp.float32)
+            if fe.kind == "vision_patches":
+                # text tokens shrink so total seq stays cfg.seq_len
+                batch["tokens"] = batch["tokens"][..., : cfg.seq_len - fe.num_tokens]
+        self._epoch = e + 1
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        while True:
+            yield self.epoch_batches()

@@ -1,0 +1,57 @@
+"""Fused consensus-mixing Pallas-TPU kernel:  W <- A_eff W  in ONE HBM pass.
+
+This is the single-chip half of the beyond-paper "collapsed consensus"
+optimization (DESIGN.md §7): the faithful DFL server loop applies A for
+T_S rounds, i.e. T_S full read+write passes over every server's parameter
+vector.  Since A^{T_S} is an (M x M) matrix that is trivially precomputed on
+the host, one streaming pass suffices — the kernel is purely memory-bound,
+so collapsing T_S passes into 1 cuts consensus HBM traffic by exactly T_S x.
+
+Layout: the parameter pytree is flattened into a (M, D) matrix (D = total
+model params).  A_eff is tiny (M<=64) and stays resident in VMEM across all
+grid steps; W streams through in (M, block_d) tiles.
+
+Grid: (D // block_d,).  VMEM per step: M*block_d*4 bytes in + out + M*M.
+block_d = 2048 with M = 16 -> 256 KB per buffer: far under VMEM, deep
+double-buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(a_ref, w_ref, o_ref, *, total_d: int, block_d: int):
+    i = pl.program_id(0)
+    a = a_ref[...].astype(jnp.float32)            # (M, M) resident
+    w = w_ref[...].astype(jnp.float32)            # (M, block_d)
+    if total_d % block_d:
+        col = i * block_d + jax.lax.broadcasted_iota(
+            jnp.int32, w.shape, 1)
+        w = jnp.where(col < total_d, w, 0.0)      # NaN-safe ragged tail
+    o_ref[...] = jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def consensus_mix_2d(a_eff: jax.Array, w: jax.Array, *, block_d: int = 2048,
+                     interpret: bool = True) -> jax.Array:
+    """w: (M, D); a_eff: (M, M).  Returns A_eff @ w, one HBM pass."""
+    m, d = w.shape
+    block_d = min(block_d, d)
+    grid = (pl.cdiv(d, block_d),)
+    kernel = functools.partial(_mix_kernel, total_d=d, block_d=block_d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),         # A resident
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, d), w.dtype),
+        interpret=interpret,
+    )(a_eff, w)

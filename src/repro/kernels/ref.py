@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are *independent* reference implementations (naive math, no blocking,
+no online softmax, no chunking) so the kernel sweep tests in
+``tests/test_kernels_*.py`` compare two genuinely different code paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Naive GQA attention.  q: (b, sq, h, hd); k/v: (b, sk, kvh, hd).
+
+    ``window``: sliding window size (key j visible to query i iff
+    i-window < j <= i, positions aligned at the end: query i sits at
+    absolute position i + sk - sq).
+    """
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, group, axis=2)
+    vf = jnp.repeat(vf, group, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(sq) + (sk - sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 / SSD scan
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan_ref(xs: jax.Array, bs: jax.Array, cs: jax.Array, dt: jax.Array,
+                 a_coef: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Naive per-timestep SSM recurrence (the definition, O(s) sequential):
+
+        h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t'
+        y_t = C_t . h_t
+
+    xs: (b, s, nh, hd); bs/cs: (b, s, g, ds) with g==1; dt: (b, s, nh) f32;
+    a_coef: (nh,) negative.  Returns (y (b,s,nh,hd) f32, state (b,nh,ds,hd)).
+    """
+    bsz, s, nh, hd = xs.shape
+    ds = bs.shape[-1]
+    bh = jnp.broadcast_to(bs[:, :, 0][:, :, None], (bsz, s, nh, ds))
+    ch = jnp.broadcast_to(cs[:, :, 0][:, :, None], (bsz, s, nh, ds))
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t = inp          # (b,nh,hd), (b,nh,ds), ..., (b,nh)
+        decay = jnp.exp(dt_t * a_coef)     # (b, nh)
+        upd = jnp.einsum("bhn,bhp->bhnp", b_t, x_t * dt_t[..., None])
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, h)
+        return h, y
+
+    seq = (jnp.moveaxis(xs.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(bh.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(ch.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(dt.astype(jnp.float32), 1, 0))
+    init = jnp.zeros((bsz, nh, ds, hd), jnp.float32)
+    final, ys = jax.lax.scan(step, init, seq)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# consensus mixing
+# ---------------------------------------------------------------------------
+
+
+def consensus_mix_ref(a_eff: jax.Array, w: jax.Array) -> jax.Array:
+    """W <- A_eff W.  a_eff: (M, M) f32; w: (M, D)."""
+    return jnp.einsum("ij,jd->id", a_eff.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,1 @@
+"""Launcher: production meshes, sharding resolvers, dry-run, drivers."""

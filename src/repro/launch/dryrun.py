@@ -1,0 +1,131 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) and emit
+memory / cost / collective analyses (deliverable (e), EXPERIMENTS.md §Dry-run).
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, and the production meshes need 512
+placeholder devices on this 1-CPU container.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 34 sp pairs
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Each run writes experiments/dryrun/<arch>_<shape>_<sp|mp>.json with the
+roofline terms; ``benchmarks/roofline_table.py`` renders the table.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_arch
+from repro.launch import roofline as rl
+from repro.launch.specs import build_lowering, supported_pairs
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: Optional[str] = None, verbose: bool = True,
+            save: bool = True, **kw) -> dict:
+    t0 = time.time()
+    bundle = build_lowering(arch_id, shape_name, multi_pod=multi_pod, **kw)
+    lowered = bundle.jitted.lower(*bundle.args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = rl.collective_bytes(hlo)
+    chips = bundle.mesh.devices.size
+    report = rl.roofline(bundle.meta, chips, cost, coll, mem)
+
+    rec = {
+        "meta": bundle.meta,
+        "mesh_axes": dict(zip(bundle.mesh.axis_names,
+                              bundle.mesh.devices.shape)),
+        "chips": chips,
+        "timing": {"lower_s": round(t_lower, 2),
+                   "compile_s": round(t_compile, 2)},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": report.bytes_per_device_peak,
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "collectives": {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_bytes": coll.total_bytes,
+        },
+        "roofline": report.row(),
+    }
+    if verbose:
+        hbm = 16e9
+        peak = report.bytes_per_device_peak or 0
+        print(f"[dryrun] {bundle.name}: compile={t_compile:.1f}s "
+              f"peak/dev={peak/1e9:.2f} GB ({100*peak/hbm:.0f}% of v5e HBM) "
+              f"coll_s={report.collective_s:.3g} "
+              f"coll/dev={report.collective_bytes_per_device:.3g}B "
+              f"dominant={report.dominant}")
+    if save:
+        d = out_dir or os.path.abspath(OUT_DIR)
+        os.makedirs(d, exist_ok=True)
+        tag = "mp" if multi_pod else "sp"
+        path = os.path.join(d, f"{arch_id.replace('-', '_')}_{shape_name}_{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", help="architecture id (e.g. qwen3-1.7b)")
+    p.add_argument("--shape", choices=tuple(INPUT_SHAPES),
+                   help="input shape name")
+    p.add_argument("--all", action="store_true",
+                   help="run every supported (arch, shape) pair")
+    p.add_argument("--multi-pod", action="store_true",
+                   help="2-pod (2,16,16) mesh instead of single-pod (16,16)")
+    p.add_argument("--consensus-mode", default="gossip_shardmap",
+                   choices=("gossip", "gossip_blocked", "gossip_shardmap",
+                            "collapsed", "chebyshev", "exact_mean"))
+    p.add_argument("--out-dir", default=None)
+    args = p.parse_args()
+
+    pairs = (supported_pairs() if args.all
+             else [(args.arch, args.shape)])
+    failures = []
+    for arch_id, shape_name in pairs:
+        kw = {}
+        if shape_name == "train_4k" and args.consensus_mode != "gossip_shardmap":
+            kw["consensus_mode"] = args.consensus_mode
+        try:
+            run_one(arch_id, shape_name, multi_pod=args.multi_pod,
+                    out_dir=args.out_dir, **kw)
+        except Exception as e:  # noqa: BLE001 — report-all then fail
+            failures.append((arch_id, shape_name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e}")
+        raise SystemExit(1)
+    print(f"\nall {len(pairs)} dry-runs compiled OK "
+          f"({'multi-pod' if args.multi_pod else 'single-pod'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,286 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` on an SPMD module reports *per-device* FLOPs
+and bytes (the module is the per-partition program), so the terms divide by
+peak per-chip rates directly.  Collective bytes are not in cost_analysis:
+``collective_bytes`` parses the (per-partition) HLO text and sums the
+*result* shapes of every collective op — the bytes a chip receives per
+executed instance — weighting all-reduce x2 (ring all-reduce moves
+2(n-1)/n ~ 2 bytes per reduced byte).
+
+Ops inside loop bodies execute once per trip: the parser multiplies by the
+trip count of the enclosing while-loop when XLA kept it (scan/fori_loop);
+``known_trip_counts`` lets the caller scale specific loops (e.g. report a
+full T_C epoch from a T_C_dry=2 lowering).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e, per chip (assignment-specified)
+PEAK_FLOPS = 197e12         # bf16
+HBM_BW = 819e9              # bytes/s
+ICI_BW = 50e9               # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum byte sizes of every typed shape in an HLO result string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def _parse_computations(hlo_text: str) -> Dict[str, list]:
+    """Split HLO text into {computation_name: [lines]}."""
+    comps: Dict[str, list] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("->" in stripped or
+                                       stripped.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+_CALL_RE = re.compile(
+    r"(?:body|to_apply|calls)=\{?%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?[=:]\s*\{"?n"?[=:]"?(\d+)')
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic from compiled HLO text, loop-aware.
+
+    Builds the computation call graph (while bodies, fusion calls) and
+    multiplies each op by the product of enclosing-loop trip counts — XLA
+    records counted loops as ``backend_config known_trip_count {n}`` on the
+    while op.  Uncounted loops default to 1 (conservative).
+    """
+    comps = _parse_computations(hlo_text)
+    # multiplier per computation, propagated from ENTRY
+    entry = next((n for n in comps if "main" in n or n.startswith("entry")),
+                 None)
+    if entry is None and comps:
+        entry = list(comps)[0]
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int) -> None:
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0) + m
+        for line in comps[name]:
+            callees = _CALL_RE.findall(line)
+            if not callees:
+                continue
+            trip = 1
+            if " while(" in line:
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                # the condition runs trips+1 times but holds no collectives
+            for callee in set(callees):
+                visit(callee, m * trip)
+
+    if entry:
+        visit(entry, 1)
+
+    bytes_by_kind = {k: 0 for k in _COLL_KINDS}
+    count_by_kind = {k: 0 for k in _COLL_KINDS}
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for line in lines:
+            for kind in _COLL_KINDS:
+                if f" {kind}(" in line or f" {kind}-start(" in line:
+                    lhs = line.split("=", 1)
+                    if len(lhs) != 2:
+                        continue
+                    result = lhs[1].split(kind)[0]
+                    nbytes = _shape_bytes(result)
+                    if kind == "all-reduce":
+                        nbytes *= 2
+                    bytes_by_kind[kind] += nbytes * m
+                    count_by_kind[kind] += m
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # analytic terms (the roofline): see ``analytic_terms`` for formulas
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float               # 6ND (train) / 2ND (serve), N = active
+    analytic_bytes_per_device: float
+    collective_bytes_per_device: float
+    # HLO-reported references.  NOTE (CPU backend): cost_analysis counts
+    # every loop body ONCE (scan/fori trip counts are not multiplied), so
+    # these are per-iteration floors, not totals — the analytic terms above
+    # are the roofline; these catch gross structural anomalies only.
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    useful_ratio: float              # model_flops / (hlo_flops x chips) — >1
+    #                                  reflects the uncounted loop trips
+    bytes_per_device_peak: Optional[float] = None  # memory_analysis
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def row(self) -> Dict:
+        return dataclasses.asdict(self) | {"dominant": self.dominant}
+
+
+def _cache_bytes(cfg, batch: int, seq: int) -> float:
+    """Decode-cache bytes (bf16) for one full forward state."""
+    total = 0.0
+    for i in range(cfg.num_layers):
+        kind = cfg.pattern_for_layer(i)
+        if kind == "mamba":
+            m = cfg.mamba
+            d_in = m.d_inner(cfg.d_model)
+            total += batch * (m.num_heads(cfg.d_model) * m.d_state *
+                              m.head_dim * 4 +           # ssm state f32
+                              (m.d_conv - 1) * (d_in + 2 * m.d_state) * 2)
+        elif cfg.mla is not None:
+            m = cfg.mla
+            total += batch * seq * (m.kv_lora_rank + m.qk_rope_head_dim) * 2
+        else:
+            n = seq
+            if kind == "local" and cfg.sliding_window:
+                n = min(seq, cfg.sliding_window)
+            total += 2 * batch * n * cfg.num_kv_heads * \
+                cfg.resolved_head_dim() * 2
+    return total
+
+
+def analytic_terms(meta: Dict, chips: int) -> Dict[str, float]:
+    """Napkin-math compute/memory terms (per device, seconds).
+
+    compute: MODEL_FLOPS / chips / peak, MODEL_FLOPS = 6*N_active*tokens for
+    training (fwd+bwd) and 2*N_active*tokens for inference.
+
+    memory (per device):
+      train   T_C * (3*n_micro + 2) * P_dev   (per local step: read params +
+              read/write grad per microbatch, + update read/write)
+              + 2 * T_S * P_dev               (gossip read+write per round)
+              + A                             (activation traffic, ~12 bytes
+                                               per token-dim per layer,
+                                               fwd+bwd with remat)
+      prefill P_dev + A + cache write
+      decode  P_dev + cache read              (the classic decode bound)
+    """
+    from repro.configs import get_arch                  # local import: cycle
+    cfg = get_arch(meta["arch"])
+    active = meta.get("active_params", meta.get("params", 0))
+    shape = meta["shape"]
+    dtype_b = 2 if meta.get("dtype") == "bfloat16" else 4
+
+    if shape == "train_4k":
+        m, n, r, tp = meta["M"], meta["N"], meta["R"], meta["TP"]
+        tokens = meta["t_client"] * m * n * meta["per_client_batch"] * 4096
+        flops = 6.0 * active * tokens
+        p_dev = meta["params"] * dtype_b / (max(r, 1) * tp)
+        n_micro = meta.get("grad_microbatches", 1)
+        tokens_dev = tokens / (m * n * max(r, 1) * tp)
+        act = tokens_dev * cfg.d_model * cfg.num_layers * 12 * dtype_b
+        mem = (meta["t_client"] * (3 * n_micro + 2) * p_dev
+               + 2 * meta["t_server"] * p_dev + act)
+    elif shape == "prefill_32k":
+        tokens = meta["batch"] * meta["seq"]
+        flops = 2.0 * active * tokens
+        shards = chips if meta.get("serve_fsdp") else \
+            (chips // meta.get("data", 16) if False else 16)
+        p_dev = meta["params"] * 2 / shards
+        tokens_dev = tokens / chips
+        act = tokens_dev * cfg.d_model * cfg.num_layers * 6 * 2
+        cache = _cache_bytes(cfg, meta["batch"], meta["seq"]) / chips
+        mem = p_dev + act + cache
+    else:                                   # decode (one token)
+        tokens = meta["batch"]
+        flops = 2.0 * active * tokens
+        shards = chips if meta.get("serve_fsdp") else 16
+        p_dev = meta["params"] * 2 / shards
+        cache = _cache_bytes(cfg, meta["batch"], meta["cache_len"]) / chips
+        mem = p_dev + cache
+    return {"model_flops": flops,
+            "compute_s": flops / chips / PEAK_FLOPS,
+            "mem_bytes_dev": mem,
+            "memory_s": mem / HBM_BW}
+
+
+def roofline(meta: Dict, chips: int, cost: Dict, coll: CollectiveStats,
+             mem_stats=None) -> RooflineReport:
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll.total_bytes)
+    terms = analytic_terms(meta, chips)
+    peak = None
+    if mem_stats is not None:
+        peak = float(mem_stats.argument_size_in_bytes +
+                     mem_stats.temp_size_in_bytes +
+                     mem_stats.output_size_in_bytes -
+                     mem_stats.alias_size_in_bytes)
+    return RooflineReport(
+        arch=meta["arch"], shape=meta["shape"],
+        mesh="multi_pod" if meta.get("multi_pod") else "single_pod",
+        chips=chips,
+        compute_s=terms["compute_s"],
+        memory_s=terms["memory_s"],
+        collective_s=coll_dev / ICI_BW,
+        model_flops=terms["model_flops"],
+        analytic_bytes_per_device=terms["mem_bytes_dev"],
+        collective_bytes_per_device=coll_dev,
+        hlo_flops_per_device=hlo_flops,
+        hlo_bytes_per_device=hlo_bytes,
+        useful_ratio=(terms["model_flops"] / (hlo_flops * chips)
+                      if hlo_flops else 0.0),
+        bytes_per_device_peak=peak)

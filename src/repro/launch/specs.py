@@ -1,0 +1,384 @@
+"""Abstract input specs + jit lowering builders for every (arch x shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation); the ``build_*_lowering`` functions pair them
+with the right step function, mesh and shardings, ready for
+``.lower(...).compile()`` in the dry-run.
+
+Shape -> program (DESIGN.md §5):
+    train_4k     dfl_epoch_step   (the paper's technique)
+    prefill_32k  prefill          (full prompt -> KV cache)
+    decode_32k   serve_step       (ONE token against a 32k cache)
+    long_500k    serve_step       (ONE token against a 524k cache/state)
+
+Modality carve-out: audio/vlm archs get precomputed frame/patch embeddings
+(the assignment's stub) as extra batch leaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ArchConfig, InputShape, get_arch
+from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
+                        init_dfl_state, server_mean)
+from repro.core import consensus as cns
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_fl_mesh, make_serve_mesh
+from repro.launch.plans import DeploymentPlan, plan_for
+from repro.models import transformer as tf
+from repro.optim import sgd
+
+
+@dataclasses.dataclass
+class LoweringBundle:
+    """Everything the dry-run needs for one (arch, shape, mesh) compile."""
+
+    name: str
+    mesh: Mesh
+    jitted: Any                    # jax.jit-wrapped step
+    args: Tuple[Any, ...]          # abstract pytrees for .lower(*args)
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _abstract(fn: Callable) -> Any:
+    """eval_shape of a nullary builder (no allocation)."""
+    return jax.eval_shape(fn)
+
+
+# ---------------------------------------------------------------------------
+# batch specs (shared by train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def token_batch_specs(cfg: ArchConfig, lead: Tuple[int, ...], seq_len: int,
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract batch leaves for one microbatch with leading dims ``lead``.
+
+    vlm: patch embeddings are prepended, tokens shrink so the total stays
+    seq_len.  audio (enc-dec): encoder frames at encoder_len_ratio * seq.
+    """
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    tok_len = seq_len
+    if cfg.frontend is not None and cfg.frontend.kind == "vision_patches":
+        tok_len = seq_len - cfg.frontend.num_tokens
+        batch["patch_embeds"] = _sds(
+            lead + (cfg.frontend.num_tokens, cfg.frontend.embed_dim),
+            jnp.float32)
+    if cfg.encdec is not None:
+        enc_len = int(seq_len * cfg.encdec.encoder_len_ratio)
+        batch["frames"] = _sds(lead + (enc_len, cfg.d_model), jnp.float32)
+    batch["tokens"] = _sds(lead + (tok_len,), jnp.int32)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# train_4k: the DFL epoch step
+# ---------------------------------------------------------------------------
+
+
+def build_train_lowering(arch_id: str, shape: InputShape, *,
+                         multi_pod: bool = False,
+                         consensus_mode: str = "gossip_shardmap",
+                         remat: bool = True,
+                         plan: Optional[DeploymentPlan] = None,
+                         graph_kind: str = "ring",
+                         seq_parallel: Optional[bool] = None) -> LoweringBundle:
+    cfg = get_arch(arch_id)
+    plan = plan or plan_for(arch_id)
+    spec = plan.fl_spec(multi_pod)
+    mesh = make_fl_mesh(spec, multi_pod=multi_pod)
+    m, n, r = spec.num_servers, spec.clients_per_server, spec.fsdp
+    per_client = shape.global_batch // (m * n)
+    assert per_client >= 1, (arch_id, shape.name, m, n)
+    topo = FLTopology(num_servers=m, clients_per_server=n,
+                      t_client=plan.t_client_dry, t_server=plan.t_server,
+                      graph_kind=graph_kind, intra_client_replicas=r)
+    dtype = plan.dtype()
+    # Megatron-style sequence parallelism at stack boundaries (unless the
+    # model axis is consumed as intra-client DP for awkward-head archs).
+    act_sharding = None
+    moe_group_sharding = None
+    ssd_head_sharding = None
+    attn_head_sharding = None
+    # MLA's latent split/up-project chain cannot reconcile seq-sharded
+    # residuals with head-sharded attention (the partitioner replicates the
+    # (b, s, h, 256) expansion) — deepseek runs batch-parallel + head-TP
+    # with NO sequence parallelism; everything else gets Megatron-SP.
+    seq_par = (not plan.batch_over_model and cfg.mla is None
+               and shape.seq_len % spec.tp == 0)
+    if plan.seq_parallel is not None:
+        seq_par = plan.seq_parallel
+    if seq_parallel is not None:        # perf-iteration override (§Perf)
+        seq_par = seq_parallel
+    if seq_par:
+        act_sharding = NamedSharding(mesh, P(None, "model", None))
+        moe_group_sharding = NamedSharding(
+            mesh, P(("replica", "model") if r > 1 else "model", None, None))
+        # SSD head pinning only composes with seq-sharded residuals; in
+        # batch-parallel mode the in_proj split boundaries do not align
+        # with the e-dim shards and the constraint forces full re-gathers
+        # (measured: jamba 322 -> 901 s collective).
+        ssd_head_sharding = NamedSharding(mesh, P(None, None, "model", None))
+    elif r > 1:
+        # non-SP: groups stay replica-sharded; forcing them over
+        # (replica, model) as well measured 3x WORSE on jamba (B3, §Perf) —
+        # the expert matmul's own e-sharding already induces the a2a.
+        moe_group_sharding = NamedSharding(mesh, P("replica", None, None))
+    if not plan.batch_over_model and cfg.num_heads % spec.tp == 0:
+        attn_head_sharding = NamedSharding(
+            mesh, P(None, None, "model", None))
+    if cfg.moe is None:
+        moe_groups = 1
+    elif cfg.mla is not None:
+        moe_groups = max(r, 1)
+    else:
+        moe_groups = max(r, 1) * spec.tp
+    opts = tf.ApplyOptions(remat=remat, act_sharding=act_sharding,
+                           moe_groups=moe_groups,
+                           moe_group_sharding=moe_group_sharding,
+                           ssd_chunk=64 if cfg.mamba is not None else None,
+                           ssd_head_sharding=ssd_head_sharding,
+                           attn_head_sharding=attn_head_sharding)
+    loss_fn = tf.make_loss_fn(cfg, opts)
+    optimizer = sgd(1e-3)
+    micro = plan.grad_microbatches if per_client % max(
+        plan.grad_microbatches, 1) == 0 else 1
+    flat_axes = ("replica", "model") if r > 1 else ("model",)
+    dfl_cfg = DFLConfig(topology=topo, consensus_mode=consensus_mode,
+                        param_dtype=dtype, grad_microbatches=micro,
+                        metrics="full" if cfg.param_count() < 5e9 else "light",
+                        gossip_flat_sharding=NamedSharding(
+                            mesh, P("server", flat_axes)))
+    tp_axis = None if plan.batch_over_model else "model"
+    if consensus_mode == "gossip_shardmap":
+        # explicit blocked shard_map gossip (same math as "gossip")
+        params_abs0 = _abstract(
+            lambda: tf.init_params(jax.random.key(0), cfg, dtype))
+        client_abs = _abstract(lambda: jax.tree.map(
+            lambda p: jnp.zeros((m, n) + p.shape, p.dtype), params_abs0))
+        server_abs = jax.eval_shape(server_mean, client_abs)
+        server_specs = shd._tree_specs(server_abs, ("server",), mesh,
+                                       tp_axis=tp_axis, fsdp_axis="replica")
+        override = cns.make_gossip_shard_map(
+            mesh, topo.mixing_matrix(), topo.t_server, server_specs)
+        dfl_cfg = dataclasses.replace(dfl_cfg, consensus_mode="gossip",
+                                      consensus_override=override)
+    step = build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer)
+
+    state_abs = _abstract(lambda: init_dfl_state(
+        dfl_cfg, tf.init_params(jax.random.key(0), cfg, dtype), optimizer,
+        jax.random.key(1)))
+    lead = (topo.t_client, m, n, per_client)
+    batch_abs = token_batch_specs(cfg, lead, shape.seq_len)
+
+    state_specs = shd.fl_state_specs(state_abs, mesh, tp_axis=tp_axis)
+    b_axes = []
+    if r > 1 and per_client % r == 0:
+        b_axes.append("replica")
+    if plan.batch_over_model and per_client % (max(r, 1) * spec.tp) == 0:
+        b_axes.append("model")
+    bspec = P(None, "server", "client", tuple(b_axes) if b_axes else None)
+    batch_specs = jax.tree.map(lambda _: bspec, batch_abs)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(shd.named(state_specs, mesh),
+                      shd.named(batch_specs, mesh)),
+        out_shardings=(shd.named(state_specs, mesh), None),
+        donate_argnums=(0,),
+    )
+    return LoweringBundle(
+        name=f"{arch_id}:{shape.name}:{'mp' if multi_pod else 'sp'}",
+        mesh=mesh, jitted=jitted, args=(state_abs, batch_abs),
+        meta={"arch": arch_id, "shape": shape.name, "multi_pod": multi_pod,
+              "M": m, "N": n, "R": r, "TP": spec.tp,
+              "per_client_batch": per_client, "t_client": topo.t_client,
+              "t_server": topo.t_server, "dtype": plan.param_dtype,
+              "grad_microbatches": micro,
+              "consensus_mode": consensus_mode,
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count()})
+
+
+# ---------------------------------------------------------------------------
+# serve shapes: prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _serve_params_abs(cfg: ArchConfig, dtype) -> Any:
+    return _abstract(lambda: tf.init_params(jax.random.key(0), cfg, dtype))
+
+
+def build_prefill_lowering(arch_id: str, shape: InputShape, *,
+                           multi_pod: bool = False,
+                           plan: Optional[DeploymentPlan] = None,
+                           remat: bool = True) -> LoweringBundle:
+    cfg = get_arch(arch_id)
+    plan = plan or plan_for(arch_id)
+    mesh = make_serve_mesh(multi_pod=multi_pod)
+    dtype = plan.serve_dtype()
+    data, tp = mesh.devices.shape
+    b_div = shape.global_batch % data == 0
+    heads_shardable = cfg.num_heads % tp == 0 or cfg.mamba is not None
+    act_sharding = None
+    moe_group_sharding = None
+    ssd_head_sharding = None
+    seq_par = (shape.seq_len % tp == 0 and heads_shardable
+               and cfg.mla is None)
+    if plan.serve_seq_parallel is not None:
+        seq_par = plan.serve_seq_parallel
+    if seq_par:
+        act_sharding = NamedSharding(
+            mesh, P("data" if b_div else None, "model", None))
+        moe_group_sharding = NamedSharding(
+            mesh, P(("data", "model") if b_div else "model", None, None))
+    elif b_div:
+        # keep at least the batch axis pinned — without it the chunked-
+        # attention scan state drifts to replicated and every chunk step
+        # re-gathers (smollm prefill measured 8.3 TB/device of gathers)
+        act_sharding = NamedSharding(mesh, P("data", None, None))
+        if cfg.moe is not None:
+            moe_group_sharding = NamedSharding(mesh, P("data", None, None))
+    if cfg.mamba is not None:
+        ssd_head_sharding = NamedSharding(
+            mesh, P("data" if b_div else None, None, "model", None))
+    attn_head_sharding = None
+    if cfg.num_heads % tp == 0:
+        attn_head_sharding = NamedSharding(
+            mesh, P("data" if b_div else None, None, "model", None))
+    if cfg.moe is None:
+        moe_groups = 1
+    elif cfg.mla is not None:
+        moe_groups = data if b_div else 1
+    else:
+        moe_groups = data * tp if b_div else tp
+    opts = tf.ApplyOptions(remat=remat, act_sharding=act_sharding,
+                           moe_groups=moe_groups,
+                           moe_group_sharding=moe_group_sharding,
+                           ssd_chunk=128 if cfg.mamba is not None else None,
+                           ssd_head_sharding=ssd_head_sharding,
+                           attn_head_sharding=attn_head_sharding)
+    params_abs = _serve_params_abs(cfg, dtype)
+    batch_abs = token_batch_specs(cfg, (shape.global_batch,), shape.seq_len)
+
+    param_specs = shd.serve_param_specs(params_abs, mesh,
+                                        fsdp=plan.serve_fsdp,
+                                        attn_tp=cfg.num_heads % tp == 0)
+    b_axis = "data" if b_div else None
+    batch_specs = jax.tree.map(lambda _: P(b_axis), batch_abs)
+
+    def prefill_step(params, batch):
+        return tf.prefill(params, cfg, batch, max_len=shape.seq_len,
+                          cache_dtype=jnp.bfloat16, opts=opts)
+
+    # pin the output KV cache shardings (batch over data, heads/latent over
+    # model) — otherwise the 59-layer latent cache materialises unsharded
+    cache_abs = jax.eval_shape(prefill_step, params_abs, batch_abs)[1]
+    cache_out_specs = shd.serve_cache_specs(cache_abs, mesh,
+                                            shape.global_batch,
+                                            attn_tp=cfg.num_heads % tp == 0)
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(shd.named(param_specs, mesh),
+                      shd.named(batch_specs, mesh)),
+        out_shardings=(None, shd.named(cache_out_specs, mesh)),
+    )
+    return LoweringBundle(
+        name=f"{arch_id}:{shape.name}:{'mp' if multi_pod else 'sp'}",
+        mesh=mesh, jitted=jitted, args=(params_abs, batch_abs),
+        meta={"arch": arch_id, "shape": shape.name, "multi_pod": multi_pod,
+              "batch": shape.global_batch, "seq": shape.seq_len,
+              "dtype": "bfloat16", "serve_fsdp": plan.serve_fsdp,
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count()})
+
+
+def build_decode_lowering(arch_id: str, shape: InputShape, *,
+                          multi_pod: bool = False,
+                          plan: Optional[DeploymentPlan] = None
+                          ) -> LoweringBundle:
+    cfg = get_arch(arch_id)
+    plan = plan or plan_for(arch_id)
+    mesh = make_serve_mesh(multi_pod=multi_pod)
+    dtype = plan.serve_dtype()
+    b = shape.global_batch
+    params_abs = _serve_params_abs(cfg, dtype)
+    cache_abs = _abstract(lambda: tf.init_cache(cfg, b, shape.seq_len,
+                                                jnp.bfloat16))
+    token_abs = _sds((b, 1), jnp.int32)
+
+    # decode keeps the hd-sharded K/V fallback even for non-divisible head
+    # counts: with a single query the per-step score all-reduce is ~16 MB
+    # per layer (vs prefill's 8 TB storm), while a replicated 32k cache
+    # costs ~40 GB/device (measured) — the trade flips between the shapes.
+    param_specs = shd.serve_param_specs(
+        params_abs, mesh, fsdp=plan.serve_fsdp, attn_tp=True)
+    cache_specs = shd.serve_cache_specs(cache_abs, mesh, b, attn_tp=True)
+    data = mesh.devices.shape[0]
+    tok_spec = P("data" if b % data == 0 else None, None)
+
+    def serve_step(params, token, cache):
+        return tf.decode_step(params, cfg, token, cache)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(shd.named(param_specs, mesh),
+                      NamedSharding(mesh, tok_spec),
+                      shd.named(cache_specs, mesh)),
+        out_shardings=(None, shd.named(cache_specs, mesh)),
+        donate_argnums=(2,),
+    )
+    return LoweringBundle(
+        name=f"{arch_id}:{shape.name}:{'mp' if multi_pod else 'sp'}",
+        mesh=mesh, jitted=jitted, args=(params_abs, token_abs, cache_abs),
+        meta={"arch": arch_id, "shape": shape.name, "multi_pod": multi_pod,
+              "batch": b, "cache_len": shape.seq_len,
+              "dtype": "bfloat16", "serve_fsdp": plan.serve_fsdp,
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count()})
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def supported_pairs() -> Tuple[Tuple[str, str], ...]:
+    """All (arch, shape) pairs this system runs (34: 10x3 + 4 long-context).
+
+    Skips are per DESIGN.md §4: long_500k only for archs with bounded or
+    shardable-at-500k decode state."""
+    from repro.configs import ARCH_IDS
+    pairs = []
+    for arch_id in ARCH_IDS:
+        cfg = get_arch(arch_id)
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+            pairs.append((arch_id, shape_name))
+        if cfg.supports_long_context:
+            pairs.append((arch_id, "long_500k"))
+    return tuple(pairs)
+
+
+def build_lowering(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                   **kw) -> LoweringBundle:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_lowering(arch_id, shape, multi_pod=multi_pod, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_lowering(arch_id, shape, multi_pod=multi_pod, **kw)
+    cfg = get_arch(arch_id)
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        raise ValueError(
+            f"{arch_id} skips long_500k: {cfg.long_context_skip_reason}")
+    return build_decode_lowering(arch_id, shape, multi_pod=multi_pod, **kw)

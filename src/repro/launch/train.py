@@ -1,0 +1,103 @@
+"""DFL trainer driver (runnable at CPU scale; the full-size path is the
+same code lowered by dryrun.py onto the production mesh).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --servers 2 --clients 2 --t-client 4 --t-server 5 --epochs 3
+
+Runs the paper's Algorithm 1 end to end: T_C local SGD steps per client on
+per-client synthetic LM shards, per-server aggregation, T_S gossip rounds,
+broadcast — logging loss / server disagreement / client drift (the Lemma 1
+and Lemma 3 quantities) every epoch, with checkpointing.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_arch, get_smoke
+from repro.core import DFLConfig, FLTopology, build_dfl_epoch_step, init_dfl_state
+from repro.data import DataConfig, FLDataPipeline
+from repro.models import transformer as tf
+from repro.optim import sgd
+
+
+def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
+          clients: int = 2, t_client: int = 4, t_server: int = 5,
+          epochs: int = 3, seq_len: int = 128, per_client_batch: int = 2,
+          gamma: float = 0.05, graph: str = "ring",
+          consensus_mode: str = "gossip",
+          ckpt_dir: Optional[str] = None, seed: int = 0,
+          log_every: int = 1, attn_impl: str = "reference") -> dict:
+    cfg = get_smoke(arch_id) if smoke else get_arch(arch_id)
+    topo = FLTopology(num_servers=servers, clients_per_server=clients,
+                      t_client=t_client, t_server=t_server, graph_kind=graph)
+    opts = tf.ApplyOptions(remat=False, attn_impl=attn_impl)
+    loss_fn = tf.make_loss_fn(cfg, opts)
+    optimizer = sgd(gamma)
+    dfl_cfg = DFLConfig(topology=topo, consensus_mode=consensus_mode)
+    step = jax.jit(build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer),
+                   donate_argnums=(0,))
+
+    params = tf.init_params(jax.random.key(seed), cfg)
+    state = init_dfl_state(dfl_cfg, params, optimizer, jax.random.key(seed + 1))
+    pipe = FLDataPipeline(topo, DataConfig(seq_len=seq_len,
+                                           per_client_batch=per_client_batch,
+                                           vocab_size=cfg.vocab_size,
+                                           seed=seed), arch=cfg)
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    history = {"loss": [], "disagreement": [], "drift": []}
+    t0 = time.time()
+    for epoch in range(epochs):
+        batches = pipe.epoch_batches(epoch)
+        state, metrics = step(state, batches)
+        loss = float(metrics.loss[-1].mean())
+        dis = float(metrics.server_disagreement)
+        drift = float(metrics.client_drift)
+        history["loss"].append(loss)
+        history["disagreement"].append(dis)
+        history["drift"].append(drift)
+        if epoch % log_every == 0:
+            print(f"epoch {epoch:4d}  loss={loss:.4f}  "
+                  f"server_disagreement={dis:.3e}  client_drift={drift:.3e}  "
+                  f"({time.time() - t0:.1f}s)")
+        if ckpt is not None:
+            ckpt.save(epoch, state.client_params,
+                      meta={"arch": cfg.name, "epoch": epoch})
+    return {"state": state, "history": history, "topology": topo, "cfg": cfg}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="smollm-360m")
+    p.add_argument("--smoke", action="store_true", default=True)
+    p.add_argument("--full", dest="smoke", action="store_false",
+                   help="full-size config (only sensible on a real pod)")
+    p.add_argument("--servers", type=int, default=2)
+    p.add_argument("--clients", type=int, default=2)
+    p.add_argument("--t-client", type=int, default=4)
+    p.add_argument("--t-server", type=int, default=5)
+    p.add_argument("--epochs", type=int, default=3)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--batch", type=int, default=2)
+    p.add_argument("--gamma", type=float, default=0.05)
+    p.add_argument("--graph", default="ring",
+                   choices=("ring", "complete", "star", "line", "erdos_renyi"))
+    p.add_argument("--consensus-mode", default="gossip",
+                   choices=("gossip", "collapsed", "chebyshev", "exact_mean",
+                            "none"))
+    p.add_argument("--ckpt-dir", default=None)
+    args = p.parse_args()
+    train(args.arch, smoke=args.smoke, servers=args.servers,
+          clients=args.clients, t_client=args.t_client,
+          t_server=args.t_server, epochs=args.epochs, seq_len=args.seq_len,
+          per_client_batch=args.batch, gamma=args.gamma, graph=args.graph,
+          consensus_mode=args.consensus_mode, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Mamba2 (state-space duality) block — pure-JAX chunked reference.
+
+TPU adaptation (DESIGN.md §2/§6): the CUDA selective-scan relies on
+warp-level shuffles; the SSD formulation instead decomposes the recurrence
+into *chunk-local quadratic attention-like matmuls* (MXU-friendly) plus a
+tiny inter-chunk state recurrence (lax.scan over chunks).  The Pallas kernel
+in ``repro/kernels/ssd_scan.py`` tiles exactly this structure; this module
+is the jnp oracle and the path used for CPU lowering.
+
+Recurrence implemented (per head h, state dim n, head dim p):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t'
+    y_t = C_t h_t + D * x_t
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.modules import _dense_init, rmsnorm_apply, rmsnorm_init
+
+N_GROUPS = 1  # B/C groups (mamba2 default n_groups=1 at these scales)
+
+
+def mamba_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    di = m.d_inner(d)
+    nh = m.num_heads(d)
+    conv_ch = di + 2 * N_GROUPS * m.d_state
+    ks = jax.random.split(key, 5)
+    return {
+        # order: [z (di), xBC (conv_ch), dt (nh)]
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * N_GROUPS * m.d_state + nh), dtype),
+        "conv_w": _dense_init(ks[1], (m.d_conv, conv_ch), dtype,
+                              scale=1.0 / math.sqrt(m.d_conv)),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)).astype(dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": _dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _split_proj(params, x, cfg: ArchConfig):
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    nh = m.num_heads(cfg.d_model)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N_GROUPS * m.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    return z, xbc, dt  # (b,s,di), (b,s,conv_ch), (b,s,nh) f32
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. xbc: (b, s, ch); w: (width, ch)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def _split_xbc(xbc, cfg: ArchConfig):
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    nh = m.num_heads(cfg.d_model)
+    xs, bs, cs = jnp.split(xbc, [di, di + N_GROUPS * m.d_state], axis=-1)
+    b, s = xs.shape[:2]
+    xs = xs.reshape(b, s, nh, m.head_dim)
+    bs = bs.reshape(b, s, N_GROUPS, m.d_state)
+    cs = cs.reshape(b, s, N_GROUPS, m.d_state)
+    return xs, bs, cs
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} a[..., k]
+    (=-inf for j > i).  a: (..., q)."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xs, bs, cs, dt, a_coef, chunk: int):
+    """Chunked SSD scan (jnp reference).
+
+    xs: (b,s,nh,hd) — inputs (pre-multiplied by nothing; dt applied here)
+    bs/cs: (b,s,g,ds); dt: (b,s,nh) f32; a_coef: (nh,) negative.
+    Returns y: (b,s,nh,hd), final state (b,nh,hd,ds).
+    """
+    bsz, s, nh, hd = xs.shape
+    ds = bs.shape[-1]
+    orig_s = s
+    if s % chunk:
+        # right-pad with dt=0 steps: decay=exp(0)=1 and dt*B*x=0, so padding
+        # is exact for both outputs (sliced off) and the final state.
+        pad = chunk - s % chunk
+        z = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xs, bs, cs, dt = z(xs), z(bs), z(cs), z(dt)
+        s = s + pad
+    nc = s // chunk
+    # group-broadcast B/C to heads (g=1)
+    bh = jnp.broadcast_to(bs[:, :, 0][:, :, None], (bsz, s, nh, ds))
+    ch = jnp.broadcast_to(cs[:, :, 0][:, :, None], (bsz, s, nh, ds))
+
+    def r(t, last):  # reshape to chunks
+        return t.reshape((bsz, nc, chunk) + last)
+
+    xc = r(xs, (nh, hd)).astype(jnp.float32)
+    bc = r(bh, (nh, ds)).astype(jnp.float32)
+    cc = r(ch, (nh, ds)).astype(jnp.float32)
+    dtc = r(dt, (nh,))
+    a = dtc * a_coef.astype(jnp.float32)            # (b,nc,q,nh) log-decay
+    a_t = jnp.moveaxis(a, -1, -2)                    # (b,nc,nh,q)
+    cum = jnp.cumsum(a_t, axis=-1)                   # (b,nc,nh,q)
+    total = cum[..., -1]                             # (b,nc,nh)
+
+    # ---- intra-chunk (quadratic, MXU) ----
+    l_mat = jnp.exp(segsum(a_t))                     # (b,nc,nh,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc) * l_mat
+    # weight by dt of the source step
+    scores = scores * jnp.moveaxis(dtc, -1, -2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores, xc)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(total[..., None] - cum)   # (b,nc,nh,q)
+    sts = jnp.einsum("bcqhn,bchq,bcqh,bcqhp->bchnp",
+                     bc, decay_to_end, dtc, xc)
+
+    # ---- inter-chunk recurrence over nc (sequential, tiny) ----
+    def step(h, inp):
+        st, tot = inp                                # (b,nh,ds,hd), (b,nh)
+        h_new = h * jnp.exp(tot)[..., None, None] + st
+        return h_new, h                              # emit state BEFORE chunk
+
+    init = jnp.zeros((bsz, nh, ds, hd), jnp.float32)
+    sts_t = jnp.moveaxis(sts, 1, 0)                  # (nc,b,nh,ds,hd)
+    tot_t = jnp.moveaxis(total, 1, 0)                # (nc,b,nh)
+    final, prev_states = jax.lax.scan(step, init, (sts_t, tot_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)    # (b,nc,nh,ds,hd)
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(cum)                          # (b,nc,nh,q)
+    y_inter = jnp.einsum("bcqhn,bchq,bchnp->bcqhp", cc, in_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, s, nh, hd)
+    return y[:, :orig_s], final
+
+
+def mamba_apply(params: Dict, x: jax.Array, cfg: ArchConfig,
+                impl: str = "reference",
+                chunk_override: Optional[int] = None,
+                head_sharding=None) -> jax.Array:
+    """Full-sequence forward (training / prefill).
+
+    ``chunk_override`` shrinks the intra-chunk quadratic block (the L matrix
+    is O(b*nh*s*chunk) — training lowerings pass 64); ``head_sharding``
+    constrains the per-head streams (b, s, nh, hd) so XLA shards the SSD
+    over heads (nh is a multiple of 16 for every assigned SSM arch)."""
+    m = cfg.mamba
+    chunk = chunk_override or m.chunk_size
+    z, xbc_raw, dt = _split_proj(params, x, cfg)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs, bs, cs = _split_xbc(xbc, cfg)
+    if head_sharding is not None:
+        xs = jax.lax.with_sharding_constraint(xs, head_sharding)
+    a_coef = -jnp.exp(params["a_log"].astype(jnp.float32))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd_scan(xs, bs, cs, dt, a_coef, chunk=chunk)
+    else:
+        y, _ = ssd_chunked(xs, bs, cs, dt, a_coef, chunk)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(x.shape[0], x.shape[1], -1)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm_apply(params["norm"], y.astype(x.dtype), cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"])
+
+
+def mamba_prefill(params: Dict, x: jax.Array, cfg: ArchConfig,
+                  conv_cache_dtype=jnp.bfloat16,
+                  chunk_override: Optional[int] = None,
+                  head_sharding=None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence forward that ALSO returns the decode cache — one SSD
+    scan for both (the naive prefill ran the scan twice: once for outputs,
+    once for the final state)."""
+    m = cfg.mamba
+    chunk = chunk_override or m.chunk_size
+    z, xbc_raw, dt = _split_proj(params, x, cfg)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs, bs, cs = _split_xbc(xbc, cfg)
+    if head_sharding is not None:
+        xs = jax.lax.with_sharding_constraint(xs, head_sharding)
+    a_coef = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, final = ssd_chunked(xs, bs, cs, dt, a_coef, chunk)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(x.shape[0], x.shape[1], -1)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm_apply(params["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    cache = {"conv": xbc_raw[:, -(m.d_conv - 1):].astype(conv_cache_dtype),
+             "ssm": final}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# incremental decode
+# ---------------------------------------------------------------------------
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    di = m.d_inner(d)
+    nh = m.num_heads(d)
+    conv_ch = di + 2 * N_GROUPS * m.d_state
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, m.d_state, m.head_dim), jnp.float32),
+    }
+
+
+def mamba_decode_step(params: Dict, x: jax.Array, cache: Dict,
+                      cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """x: (b, 1, d). O(1) per token — the reason this family runs long_500k."""
+    m = cfg.mamba
+    z, xbc_raw, dt = _split_proj(params, x, cfg)          # seq dim == 1
+    # conv over [cache, current]
+    hist = jnp.concatenate([cache["conv"],
+                            xbc_raw.astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", hist[:, -m.d_conv:], w) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None]                  # (b,1,ch)
+    xs, bs, cs = _split_xbc(xbc, cfg)
+    a_coef = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]                                        # (b,nh)
+    decay = jnp.exp(dt1 * a_coef)                         # (b,nh)
+    bx = jnp.einsum("bhn,bhp->bhnp",
+                    jnp.broadcast_to(bs[:, 0, 0][:, None], dt1.shape + (m.d_state,)),
+                    xs[:, 0].astype(jnp.float32) * dt1[..., None])
+    ssm = cache["ssm"] * decay[..., None, None] + bx
+    y = jnp.einsum("bhn,bhnp->bhp",
+                   jnp.broadcast_to(cs[:, 0, 0][:, None], dt1.shape + (m.d_state,)
+                                    ).astype(jnp.float32), ssm)
+    y = y + xs[:, 0].astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(x.shape[0], 1, -1)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm_apply(params["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    new_cache = {"conv": hist[:, 1:], "ssm": ssm}
+    return out, new_cache

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (Optimizer, adam, momentum, sgd,
+                                    clip_by_global_norm)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adam", "clip_by_global_norm",
+    "constant", "cosine_decay", "linear_warmup", "warmup_cosine",
+]

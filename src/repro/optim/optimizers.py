@@ -1,0 +1,129 @@
+"""Minimal pure-JAX optimizer library (no optax dependency).
+
+All update rules are *elementwise* over pytree leaves, so they compose
+transparently with the DFL client axes: a parameter leaf of shape
+``(M, N, *w)`` with matching optimizer state behaves as M*N independent
+optimizers — exactly the per-client local training of Alg. 1.
+
+The paper's local update (Eq. 3) is ``sgd(gamma)`` with a constant step
+size; the others are beyond-paper options (``faithful=False`` in the
+trainer config).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]                    # params -> state
+    update: Callable[[Any, Any, Any], tuple]      # (grads, state, params) -> (new_params, new_state)
+
+
+def _lr_at(lr: ScalarOrSchedule, count: jax.Array) -> jax.Array:
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class SGDState(NamedTuple):
+    count: jax.Array
+
+
+def sgd(lr: ScalarOrSchedule) -> Optimizer:
+    """Eq. (3): w <- w - gamma * grad."""
+
+    def init(params):
+        del params
+        return SGDState(jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        g = _lr_at(lr, state.count)
+
+        def leaf(p, dg):
+            # compute in the PARAM dtype: promoting to f32 would materialise
+            # two f32 copies of every leaf (convert + result) — bf16-pure
+            # SGD is the deployment contract for bf16 plans, f32 for f32.
+            return p - g.astype(p.dtype) * dg.astype(p.dtype)
+
+        new = jax.tree.map(leaf, params, grads)
+        return new, SGDState(state.count + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    count: jax.Array
+    velocity: Any
+
+
+def momentum(lr: ScalarOrSchedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return MomentumState(jnp.zeros((), jnp.int32),
+                             jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(grads, state, params):
+        g = _lr_at(lr, state.count)
+        vel = jax.tree.map(lambda v, dg: beta * v + dg.astype(jnp.float32),
+                           state.velocity, grads)
+        if nesterov:
+            step = jax.tree.map(lambda v, dg: beta * v + dg.astype(jnp.float32), vel, grads)
+        else:
+            step = vel
+        new = jax.tree.map(lambda p, s: (p - g * s).astype(p.dtype), params, step)
+        return new, MomentumState(state.count + 1, vel)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        g = _lr_at(lr, state.count)
+        mu = jax.tree.map(lambda m, dg: b1 * m + (1 - b1) * dg.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, dg: b2 * v + (1 - b2) * jnp.square(dg.astype(jnp.float32)),
+                          state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def leaf(p, m, v):
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p - g * step).astype(p.dtype)
+
+        new = jax.tree.map(leaf, params, mu, nu)
+        return new, AdamState(count, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(optimizer: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+
+    def update(grads, state, params):
+        sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                 for g in jax.tree.leaves(grads))
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        grads = jax.tree.map(lambda dg: dg * scale, grads)
+        return optimizer.update(grads, state, params)
+
+    return Optimizer(optimizer.init, update)

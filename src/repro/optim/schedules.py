@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(count):
+        frac = jnp.minimum(count.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return peak * frac
+    return fn
+
+
+def cosine_decay(init: float, decay_steps: int, alpha: float = 0.0):
+    def fn(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return init * ((1 - alpha) * cos + alpha)
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup_steps, 1)
+        frac = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,184 @@
+"""The paper's claims, numerically: Sec. IV repro, Theorem 1, Lemmas 1/3.
+
+The regression task is exactly Sec. IV: M=5 servers x N=5 clients, D=100
+points/client, w* = (5, 2).  The loss is 0.5*MSE (mu-strongly convex,
+L-smooth with known constants), so every theory quantity is computable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
+                        build_fedavg_epoch_step, build_local_only_epoch_step,
+                        init_dfl_state)
+from repro.data import RegressionSpec, make_regression_data
+from repro.optim import sgd
+
+
+def _setup(m=5, n=5, t_c=50, t_s=25, seed=0, heterogeneity=0.0,
+           graph="ring"):
+    topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                      t_server=t_s, graph_kind=graph)
+    spec = RegressionSpec(heterogeneity=heterogeneity)
+    data = make_regression_data(topo, spec, seed=seed)
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+
+    def loss_fn(w, batch, rng):
+        xx, yy = batch
+        return 0.5 * jnp.mean((xx @ w - yy) ** 2), {}
+
+    # full-batch gradient each local iteration (the paper's Eq. 3 setting)
+    bx = jnp.broadcast_to(x, (t_c,) + x.shape)
+    by = jnp.broadcast_to(y, (t_c,) + y.shape)
+    # optimal w*: global least squares over all 2500 points
+    xf = np.asarray(x).reshape(-1, x.shape[-1])
+    yf = np.asarray(y).reshape(-1)
+    w_star = np.linalg.lstsq(xf, yf, rcond=None)[0]
+    # smoothness constants of the per-client quadratic risks
+    lmax = max(float(np.linalg.eigvalsh(
+        np.asarray(x)[i, j].T @ np.asarray(x)[i, j] / x.shape[2]).max())
+        for i in range(m) for j in range(n))
+    mumin = min(float(np.linalg.eigvalsh(
+        np.asarray(x)[i, j].T @ np.asarray(x)[i, j] / x.shape[2]).min())
+        for i in range(m) for j in range(n))
+    return topo, loss_fn, (bx, by), w_star, mumin, lmax
+
+
+def _run(topo, loss_fn, batches, gamma, epochs, mode="gossip", w0=None):
+    cfg = DFLConfig(topology=topo, consensus_mode=mode)
+    opt = sgd(gamma)
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt))
+    state = init_dfl_state(cfg, w0 if w0 is not None else jnp.zeros((2,)),
+                           opt, jax.random.key(0))
+    metrics = None
+    for _ in range(epochs):
+        state, metrics = step(state, batches)
+    return state, metrics
+
+
+def test_paper_sec4_reproduction():
+    """5x5, w*=(5,2): servers reach consensus and land near w*."""
+    topo, loss_fn, batches, w_star, mu, lsm = _setup(t_c=50, t_s=25)
+    gamma = 0.4 / (lsm * topo.t_client)          # < 1/(L T_C) (Thm 1)
+    state, metrics = _run(topo, loss_fn, batches, gamma, epochs=60)
+    servers = state.client_params[:, 0]           # (M, 2), post-broadcast
+    # (a) consensus: max pairwise distance between server models is tiny
+    pair = jnp.linalg.norm(servers[:, None] - servers[None], axis=-1)
+    assert float(pair.max()) < 1e-3
+    # (b) accuracy: all servers within the Thm-1 epsilon of w*
+    eps = topo.epsilon_bound(gamma, mu, lsm, theta=60.0)
+    err = float(jnp.linalg.norm(servers - jnp.asarray(w_star), axis=-1).max())
+    assert err < max(eps, 0.05), (err, eps)
+    # near-perfect fit in absolute terms too
+    assert err < 0.2
+
+
+def test_lemma1_disagreement_bound():
+    """||w_p^i - wbar_p|| <= sigma^p ||W_0 - 1 wbar_0|| + sqrt(M) T_C th g s/(1-s)."""
+    topo, loss_fn, batches, w_star, mu, lsm = _setup(t_c=20, t_s=5,
+                                                     heterogeneity=1.0)
+    gamma = 0.4 / (lsm * topo.t_client)
+    theta = 80.0  # loose gradient bound for this data (checked below)
+    cfg = DFLConfig(topology=topo)
+    opt = sgd(gamma)
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt))
+    state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+    s = topo.sigma()
+    bound_tail = np.sqrt(topo.num_servers) * topo.t_client * theta * gamma \
+        * s / (1 - s)
+    for p in range(1, 8):
+        state, metrics = step(state, batches)
+        servers = state.client_params[:, 0]
+        wbar = servers.mean(0)
+        lhs = float(jnp.linalg.norm(servers - wbar, axis=-1).max())
+        # W_0 identical across servers => sigma^p term vanishes
+        assert lhs <= bound_tail + 1e-6, (p, lhs, bound_tail)
+
+
+def test_lemma3_client_drift_bound():
+    """||w_s^{ij} - w_p^i|| <= gamma T_C theta within every epoch."""
+    topo, loss_fn, batches, *_ , lsm = _setup(t_c=30, t_s=10)
+    gamma = 0.2 / (lsm * topo.t_client)
+    cfg = DFLConfig(topology=topo)
+    opt = sgd(gamma)
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt))
+    state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+    theta = 80.0
+    for _ in range(5):
+        state, metrics = step(state, batches)
+        assert float(metrics.client_drift) <= gamma * topo.t_client * theta
+
+
+def test_fedavg_baseline_beats_dfl_slightly():
+    """exact_mean (hierarchical/FedAvg idealization, sigma=0) must end at
+    least as close to w* as ring-gossip DFL — Thm 1's epsilon is monotone in
+    sigma_A."""
+    topo, loss_fn, batches, w_star, mu, lsm = _setup(t_c=25, t_s=2,
+                                                     heterogeneity=1.5)
+    gamma = 0.3 / (lsm * topo.t_client)
+    s_dfl, _ = _run(topo, loss_fn, batches, gamma, 40, mode="gossip")
+    s_fed, _ = _run(topo, loss_fn, batches, gamma, 40, mode="exact_mean")
+    err = lambda st: float(jnp.linalg.norm(
+        st.client_params[:, 0] - jnp.asarray(w_star), axis=-1).max())
+    assert err(s_fed) <= err(s_dfl) + 1e-3
+
+
+def test_local_only_ablation_disagrees():
+    """No consensus + heterogeneous clients -> servers drift apart."""
+    topo, loss_fn, batches, *_ , lsm = _setup(t_c=25, t_s=2,
+                                              heterogeneity=2.0)
+    gamma = 0.3 / (lsm * topo.t_client)
+    s_loc, m_loc = _run(topo, loss_fn, batches, gamma, 40, mode="none")
+    s_dfl, m_dfl = _run(topo, loss_fn, batches, gamma, 40, mode="gossip")
+    assert float(m_loc.server_disagreement) > 10 * float(
+        m_dfl.server_disagreement)
+
+
+@pytest.mark.parametrize("mode", ["collapsed", "chebyshev"])
+def test_beyond_paper_consensus_modes_converge(mode):
+    topo, loss_fn, batches, w_star, mu, lsm = _setup(t_c=25, t_s=25)
+    gamma = 0.4 / (lsm * topo.t_client)
+    state, metrics = _run(topo, loss_fn, batches, gamma, 150, mode=mode)
+    servers = state.client_params[:, 0]
+    err = float(jnp.linalg.norm(servers - jnp.asarray(w_star), axis=-1).max())
+    assert err < 0.2, err
+    assert float(metrics.server_disagreement) < 1e-2
+
+
+def test_collapsed_bitwise_matches_gossip():
+    """collapsed is the same operator as T_S gossip rounds (within fp32)."""
+    topo, loss_fn, batches, *_ = _setup(t_c=10, t_s=8)
+    g = 1e-4
+    s1, m1 = _run(topo, loss_fn, batches, g, 3, mode="gossip")
+    s2, m2 = _run(topo, loss_fn, batches, g, 3, mode="collapsed")
+    np.testing.assert_allclose(np.asarray(s1.client_params),
+                               np.asarray(s2.client_params),
+                               rtol=5e-5, atol=5e-6)
+
+
+def test_fault_tolerance_drop_server():
+    """Graph surgery mid-training: drop a server, keep converging."""
+    topo, loss_fn, batches, w_star, mu, lsm = _setup(m=5, t_c=20, t_s=10)
+    gamma = 0.3 / (lsm * topo.t_client)
+    state, _ = _run(topo, loss_fn, batches, gamma, 10)
+    new_topo, keep = topo.drop_server(2)
+    # re-shard: drop the failed server's row everywhere
+    new_params = jax.tree.map(lambda l: l[np.asarray(keep)],
+                              state.client_params)
+    cfg2 = DFLConfig(topology=new_topo)
+    opt = sgd(gamma)
+    step2 = jax.jit(build_dfl_epoch_step(cfg2, loss_fn, opt))
+    state2 = init_dfl_state(cfg2, jnp.zeros((2,)), opt, jax.random.key(1))
+    state2 = state2._replace(client_params=new_params)
+    nb = jax.tree.map(lambda b: b[:, np.asarray(keep)], batches)
+    for _ in range(80):
+        state2, m2 = step2(state2, nb)
+    servers = state2.client_params[:, 0]
+    # the survivors' optimum (dropping a server drops its clients' data)
+    xs = np.asarray(nb[0][0]).reshape(-1, 2)
+    ys = np.asarray(nb[1][0]).reshape(-1)
+    w_star2 = np.linalg.lstsq(xs, ys, rcond=None)[0]
+    err = float(jnp.linalg.norm(servers - jnp.asarray(w_star2), axis=-1).max())
+    assert err < 0.25, err
+    assert float(m2.server_disagreement) < 1e-2

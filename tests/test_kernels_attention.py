@@ -1,0 +1,90 @@
+"""Sweep tests: Pallas flash attention (interpret) vs the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import attention_ref
+
+KEY = jax.random.key(42)
+
+
+def _qkv(b, sq, sk, h, kvh, hd, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    return (jax.random.normal(k1, (b, sq, h, hd), dtype),
+            jax.random.normal(k2, (b, sk, kvh, hd), dtype),
+            jax.random.normal(k3, (b, sk, kvh, hd), dtype))
+
+
+def _check(q, k, v, tol=2e-5, **kw):
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64, **kw)
+    ref = attention_ref(q, k, v, causal=kw.get("causal", True),
+                        window=kw.get("window"), softcap=kw.get("softcap"))
+    np.testing.assert_allclose(np.asarray(out, jnp.float32),
+                               np.asarray(ref, jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 128, 128, 4, 4, 64),     # MHA
+    (2, 128, 128, 8, 2, 64),     # GQA 4:1
+    (1, 256, 256, 4, 1, 128),    # MQA, hd 128
+    (2, 64, 192, 4, 2, 64),      # decode-ish: sq < sk
+    (1, 100, 100, 3, 3, 32),     # ragged seq, odd heads
+    (1, 128, 130, 4, 4, 64),     # ragged keys
+])
+def test_flash_attention_shapes(shape):
+    b, sq, sk, h, kvh, hd = shape
+    _check(*_qkv(b, sq, sk, h, kvh, hd))
+
+
+@pytest.mark.parametrize("window", [16, 64, 4096])
+def test_flash_attention_sliding_window(window):
+    _check(*_qkv(1, 128, 128, 4, 2, 64), window=window)
+
+
+@pytest.mark.parametrize("softcap", [20.0, 50.0])
+def test_flash_attention_softcap(softcap):
+    _check(*_qkv(1, 128, 128, 4, 4, 64), softcap=softcap, tol=5e-5)
+
+
+def test_flash_attention_non_causal():
+    _check(*_qkv(1, 128, 128, 4, 4, 64), causal=False)
+
+
+def test_flash_attention_window_and_softcap():
+    _check(*_qkv(1, 128, 128, 4, 2, 64), window=48, softcap=30.0, tol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention_dtypes(dtype):
+    q, k, v = _qkv(1, 128, 128, 4, 2, 64, dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=True)
+    assert out.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, jnp.float32),
+                               np.asarray(ref, jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_decode_single_query():
+    """sq=1 against a long cache — the serve_step shape."""
+    q, k, v = _qkv(2, 1, 512, 8, 2, 64)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=128)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attend_matches_kernel():
+    """The pure-JAX chunked path and the Pallas kernel agree."""
+    from repro.models.modules import attend_chunked
+    q, k, v = _qkv(2, 128, 128, 4, 2, 64)
+    a = attend_chunked(q, k, v, causal=True, window=48, attn_softcap=25.0,
+                       chunk=64)
+    b = ops.flash_attention(q, k, v, causal=True, window=48, softcap=25.0,
+                            block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,78 @@
+"""Sweep tests: consensus_mix + rmsnorm kernels vs oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology as tp
+from repro.core.consensus import collapse_mixing
+from repro.kernels import consensus_mix_pytree, ops
+from repro.kernels.consensus_mix import consensus_mix_2d
+from repro.kernels.ref import consensus_mix_ref, rmsnorm_ref
+
+KEY = jax.random.key(11)
+
+
+@pytest.mark.parametrize("m,d,block", [
+    (2, 64, 32), (5, 1000, 128), (8, 4096, 2048), (16, 257, 64),
+])
+def test_consensus_mix_2d(m, d, block):
+    a = jnp.asarray(collapse_mixing(
+        tp.metropolis_weights(tp.ring_graph(m)), 7), jnp.float32)
+    w = jax.random.normal(KEY, (m, d))
+    out = consensus_mix_2d(a, w, block_d=block)
+    ref = consensus_mix_ref(a, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_consensus_mix_dtypes(dtype):
+    m = 4
+    a = jnp.asarray(collapse_mixing(
+        tp.metropolis_weights(tp.complete_graph(m)), 3), jnp.float32)
+    w = jax.random.normal(KEY, (m, 512)).astype(dtype)
+    out = consensus_mix_2d(a, w, block_d=128)
+    assert out.dtype == dtype
+    ref = consensus_mix_ref(a, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, jnp.float32),
+                               np.asarray(ref, jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_consensus_mix_pytree_roundtrip():
+    m = 5
+    a = jnp.asarray(collapse_mixing(
+        tp.metropolis_weights(tp.line_graph(m)), 9), jnp.float32)
+    tree = {"w": jax.random.normal(KEY, (m, 17, 3)),
+            "b": jax.random.normal(KEY, (m, 5)),
+            "nested": {"x": jax.random.normal(KEY, (m, 2, 2, 2))}}
+    out = consensus_mix_pytree(a, tree, block_d=16)
+    for lo, li in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        ref = consensus_mix_ref(a, li.reshape(m, -1)).reshape(li.shape)
+        np.testing.assert_allclose(np.asarray(lo), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("rows,d,block", [
+    (32, 128, 8), (100, 256, 32), (256, 960, 256), (7, 64, 8),
+])
+def test_rmsnorm_kernel(rows, d, block):
+    x = jax.random.normal(KEY, (rows, d))
+    scale = jax.random.normal(KEY, (d,))
+    out = ops.rmsnorm(x, scale, block_rows=block)
+    ref = rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rmsnorm_multidim_and_bf16():
+    x = jax.random.normal(KEY, (2, 3, 5, 128)).astype(jnp.bfloat16)
+    scale = jnp.ones((128,), jnp.bfloat16)
+    out = ops.rmsnorm(x, scale)
+    ref = rmsnorm_ref(x, scale)
+    assert out.shape == x.shape and out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, jnp.float32),
+                               np.asarray(ref, jnp.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,100 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import consensus as cns
+from repro.core import topology as tp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(m=st.integers(2, 12),
+       kind=st.sampled_from(["ring", "complete", "star", "line"]),
+       mixing=st.sampled_from(["metropolis", "uniform"]))
+@settings(**SETTINGS)
+def test_mixing_matrices_always_valid(m, kind, mixing):
+    adj = tp.build_graph(kind, m)
+    a = (tp.metropolis_weights(adj) if mixing == "metropolis"
+         else tp.uniform_weights(adj))
+    tp.check_mixing_matrix(a, adj)
+    # sigma < 1 for every connected graph (Assumption 1 -> contraction)
+    assert tp.sigma_a(a, 1) < 1.0
+
+
+@given(m=st.integers(2, 8), t_s=st.integers(1, 30))
+@settings(**SETTINGS)
+def test_sigma_monotone_in_t_s(m, t_s):
+    a = tp.metropolis_weights(tp.ring_graph(m))
+    assert tp.sigma_a(a, t_s + 1) <= tp.sigma_a(a, t_s) + 1e-12
+
+
+@given(m=st.integers(2, 8), t_s=st.integers(0, 12), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_gossip_preserves_mean_property(m, t_s, seed):
+    a = jnp.asarray(tp.metropolis_weights(tp.ring_graph(m)), jnp.float32)
+    w = jax.random.normal(jax.random.key(seed), (m, 13))
+    out = cns.gossip_scan(a, {"w": w}, t_s)["w"]
+    np.testing.assert_allclose(np.asarray(w.mean(0)),
+                               np.asarray(out.mean(0)), rtol=1e-4, atol=1e-4)
+
+
+@given(m=st.integers(2, 6), t_s=st.integers(1, 10), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_lemma1_contraction_property(m, t_s, seed):
+    """||A^t W - 1 wbar|| <= sigma_A(t) ||W - 1 wbar|| for random W."""
+    a_np = tp.metropolis_weights(tp.ring_graph(m))
+    a = jnp.asarray(a_np, jnp.float32)
+    w = jax.random.normal(jax.random.key(seed), (m, 7))
+    out = cns.gossip_scan(a, {"w": w}, t_s)["w"]
+
+    def dis(x):
+        return float(np.linalg.norm(np.asarray(x - x.mean(0))))
+
+    assert dis(out) <= tp.sigma_a(a_np, t_s) * dis(w) + 1e-5
+
+
+@given(m=st.integers(2, 6), n=st.integers(1, 4), t_c=st.integers(1, 8),
+       t_s=st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_epsilon_bound_positive_and_finite(m, n, t_c, t_s):
+    topo = tp.FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                         t_server=t_s)
+    gamma = 0.5 * topo.max_step_size(mu=1.0, lsmooth=4.0)
+    eps = topo.epsilon_bound(gamma, 1.0, 4.0, theta=10.0)
+    assert np.isfinite(eps) and eps > 0
+
+
+@given(seed=st.integers(0, 999), rows=st.integers(1, 64),
+       d=st.sampled_from([8, 64, 128]))
+@settings(**SETTINGS)
+def test_rmsnorm_kernel_property(seed, rows, d):
+    from repro.kernels import ops
+    from repro.kernels.ref import rmsnorm_ref
+    x = jax.random.normal(jax.random.key(seed), (rows, d))
+    s = jax.random.normal(jax.random.fold_in(jax.random.key(seed), 1), (d,))
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, s, block_rows=16)),
+                               np.asarray(rmsnorm_ref(x, s)),
+                               rtol=3e-5, atol=3e-5)
+
+
+@given(seed=st.integers(0, 99), sq=st.sampled_from([32, 64, 96]),
+       extra=st.integers(0, 70),
+       h=st.sampled_from([1, 2, 4]), group=st.sampled_from([1, 2]),
+       causal=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_flash_attention_property(seed, sq, extra, h, group, causal):
+    from repro.kernels import ops
+    from repro.kernels.ref import attention_ref
+    sk = sq + extra
+    kvh = h
+    hq = h * group
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, hq, 32))
+    k = jax.random.normal(ks[1], (1, sk, kvh, 32))
+    v = jax.random.normal(ks[2], (1, sk, kvh, 32))
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,92 @@
+"""Server graphs, mixing matrices (Eq. 6), sigma_A, Theorem-1 calculators."""
+import numpy as np
+import pytest
+
+from repro.core import topology as tp
+
+
+@pytest.mark.parametrize("kind", ["ring", "complete", "star", "line"])
+@pytest.mark.parametrize("m", [2, 3, 5, 8, 16])
+def test_graphs_connected_and_symmetric(kind, m):
+    adj = tp.build_graph(kind, m)
+    assert adj.shape == (m, m)
+    assert not adj.diagonal().any()
+    assert (adj == adj.T).all()
+    assert tp.is_connected(adj)
+
+
+def test_erdos_renyi_connected():
+    for seed in range(5):
+        adj = tp.erdos_renyi_graph(10, 0.3, seed=seed)
+        assert tp.is_connected(adj)
+
+
+def test_torus_matches_degree():
+    adj = tp.torus_2d_graph(4, 4)
+    assert (adj.sum(1) == 4).all()
+    assert tp.is_connected(adj)
+
+
+@pytest.mark.parametrize("mixing", ["metropolis", "uniform"])
+@pytest.mark.parametrize("kind", ["ring", "complete", "star", "line"])
+@pytest.mark.parametrize("m", [2, 4, 7])
+def test_mixing_matrix_satisfies_eq6(kind, mixing, m):
+    adj = tp.build_graph(kind, m)
+    a = (tp.metropolis_weights(adj) if mixing == "metropolis"
+         else tp.uniform_weights(adj))
+    tp.check_mixing_matrix(a, adj)       # doubly stochastic + support = G
+    # positive entries on the closed neighbourhood (alpha > 0 in Eq. 6)
+    for i in range(m):
+        assert a[i, i] > 0
+        for j in np.nonzero(adj[i])[0]:
+            assert a[i, j] > 0
+
+
+def test_sigma_a_contracts_with_t_s():
+    adj = tp.ring_graph(6)
+    a = tp.metropolis_weights(adj)
+    sigmas = [tp.sigma_a(a, t) for t in (1, 5, 25, 100)]
+    assert all(0 <= s < 1 for s in sigmas)
+    assert sigmas == sorted(sigmas, reverse=True)
+    assert sigmas[-1] < 1e-3              # long consensus ~ exact averaging
+
+
+def test_sigma_complete_graph_one_round():
+    # complete graph + metropolis: A = (1/M) 11' after one round -> sigma = 0
+    a = tp.metropolis_weights(tp.complete_graph(5))
+    assert tp.sigma_a(a, 1) < 1e-12
+
+
+def test_topology_validates():
+    with pytest.raises(ValueError):
+        tp.FLTopology(num_servers=0, clients_per_server=1, t_client=1,
+                      t_server=1)
+    with pytest.raises(ValueError):
+        tp.FLTopology(num_servers=2, clients_per_server=1, t_client=0,
+                      t_server=1)
+
+
+def test_max_step_size_and_epsilon():
+    topo = tp.FLTopology(num_servers=5, clients_per_server=5, t_client=250,
+                         t_server=25)
+    mu, lsm, theta = 1.0, 4.0, 10.0
+    gmax = topo.max_step_size(mu, lsm)
+    assert gmax == pytest.approx(1.0 / (4.0 * 250))
+    eps = topo.epsilon_bound(gmax / 10, mu, lsm, theta)
+    assert np.isfinite(eps) and eps > 0
+    # epsilon shrinks with smaller gamma (Thm 1: both terms ~ gamma)
+    eps_small = topo.epsilon_bound(gmax / 100, mu, lsm, theta)
+    assert eps_small < eps
+
+
+def test_drop_server_graph_surgery():
+    topo = tp.FLTopology(num_servers=5, clients_per_server=2, t_client=10,
+                         t_server=5, graph_kind="ring")
+    new, keep = topo.drop_server(2)
+    assert new.num_servers == 4
+    assert list(keep) == [0, 1, 3, 4]
+    # the induced ring minus a node is a line — surgery must keep it connected
+    assert tp.is_connected(new.adjacency())
+    with pytest.raises(ValueError):
+        tp.FLTopology(num_servers=1, clients_per_server=1, t_client=1,
+                      t_server=0).drop_server(0)
