@@ -1,0 +1,69 @@
+"""Dynamic federation on the paper's Sec.-IV regression task.
+
+    PYTHONPATH=src python examples/dynamic_federation.py
+
+Algorithm 1 assumes every one of the M*N clients trains every epoch over a
+fixed connected server graph.  This example runs the SAME compiled epoch
+step through four scenarios the static paper setting cannot express:
+
+  full          the paper baseline (all clients, static ring)
+  sampled       Bernoulli(0.5) client participation per epoch
+  faulty_links  every ring link fails with p=0.3 each epoch (repaired back
+                to connectivity), so gossip runs over a different degraded
+                graph A_p every epoch
+  churn         server 2 dies at epoch 10 and rejoins at epoch 25 with the
+                survivors' mean model (host-side graph surgery)
+
+and prints each scenario's convergence trace: max server error to w*,
+server disagreement (Lemma 1 LHS), participation rate, and the host-side
+product contraction sigma_prod = ||prod_p A_p^{T_S} - 11'/M||_2.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FLTopology, FaultEvent, FaultSchedule,
+                        ParticipationSchedule, TopologySchedule,
+                        init_dfl_state, make_engine)
+from repro.data import RegressionSpec, make_regression_task
+from repro.optim import sgd
+
+M, N, T_C, T_S, EPOCHS = 5, 5, 25, 10, 40
+
+
+def main() -> None:
+    topo = FLTopology(num_servers=M, clients_per_server=N, t_client=T_C,
+                      t_server=T_S, graph_kind="ring")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.5),
+                                seed=0)
+    loss_fn, batch_fn, w_star = (task["loss_fn"], task["batch_fn"],
+                                 task["w_star"])
+
+    gamma = 0.4 / (9.0 * T_C)
+    scenarios = {
+        "full": {},
+        "sampled": {"participation": ParticipationSchedule(
+            kind="bernoulli", rate=0.5, seed=7)},
+        "faulty_links": {"topology_schedule": TopologySchedule(
+            kind="edge_drop", drop_prob=0.3, seed=11)},
+        "churn": {"faults": FaultSchedule((
+            FaultEvent(10, "drop", 2), FaultEvent(25, "rejoin", 2)))},
+    }
+
+    print(f"{'scenario':<14}{'err_to_w*':>10}{'disagree':>11}"
+          f"{'part':>7}{'sigma_prod':>12}{'M_end':>7}")
+    for name, kw in scenarios.items():
+        engine = make_engine(topo, loss_fn, sgd(gamma), **kw)
+        state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(gamma),
+                               jax.random.key(0))
+        state, hist = engine.run(state, EPOCHS, batch_fn)
+        servers = np.asarray(state.client_params[:, 0])
+        err = float(np.linalg.norm(servers - w_star, axis=-1).max())
+        print(f"{name:<14}{err:>10.4f}{hist['disagreement'][-1]:>11.2e}"
+              f"{np.mean(hist['participation']):>7.2f}"
+              f"{hist['sigma_prod'][-1]:>12.2e}"
+              f"{int(hist['num_servers'][-1]):>7}")
+
+
+if __name__ == "__main__":
+    main()

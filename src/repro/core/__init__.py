@@ -1,15 +1,24 @@
-"""Core: the paper's DFL protocol (topology, consensus, epoch step)."""
+"""Core: the paper's DFL protocol (topology, consensus, epoch step) plus
+the dynamic-federation layer (participation/topology/fault schedules)."""
 from repro.core.topology import (FLTopology, build_graph, is_connected,
                                  metropolis_weights, uniform_weights,
-                                 check_mixing_matrix, sigma_a, spectral_gap)
-from repro.core.consensus import (mix_pytree, gossip_scan, gossip_collapsed,
-                                  gossip_chebyshev, collapse_mixing,
-                                  chebyshev_coefficients, make_ring_gossip)
+                                 check_mixing_matrix, sigma_a, sigma_product,
+                                 spectral_gap, drop_edges, random_edge_drop,
+                                 weaken_links)
+from repro.core.consensus import (mix_pytree, gossip_scan, gossip_scan_tv,
+                                  gossip_collapsed, gossip_chebyshev,
+                                  collapse_mixing, chebyshev_coefficients,
+                                  make_ring_gossip)
 from repro.core.dfl import (DFLConfig, DFLState, DFLMetrics,
                             build_dfl_epoch_step, build_fedavg_epoch_step,
                             build_local_only_epoch_step, init_dfl_state,
                             replicate_to_clients, server_mean,
+                            masked_server_mean, carry_forward,
                             broadcast_to_clients, global_mean,
                             disagreement_norm, max_client_drift)
+from repro.core.schedule import (EpochSchedule, ParticipationSchedule,
+                                 TopologySchedule, SigmaTracker,
+                                 FaultEvent, FaultSchedule)
+from repro.core.engine import DynamicFederationEngine, make_engine
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -33,6 +33,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:                                   # jax >= 0.6: public jax.shard_map
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:                 # jax 0.4.x: experimental location
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check=None):
+    """jax.shard_map across the 0.4.x -> 0.6 API move (the keyword for
+    replication checking was renamed check_rep -> check_vma)."""
+    kw = {} if check is None else {_CHECK_KW: check}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
 
 def _mix_leaf(a: jax.Array, leaf: jax.Array) -> jax.Array:
     """new[i] = sum_j a[i, j] * leaf[j, ...] over the leading server axis.
@@ -63,6 +78,27 @@ def gossip_scan(a: jax.Array, tree: Any, t_server: int) -> Any:
     def leaf_loop(leaf):
         return jax.lax.fori_loop(
             0, t_server, lambda _, w: _mix_leaf(a, w), leaf)
+
+    return jax.tree.map(leaf_loop, tree)
+
+
+def gossip_scan_tv(a_rounds: jax.Array, tree: Any) -> Any:
+    """Time-varying consensus: round t applies ``a_rounds[t]``.
+
+    ``a_rounds`` is a traced ``(T_S, M, M)`` stack of (doubly-stochastic)
+    mixing matrices — the fully general form of Eq. 5 where the server graph
+    may change BETWEEN ROUNDS (link failures mid-consensus, straggler
+    reweighting).  A stack of T_S identical matrices is exactly
+    ``gossip_scan`` (same per-round operator, same ordering); each round
+    preserves the server mean, and the product of the stack governs the
+    contraction (``topology.sigma_product`` with t_s=1 per entry)."""
+    if a_rounds.shape[0] == 0:
+        return tree
+
+    def leaf_loop(leaf):
+        return jax.lax.fori_loop(
+            0, a_rounds.shape[0],
+            lambda i, w: _mix_leaf(a_rounds[i], w), leaf)
 
     return jax.tree.map(leaf_loop, tree)
 
@@ -264,8 +300,8 @@ def make_gossip_shard_map(mesh, a_np: np.ndarray, t_server: int,
                 from_wire(out).astype(leaf.dtype).reshape(leaf.shape))
         return jax.tree.unflatten(treedef, new_leaves)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(leaf_specs,),
-                         out_specs=leaf_specs, check_vma=False)
+    return shard_map_compat(body, mesh, (leaf_specs,), leaf_specs,
+                            check=False)
 
 
 # ---------------------------------------------------------------------------
@@ -310,7 +346,6 @@ def make_ring_gossip(mesh: jax.sharding.Mesh, axis_name: str, t_server: int,
 
     def run(tree):
         specs = spec_for(tree)
-        return jax.shard_map(per_shard, mesh=mesh, in_specs=(specs,),
-                             out_specs=specs)(tree)
+        return shard_map_compat(per_shard, mesh, (specs,), specs)(tree)
 
     return run

@@ -24,6 +24,15 @@ the natural privacy-preserving choice — moments never leave the client).
     "exact_mean" idealised sigma_A=0 limit == hierarchical FL with a root
                  aggregator (the baseline the paper argues against)
     "none"       no inter-server communication (fully local ablation)
+
+Dynamic federation (``DFLConfig.dynamic=True``): the compiled epoch step
+additionally takes a ``schedule.EpochSchedule`` operand — a per-epoch
+``(M, N)`` participation mask and a per-epoch ``(M, M)`` mixing matrix —
+so partial participation and time-varying server graphs run through the
+SAME compiled program as the static paper setting (all-ones mask + the
+static ``A`` reproduces it exactly).  See ``masked_server_mean`` for the
+masked Eq. 4 semantics; server failure/rejoin changes array shapes and is
+host-side graph surgery (``engine.DynamicFederationEngine``).
 """
 from __future__ import annotations
 
@@ -84,6 +93,11 @@ class DFLConfig:
     # 1/n the activation footprint.  The per-device activation knob for the
     # 100B+ archs (DESIGN.md §2).
     grad_microbatches: int = 1
+    # Dynamic federation: the epoch step takes an extra EpochSchedule operand
+    # (participation mask + per-epoch mixing matrix) — see module docstring.
+    # chebyshev consensus needs host-side spectral data of the (now traced)
+    # mixing matrix and is rejected in this mode.
+    dynamic: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +126,48 @@ def broadcast_to_clients(server_tree: Any, n: int) -> Any:
 def global_mean(client_tree: Any) -> Any:
     """w̄ — mean over all servers and clients (analysis quantity)."""
     return jax.tree.map(lambda x: x.mean(axis=(0, 1)), client_tree)
+
+
+def masked_server_mean(client_tree: Any, mask: jax.Array) -> Any:
+    """Eq. 4 under partial participation:
+
+        w^i = (1/|S_p^i|) sum_{j in S_p^i} w^{ij}
+
+    where ``S_p^i = {j : mask[i, j] = 1}`` is server i's participating set
+    this epoch — a masked, weight-renormalised mean over the client axis.
+    Non-participants contribute nothing and carry their broadcast model
+    forward unchanged (enforced by ``carry_forward`` before this is called),
+    so a fully-idle server (|S_p^i| = 0) degenerates to the plain mean of N
+    identical broadcast copies == its previous model: the server simply
+    holds its state through the epoch.  An all-ones mask reproduces the
+    paper's Eq. 4 exactly."""
+    cnt = mask.sum(axis=1)                                    # (M,)
+    safe = jnp.maximum(cnt, 1.0)
+
+    def leaf(x):
+        mk = mask.reshape(mask.shape + (1,) * (x.ndim - 2)).astype(x.dtype)
+        s = (x * mk).sum(axis=1)
+        c = safe.reshape((-1,) + (1,) * (s.ndim - 1)).astype(x.dtype)
+        sel = (cnt > 0).reshape((-1,) + (1,) * (s.ndim - 1))
+        return jnp.where(sel, s / c, x.mean(axis=1))
+
+    return jax.tree.map(leaf, client_tree)
+
+
+def carry_forward(mask: jax.Array, new_tree: Any, old_tree: Any) -> Any:
+    """Per-client participation select: leaves with a leading ``(M, N)``
+    client grid take ``new`` where ``mask`` is set and ``old`` (the epoch's
+    broadcast model / pre-epoch optimizer state) where it is not; shared
+    leaves (e.g. the scalar step count) always advance."""
+    grid = mask.shape
+
+    def leaf(nl, ol):
+        if nl.ndim >= 2 and nl.shape[:2] == grid:
+            mk = mask.reshape(grid + (1,) * (nl.ndim - 2))
+            return jnp.where(mk > 0, nl, ol)
+        return nl
+
+    return jax.tree.map(leaf, new_tree, old_tree)
 
 
 def _tree_sq_norm(tree: Any) -> jax.Array:
@@ -224,19 +280,38 @@ def build_dfl_epoch_step(
             gnorm = jnp.zeros((), jnp.float32)
         return (params, opt_state, rng), (loss, gnorm)
 
-    def apply_consensus(server_tree):
+    if cfg.dynamic and cfg.consensus_mode == "chebyshev":
+        raise ValueError("chebyshev consensus needs host-side spectral data "
+                         "of the mixing matrix and cannot run with a traced "
+                         "per-epoch A; use 'gossip' or 'collapsed'")
+    if cfg.dynamic and cfg.consensus_override is not None:
+        raise ValueError("consensus_override closes over a fixed mixing "
+                         "matrix and would silently ignore the per-epoch "
+                         "A_p; dynamic mode requires a traced-A consensus "
+                         "mode ('gossip', 'gossip_blocked', 'collapsed')")
+
+    def apply_consensus(server_tree, a_p=None):
+        """a_p: optional traced per-epoch mixing matrix (dynamic mode);
+        defaults to the static topology's A."""
         if m == 1 or cfg.consensus_mode == "none" or topo.t_server == 0:
             return server_tree
         if cfg.consensus_override is not None:
             return cfg.consensus_override(server_tree)
+        a_op = a if a_p is None else a_p
         if cfg.consensus_mode == "gossip":
-            return cns.gossip_scan(a, server_tree, topo.t_server)
+            return cns.gossip_scan(a_op, server_tree, topo.t_server)
         if cfg.consensus_mode == "gossip_blocked":
             return cns.gossip_scan_blocked(
-                a, server_tree, topo.t_server,
+                a_op, server_tree, topo.t_server,
                 flat_sharding=cfg.gossip_flat_sharding)
         if cfg.consensus_mode == "collapsed":
-            return cns.gossip_collapsed(a_eff, server_tree)
+            if a_p is None:
+                return cns.gossip_collapsed(a_eff, server_tree)
+            # traced A_p: collapse inside the program (M x M, trivial)
+            eff = jax.lax.fori_loop(
+                0, topo.t_server, lambda _, p: a_p @ p,
+                jnp.eye(m, dtype=a_p.dtype))
+            return cns.gossip_collapsed(eff, server_tree)
         if cfg.consensus_mode == "chebyshev":
             return cns.gossip_chebyshev(a, server_tree, cheb_rounds, lam2)
         if cfg.consensus_mode == "exact_mean":
@@ -276,7 +351,47 @@ def build_dfl_epoch_step(
                              client_drift=drift, grad_norm=gnorms[-1])
         return new_state, metrics
 
-    return epoch_step
+    def epoch_step_dynamic(state: DFLState, batches: Any,
+                           sched: Any) -> Tuple[DFLState, DFLMetrics]:
+        """Dynamic variant: ``sched`` is an ``EpochSchedule(mask, mixing)``
+        of traced operands — one compiled program serves every participation
+        mask and mixing matrix of this shape."""
+        mask, a_p = sched
+        # ---- 1. local period (Eq. 3) — all clients traced; the mask is
+        # applied afterwards, which is mathematically identical (clients are
+        # independent during the local period) and keeps the scan dense.
+        carry = (state.client_params, state.opt_state, state.rng)
+        (params, opt_state, rng), (losses, gnorms) = jax.lax.scan(
+            local_step, carry, batches)
+        # non-participants carry their broadcast model (and optimizer state)
+        # through the epoch untouched
+        params = carry_forward(mask, params, state.client_params)
+        opt_state = carry_forward(mask, opt_state, state.opt_state)
+
+        if cfg.metrics == "full":
+            start_server = jax.tree.map(lambda x: x[:, 0],
+                                        state.client_params)
+            drift = max_client_drift(params, start_server)
+        else:
+            drift = jnp.zeros((), jnp.float32)
+
+        # ---- 2. masked aggregation (Eq. 4 over the participating set) ----
+        server = masked_server_mean(params, mask)
+
+        # ---- 3. consensus over this epoch's graph A_p (Eq. 5/7) ----
+        server = apply_consensus(server, a_p)
+        disagreement = (disagreement_norm(server) if cfg.metrics == "full"
+                        else jnp.zeros((), jnp.float32))
+
+        # ---- 4. broadcast (every client, participant or not) ----
+        params = broadcast_to_clients(server, n)
+
+        new_state = DFLState(params, opt_state, state.epoch + 1, rng)
+        metrics = DFLMetrics(loss=losses, server_disagreement=disagreement,
+                             client_drift=drift, grad_norm=gnorms[-1])
+        return new_state, metrics
+
+    return epoch_step_dynamic if cfg.dynamic else epoch_step
 
 
 def init_dfl_state(cfg: DFLConfig, params: Any, optimizer: Optimizer,

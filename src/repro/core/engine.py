@@ -1,0 +1,176 @@
+"""The dynamic-federation engine: the host-side loop that drives the
+jit-compiled dynamic epoch step through a scenario.
+
+Split of responsibilities:
+
+* anything that keeps array shapes fixed — partial participation, per-epoch
+  mixing matrices — is a TRACED operand (``schedule.EpochSchedule``) of the
+  one compiled ``dfl`` epoch step;
+* anything that changes shapes — a server dying or rejoining — is host-side
+  graph surgery between epochs: slice (or insert) the failed server's row
+  out of every ``(M, N, *w)`` leaf, rebuild the topology via
+  ``FLTopology.drop_server`` / ``rejoin_server``, and re-jit the step for
+  the new M (cached per M, so a drop/rejoin cycle compiles twice, total).
+
+A rejoining server re-enters with the mean of the survivors' models (the
+natural 'state transfer from peers' bootstrap) and its clients broadcast
+from it, exactly like an end-of-epoch broadcast.
+
+The engine reports per-epoch history including the participating-client
+loss, Lemma-1/3 diagnostics, and the host-side product contraction
+``sigma_prod`` (``schedule.SigmaTracker``) of the time-varying gossip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfl
+from repro.core.schedule import (EpochSchedule, FaultSchedule,
+                                 ParticipationSchedule, SigmaTracker,
+                                 TopologySchedule)
+from repro.core.topology import FLTopology
+from repro.optim import Optimizer
+
+# batch_fn(epoch, alive_original_server_ids) -> batch pytree with leaves
+# (T_C, M_alive, N, ...).  Data follows ORIGINAL server identity, so a
+# server that drops and rejoins gets its own clients' shards back.
+BatchFn = Callable[[int, Tuple[int, ...]], Any]
+
+
+@dataclasses.dataclass
+class DynamicFederationEngine:
+    """Drives DFL training under participation/topology/fault schedules."""
+
+    cfg: dfl.DFLConfig
+    loss_fn: dfl.LossFn
+    optimizer: Optimizer
+    participation: ParticipationSchedule = ParticipationSchedule()
+    topology_schedule: TopologySchedule = TopologySchedule()
+    faults: FaultSchedule = FaultSchedule()
+
+    def __post_init__(self):
+        if not self.cfg.dynamic:
+            self.cfg = dataclasses.replace(self.cfg, dynamic=True)
+        self.topo: FLTopology = self.cfg.topology
+        # original server ids still alive, in row order of the state arrays
+        self.alive: List[int] = list(range(self.topo.num_servers))
+        self._next_id: int = self.topo.num_servers
+        self._steps: Dict[int, Callable] = {}
+        self._tracker = SigmaTracker(self.topo.num_servers)
+
+    # -- compiled-step cache -------------------------------------------------
+    def _step(self) -> Callable:
+        m = self.topo.num_servers
+        if m not in self._steps:
+            cfg = dataclasses.replace(self.cfg, topology=self.topo)
+            self._steps[m] = jax.jit(dfl.build_dfl_epoch_step(
+                cfg, self.loss_fn, self.optimizer))
+        return self._steps[m]
+
+    # -- fault surgery -------------------------------------------------------
+    def _drop(self, state: dfl.DFLState, server: int) -> dfl.DFLState:
+        """Remove ORIGINAL server id ``server`` from the federation."""
+        if server not in self.alive:
+            raise ValueError(f"server {server} is not alive")
+        pos = self.alive.index(server)
+        self.topo, keep = self.topo.drop_server(pos)
+        self.alive.pop(pos)
+        keep = np.asarray(keep)
+
+        def leaf(x):
+            if x.ndim >= 1 and x.shape[0] == keep.size + 1:
+                return x[keep]
+            return x
+        state = dfl.DFLState(
+            jax.tree.map(leaf, state.client_params),
+            jax.tree.map(leaf, state.opt_state),
+            state.epoch, state.rng)
+        self._tracker = SigmaTracker(self.topo.num_servers)
+        return state
+
+    def _rejoin(self, state: dfl.DFLState, server: Optional[int]) -> dfl.DFLState:
+        """A server re-enters with the survivor-mean model (fresh id when
+        ``server`` is None or unused)."""
+        if server is None:
+            server = self._next_id
+        if server in self.alive:
+            raise ValueError(f"server {server} is already alive")
+        self.topo, idx = self.topo.rejoin_server()
+        self.alive.append(server)
+        self._next_id = max(self._next_id, server + 1)
+
+        def leaf(x):
+            if x.ndim >= 1 and x.shape[0] == idx:
+                new_row = x.mean(axis=0, keepdims=True).astype(x.dtype)
+                return jnp.concatenate([x, new_row], axis=0)
+            return x
+        state = dfl.DFLState(
+            jax.tree.map(leaf, state.client_params),
+            jax.tree.map(leaf, state.opt_state),
+            state.epoch, state.rng)
+        self._tracker = SigmaTracker(self.topo.num_servers)
+        return state
+
+    def apply_faults(self, state: dfl.DFLState, epoch: int) -> dfl.DFLState:
+        for ev in self.faults.at(epoch):
+            if ev.kind == "drop":
+                state = self._drop(state, ev.server)
+            else:
+                state = self._rejoin(state, ev.server)
+        return state
+
+    # -- the loop ------------------------------------------------------------
+    def run_epoch(self, state: dfl.DFLState, epoch: int,
+                  batch_fn: BatchFn) -> Tuple[dfl.DFLState, Dict[str, float]]:
+        state = self.apply_faults(state, epoch)
+        m, n = self.topo.num_servers, self.topo.clients_per_server
+        mask_np = self.participation.mask(epoch, m, n)
+        a_np = self.topology_schedule.mixing(self.topo, epoch)
+        sigma_prod = self._tracker.update(a_np, self.topo.t_server)
+        batches = batch_fn(epoch, tuple(self.alive))
+        sched = EpochSchedule(jnp.asarray(mask_np, jnp.float32),
+                              jnp.asarray(a_np, jnp.float32))
+        state, metrics = self._step()(state, batches, sched)
+        # participant-weighted loss of the last local iteration
+        last = np.asarray(metrics.loss[-1], np.float32)
+        w = mask_np if mask_np.sum() else np.ones_like(mask_np)
+        record = {
+            "loss": float((last * w).sum() / w.sum()),
+            "disagreement": float(metrics.server_disagreement),
+            "drift": float(metrics.client_drift),
+            "participation": float(mask_np.mean()),
+            "num_servers": float(m),
+            "sigma_prod": sigma_prod,
+        }
+        return state, record
+
+    def run(self, state: dfl.DFLState, epochs: int,
+            batch_fn: BatchFn) -> Tuple[dfl.DFLState, Dict[str, List[float]]]:
+        history: Dict[str, List[float]] = {}
+        for epoch in range(epochs):
+            state, rec = self.run_epoch(state, epoch, batch_fn)
+            for k, v in rec.items():
+                history.setdefault(k, []).append(v)
+        return state, history
+
+
+def make_engine(topology: FLTopology, loss_fn: dfl.LossFn,
+                optimizer: Optimizer, *,
+                consensus_mode: str = "gossip",
+                participation: Optional[ParticipationSchedule] = None,
+                topology_schedule: Optional[TopologySchedule] = None,
+                faults: Optional[FaultSchedule] = None,
+                **cfg_kw) -> DynamicFederationEngine:
+    """Convenience constructor mirroring ``DFLConfig`` defaults."""
+    cfg = dfl.DFLConfig(topology=topology, consensus_mode=consensus_mode,
+                        dynamic=True, **cfg_kw)
+    return DynamicFederationEngine(
+        cfg, loss_fn, optimizer,
+        participation=participation or ParticipationSchedule(),
+        topology_schedule=topology_schedule or TopologySchedule(),
+        faults=faults or FaultSchedule())

@@ -1,0 +1,248 @@
+"""Dynamic-federation schedules: who participates, over which graph, and
+which servers fail when.
+
+The paper's Algorithm 1 is *static*: all M·N clients train every epoch over
+one fixed connected server graph.  Its headline claims — scalability and
+fault-tolerance — only become testable scenarios once participation and
+topology can change mid-run.  This module provides the host-side scenario
+generators; `dfl.build_dfl_epoch_step(dynamic=True)` consumes their output
+as traced operands so ONE compiled epoch step covers every scenario of a
+given shape:
+
+* ``ParticipationSchedule`` — a per-epoch ``(M, N)`` 0/1 mask.  Eq. 4
+  becomes a masked, weight-renormalised mean (see ``dfl.masked_server_mean``)
+  and non-participants carry their broadcast model forward unchanged.
+* ``TopologySchedule``    — a per-epoch mixing matrix ``A_p`` (edge
+  drop/add, straggler-weakened links), always doubly stochastic, fed as a
+  traced operand to gossip.  ``SigmaTracker`` accumulates the host-side
+  product contraction ``||prod_p A_p^{T_S} - 11'/M||_2`` (Lemma 1's sigma_A
+  generalised to time-varying graphs).
+* ``FaultSchedule``       — scheduled server failure/rejoin events, executed
+  between epochs via ``FLTopology.drop_server`` / ``rejoin_server`` graph
+  surgery (shapes change, so these live on the host; see ``engine.py``).
+
+All sampling is deterministic in ``(seed, epoch)`` so runs are reproducible
+and a schedule can be replayed or sliced without storing mask traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core import topology as tp
+from repro.core.topology import FLTopology
+
+
+class EpochSchedule(NamedTuple):
+    """The traced per-epoch operands of a dynamic epoch step.
+
+    ``mask``:   (M, N) float32 0/1 participation mask.
+    ``mixing``: (M, M) float32 doubly-stochastic mixing matrix A_p.
+    """
+
+    mask: np.ndarray
+    mixing: np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# participation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationSchedule:
+    """Per-epoch client participation masks.
+
+    kinds:
+      ``full``        every client every epoch (the paper's setting).
+      ``bernoulli``   each client participates independently w.p. ``rate``.
+      ``fixed_k``     exactly ``k`` uniformly-sampled clients per server.
+      ``round_robin`` deterministic rotation of ``k`` clients per server —
+                      the scheduling-policy baseline of Abdelghany et al.
+
+    ``min_per_server`` forces at least that many participants per server
+    (sampled uniformly from the idle ones) so the masked Eq. 4 mean stays
+    well-defined; set it to 0 to allow fully-idle servers, which then simply
+    carry their model through the epoch.
+    """
+
+    kind: str = "full"
+    rate: float = 1.0
+    k: Optional[int] = None
+    min_per_server: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("full", "bernoulli", "fixed_k", "round_robin"):
+            raise ValueError(f"unknown participation kind {self.kind!r}")
+        if self.kind == "bernoulli" and not 0.0 <= self.rate <= 1.0:
+            raise ValueError("rate must be in [0, 1]")
+        if self.kind in ("fixed_k", "round_robin") and not self.k:
+            raise ValueError(f"kind={self.kind!r} needs k >= 1")
+
+    def mask(self, epoch: int, m: int, n: int) -> np.ndarray:
+        """(M, N) float32 0/1 mask for ``epoch`` — deterministic in
+        (seed, epoch), independent of call order."""
+        if self.kind == "full":
+            return np.ones((m, n), np.float32)
+        rng = np.random.default_rng((self.seed, epoch))
+        if self.kind == "bernoulli":
+            mask = (rng.random((m, n)) < self.rate)
+        elif self.kind == "fixed_k":
+            k = min(self.k, n)
+            mask = np.zeros((m, n), bool)
+            for i in range(m):
+                mask[i, rng.choice(n, size=k, replace=False)] = True
+        else:  # round_robin
+            k = min(self.k, n)
+            cols = (epoch * k + np.arange(k)) % n
+            mask = np.zeros((m, n), bool)
+            mask[:, cols] = True
+        need = min(self.min_per_server, n)
+        for i in range(m):
+            short = need - int(mask[i].sum())
+            if short > 0:
+                idle = np.nonzero(~mask[i])[0]
+                mask[i, rng.choice(idle, size=short, replace=False)] = True
+        return mask.astype(np.float32)
+
+    def expected_rate(self, n: int) -> float:
+        """Mean fraction of participating clients (for reporting)."""
+        if self.kind == "full":
+            return 1.0
+        if self.kind == "bernoulli":
+            return max(self.rate, self.min_per_server / n)
+        return min(self.k, n) / n
+
+
+# ---------------------------------------------------------------------------
+# time-varying graphs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """Per-epoch mixing matrices A_p over a degrading server network.
+
+    kinds:
+      ``static``    A_p = A for all p (the paper; bitwise-reproduces the
+                    fixed-graph run).
+      ``edge_drop`` each epoch, every edge of the base graph fails
+                    independently w.p. ``drop_prob`` (repaired back to
+                    connectivity when ``ensure_connected``).
+      ``straggler`` each epoch, ``n_weak`` uniformly-chosen links carry only
+                    ``(1 - weaken)`` of their weight (the rest returns to the
+                    endpoint self-loops) — slow links, not dead ones.
+
+    Every emitted A_p is symmetric doubly stochastic (Eq. 6 without the
+    fixed-support clause), so each epoch's gossip still preserves the server
+    mean; contraction over a run is tracked by ``SigmaTracker``.
+    """
+
+    kind: str = "static"
+    drop_prob: float = 0.0
+    weaken: float = 0.0
+    n_weak: int = 1
+    ensure_connected: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("static", "edge_drop", "straggler"):
+            raise ValueError(f"unknown topology schedule kind {self.kind!r}")
+
+    def mixing(self, topo: FLTopology, epoch: int) -> np.ndarray:
+        """float64 (M, M) mixing matrix for ``epoch`` (full precision so
+        ``SigmaTracker`` products stay meaningful; the engine casts to f32
+        only at the jit boundary)."""
+        if topo.num_servers == 1:
+            return np.ones((1, 1))
+        if self.kind == "static":
+            return topo.mixing_matrix()
+        rng = np.random.default_rng((self.seed, epoch))
+        if self.kind == "edge_drop":
+            adj = tp.random_edge_drop(topo.adjacency(), self.drop_prob, rng,
+                                      ensure_connected=self.ensure_connected)
+            a = (tp.metropolis_weights(adj) if topo.mixing == "metropolis"
+                 else tp.uniform_weights(adj))
+            tp.check_mixing_matrix(a, adj)
+            return a
+        # straggler: weaken n_weak random links of the base matrix
+        a = topo.mixing_matrix()
+        iu, ju = np.nonzero(np.triu(topo.adjacency(), 1))
+        if iu.size:
+            pick = rng.choice(iu.size, size=min(self.n_weak, iu.size),
+                              replace=False)
+            a = tp.weaken_links(a, list(zip(iu[pick], ju[pick])), self.weaken)
+        return a
+
+
+class SigmaTracker:
+    """Host-side product-contraction tracking for time-varying gossip.
+
+    Accumulates P <- A_p^{T_S} P across epochs; ``sigma()`` is
+    ``||P - 11'/M||_2`` — the factor by which initial server disagreement
+    has provably contracted so far (Lemma 1 with a matrix product in place
+    of a power).  Reset on topology surgery (M changes)."""
+
+    def __init__(self, m: int):
+        self.m = m
+        self.prod = np.eye(m)
+
+    def update(self, a: np.ndarray, t_server: int) -> float:
+        self.prod = (np.linalg.matrix_power(np.asarray(a, np.float64),
+                                            t_server) @ self.prod)
+        return self.sigma()
+
+    def sigma(self) -> float:
+        return tp.consensus_deviation(self.prod)
+
+
+# ---------------------------------------------------------------------------
+# fault schedules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: at the START of ``epoch``, ``server`` (an
+    ORIGINAL server index, stable across surgeries) drops out or rejoins."""
+
+    epoch: int
+    kind: str          # "drop" | "rejoin"
+    server: int
+
+    def __post_init__(self):
+        if self.kind not in ("drop", "rejoin"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.epoch < 0 or self.server < 0:
+            raise ValueError("epoch and server must be non-negative")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    events: Tuple[FaultEvent, ...] = ()
+
+    @staticmethod
+    def parse(spec: str) -> "FaultSchedule":
+        """Parse ``"drop:EPOCH:SERVER,rejoin:EPOCH:SERVER,..."`` (the CLI
+        surface of ``launch/train.py``)."""
+        events = []
+        for part in filter(None, (s.strip() for s in spec.split(","))):
+            fields = part.split(":")
+            if len(fields) != 3 or not fields[1].isdigit() \
+                    or not fields[2].isdigit():
+                raise ValueError(
+                    f"bad fault spec {part!r}: expected "
+                    f"'drop:EPOCH:SERVER' or 'rejoin:EPOCH:SERVER'")
+            kind, epoch, server = fields
+            events.append(FaultEvent(int(epoch), kind, int(server)))
+        return FaultSchedule(tuple(events))
+
+    def at(self, epoch: int) -> Tuple[FaultEvent, ...]:
+        return tuple(e for e in self.events if e.epoch == epoch)
+
+    @property
+    def last_epoch(self) -> int:
+        return max((e.epoch for e in self.events), default=-1)

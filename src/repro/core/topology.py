@@ -97,7 +97,15 @@ def build_graph(kind: str, m: int, **kw) -> np.ndarray:
     if kind == "erdos_renyi":
         return erdos_renyi_graph(m, kw.get("p", 0.5), kw.get("seed", 0))
     if kind == "torus":
-        rows = kw.get("rows") or int(np.sqrt(m))
+        rows = kw.get("rows")
+        if rows is not None:
+            if m % rows:
+                raise ValueError(f"torus rows={rows} does not divide M={m}")
+        else:
+            # largest divisor <= sqrt(M), so the node count is always M even
+            # after graph surgery changes M (rows=1 degenerates to a ring —
+            # the natural torus of a prime server count)
+            rows = max(r for r in range(1, int(np.sqrt(m)) + 1) if m % r == 0)
         return torus_2d_graph(rows, m // rows)
     return GRAPH_BUILDERS[kind](m)
 
@@ -169,12 +177,89 @@ def check_mixing_matrix(a: np.ndarray, adj: Optional[np.ndarray] = None,
             raise ValueError("positive weight on a non-edge")
 
 
+def consensus_deviation(p: np.ndarray) -> float:
+    """||P - (1/M) 11'||_2: how far a (product of) mixing matrices is from
+    exact averaging — the common kernel of sigma_a / sigma_product /
+    schedule.SigmaTracker."""
+    m = p.shape[0]
+    return float(np.linalg.norm(p - np.ones((m, m)) / m, ord=2))
+
+
 def sigma_a(a: np.ndarray, t_s: int) -> float:
     """sigma_A = ||A^{T_S} - (1/M) 11'||_2  (spectral norm) — the consensus
     contraction factor of Lemma 1."""
-    m = a.shape[0]
-    at = np.linalg.matrix_power(a, t_s)
-    return float(np.linalg.norm(at - np.ones((m, m)) / m, ord=2))
+    return consensus_deviation(np.linalg.matrix_power(a, t_s))
+
+
+def sigma_product(a_list: Sequence[np.ndarray], t_s: int) -> float:
+    """Contraction of a time-varying consensus run: with mixing matrix A_p in
+    epoch p applied for T_S rounds each, disagreement contracts by
+
+        || prod_p A_p^{T_S} - (1/M) 11' ||_2
+
+    (each A_p is doubly stochastic, so the product fixes the mean and the
+    deviation subspace contracts multiplicatively).  The per-epoch sigma_A of
+    Lemma 1 is the single-matrix special case."""
+    if not len(a_list):
+        raise ValueError("need at least one mixing matrix")
+    prod = np.eye(a_list[0].shape[0])
+    for a in a_list:
+        prod = np.linalg.matrix_power(np.asarray(a, np.float64), t_s) @ prod
+    return consensus_deviation(prod)
+
+
+def drop_edges(adj: np.ndarray, edges: Sequence[Tuple[int, int]]) -> np.ndarray:
+    """Remove undirected edges from an adjacency (no-op on non-edges)."""
+    out = adj.copy()
+    for i, j in edges:
+        out[i, j] = out[j, i] = False
+    return out
+
+
+def random_edge_drop(adj: np.ndarray, drop_prob: float,
+                     rng: np.random.Generator,
+                     ensure_connected: bool = True) -> np.ndarray:
+    """Per-epoch link failures: drop each edge independently with probability
+    ``drop_prob``.  With ``ensure_connected`` the dropped graph is repaired by
+    re-adding removed edges (in random order) until connected again — the
+    'degraded but jointly connected' regime where Assumption 1 still holds
+    per epoch; without it the graph may transiently disconnect and only the
+    *product* contraction (``sigma_product``) is meaningful."""
+    m = adj.shape[0]
+    iu, ju = np.nonzero(np.triu(adj, 1))
+    keep = rng.random(iu.size) >= drop_prob
+    out = np.zeros_like(adj)
+    out[iu[keep], ju[keep]] = True
+    out |= out.T
+    if ensure_connected and m > 1 and not is_connected(out):
+        dropped = list(np.nonzero(~keep)[0])
+        rng.shuffle(dropped)
+        for e in dropped:
+            out[iu[e], ju[e]] = out[ju[e], iu[e]] = True
+            if is_connected(out):
+                break
+    return out
+
+
+def weaken_links(a: np.ndarray, edges: Sequence[Tuple[int, int]],
+                 factor: float) -> np.ndarray:
+    """Straggler-degraded mixing: scale the weight of each listed edge by
+    ``(1 - factor)``, returning the removed mass to the two endpoint
+    self-loops.  Symmetry and double stochasticity (Eq. 6) are preserved, so
+    the result is still a valid — just slower-contracting — consensus
+    operator."""
+    if not 0.0 <= factor <= 1.0:
+        raise ValueError("weaken factor must be in [0, 1]")
+    out = np.asarray(a, np.float64).copy()
+    for i, j in edges:
+        if i == j:
+            raise ValueError("cannot weaken a self-loop")
+        delta = factor * out[i, j]
+        out[i, j] -= delta
+        out[j, i] -= delta
+        out[i, i] += delta
+        out[j, j] += delta
+    return out
 
 
 def spectral_gap(a: np.ndarray) -> float:
@@ -207,6 +292,9 @@ class FLTopology:
         if self.t_client < 1 or self.t_server < 0:
             raise ValueError("T_C >= 1, T_S >= 0")
         adj = self.adjacency()
+        if adj.shape[0] != self.num_servers:
+            raise ValueError(f"graph family {self.graph_kind!r} built "
+                             f"{adj.shape[0]} nodes for M={self.num_servers}")
         if self.num_servers > 1 and not is_connected(adj):
             raise ValueError("Assumption 1 violated: server graph must be connected")
 
@@ -269,3 +357,10 @@ class FLTopology:
         kind = self.graph_kind if is_connected(sub) else "ring"
         new = dataclasses.replace(self, num_servers=m - 1, graph_kind=kind)
         return new, keep
+
+    def rejoin_server(self) -> Tuple["FLTopology", int]:
+        """Inverse surgery: a (recovered) server re-enters the federation.
+        The graph family is rebuilt at M+1 nodes; the newcomer takes the last
+        index.  Returns (new topology, insert index)."""
+        new = dataclasses.replace(self, num_servers=self.num_servers + 1)
+        return new, self.num_servers

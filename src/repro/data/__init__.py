@@ -1,6 +1,6 @@
 from repro.data.pipeline import (DataConfig, FLDataPipeline,
-                                 make_regression_data, RegressionSpec,
-                                 synthetic_lm_batch)
+                                 make_regression_data, make_regression_task,
+                                 RegressionSpec, synthetic_lm_batch)
 
 __all__ = ["DataConfig", "FLDataPipeline", "make_regression_data",
-           "RegressionSpec", "synthetic_lm_batch"]
+           "make_regression_task", "RegressionSpec", "synthetic_lm_batch"]

@@ -59,6 +59,40 @@ def make_regression_data(topo: FLTopology, spec: RegressionSpec,
     return {"x": feats.astype(np.float32), "y": y.astype(np.float32)}
 
 
+def make_regression_task(topo: FLTopology,
+                         spec: Optional[RegressionSpec] = None,
+                         seed: int = 0) -> Dict[str, object]:
+    """The full Sec.-IV harness in one call (shared by tests, benchmarks and
+    examples): the 0.5*MSE loss, full-batch per-iteration batches of shape
+    ``(T_C, M, N, D, d)``, the global least-squares ``w_star``, and a
+    ``batch_fn(epoch, alive_server_ids)`` ready for the dynamic-federation
+    engine (slices rows by ORIGINAL server identity)."""
+    spec = spec or RegressionSpec()
+    data = make_regression_data(topo, spec, seed=seed)
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+
+    def loss_fn(w, batch, rng):
+        xx, yy = batch
+        return 0.5 * jnp.mean((xx @ w - yy) ** 2), {}
+
+    bx = jnp.broadcast_to(x, (topo.t_client,) + x.shape)
+    by = jnp.broadcast_to(y, (topo.t_client,) + y.shape)
+    w_star = np.linalg.lstsq(np.asarray(x).reshape(-1, x.shape[-1]),
+                             np.asarray(y).reshape(-1), rcond=None)[0]
+
+    def batch_fn(epoch, alive):
+        ids = np.asarray(alive)
+        # validate on the host: jax gather would silently CLAMP a bad id to
+        # the last row, feeding a duplicate of another server's shard
+        if ids.size and (ids.min() < 0 or ids.max() >= topo.num_servers):
+            raise ValueError(f"server ids {alive} out of range for "
+                             f"M={topo.num_servers}")
+        return bx[:, ids], by[:, ids]
+
+    return {"loss_fn": loss_fn, "batches": (bx, by), "batch_fn": batch_fn,
+            "w_star": w_star, "x": x, "y": y}
+
+
 # ---------------------------------------------------------------------------
 # synthetic LM token streams
 # ---------------------------------------------------------------------------
@@ -102,8 +136,16 @@ class FLDataPipeline:
         self.arch = arch
         self._epoch = 0
 
-    def epoch_batches(self, epoch: Optional[int] = None) -> Dict[str, jax.Array]:
-        """Batch pytree with leaves (T_C, M, N, b, ...)."""
+    def epoch_batches(self, epoch: Optional[int] = None,
+                      server_ids: Optional[Tuple[int, ...]] = None
+                      ) -> Dict[str, jax.Array]:
+        """Batch pytree with leaves (T_C, M, N, b, ...).
+
+        ``server_ids``: optional tuple of ORIGINAL server indices to emit
+        (dynamic federation: after fault surgery only the alive servers'
+        shards are drawn, and a server that drops and later rejoins gets its
+        own clients' streams back — client data ownership is tied to
+        identity, not to the current row position)."""
         e = self._epoch if epoch is None else epoch
         topo, cfg = self.topo, self.cfg
         key = jax.random.fold_in(jax.random.key(cfg.seed), e)
@@ -119,6 +161,12 @@ class FLDataPipeline:
             if fe.kind == "vision_patches":
                 # text tokens shrink so total seq stays cfg.seq_len
                 batch["tokens"] = batch["tokens"][..., : cfg.seq_len - fe.num_tokens]
+        if server_ids is not None:
+            ids = np.asarray(server_ids)
+            if ids.size and (ids.min() < 0 or ids.max() >= topo.num_servers):
+                raise ValueError(f"server_ids {server_ids} out of range for "
+                                 f"M={topo.num_servers}")
+            batch = jax.tree.map(lambda x: x[:, ids], batch)
         self._epoch = e + 1
         return batch
 

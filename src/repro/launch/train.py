@@ -20,10 +20,29 @@ import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_arch, get_smoke
-from repro.core import DFLConfig, FLTopology, build_dfl_epoch_step, init_dfl_state
+from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
+                        init_dfl_state, make_engine, FaultSchedule,
+                        ParticipationSchedule, TopologySchedule)
 from repro.data import DataConfig, FLDataPipeline
 from repro.models import transformer as tf
 from repro.optim import sgd
+
+
+def _setup_lm(arch_id, smoke, servers, clients, t_client, t_server, graph,
+              gamma, seq_len, per_client_batch, seed, attn_impl):
+    """Shared trainer scaffolding: arch config, topology, loss, optimizer,
+    data pipeline (used by both the static and the dynamic driver)."""
+    cfg = get_smoke(arch_id) if smoke else get_arch(arch_id)
+    topo = FLTopology(num_servers=servers, clients_per_server=clients,
+                      t_client=t_client, t_server=t_server, graph_kind=graph)
+    opts = tf.ApplyOptions(remat=False, attn_impl=attn_impl)
+    loss_fn = tf.make_loss_fn(cfg, opts)
+    optimizer = sgd(gamma)
+    pipe = FLDataPipeline(topo, DataConfig(seq_len=seq_len,
+                                           per_client_batch=per_client_batch,
+                                           vocab_size=cfg.vocab_size,
+                                           seed=seed), arch=cfg)
+    return cfg, topo, loss_fn, optimizer, pipe
 
 
 def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
@@ -33,22 +52,15 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
           consensus_mode: str = "gossip",
           ckpt_dir: Optional[str] = None, seed: int = 0,
           log_every: int = 1, attn_impl: str = "reference") -> dict:
-    cfg = get_smoke(arch_id) if smoke else get_arch(arch_id)
-    topo = FLTopology(num_servers=servers, clients_per_server=clients,
-                      t_client=t_client, t_server=t_server, graph_kind=graph)
-    opts = tf.ApplyOptions(remat=False, attn_impl=attn_impl)
-    loss_fn = tf.make_loss_fn(cfg, opts)
-    optimizer = sgd(gamma)
+    cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
+        arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
+        seq_len, per_client_batch, seed, attn_impl)
     dfl_cfg = DFLConfig(topology=topo, consensus_mode=consensus_mode)
     step = jax.jit(build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer),
                    donate_argnums=(0,))
 
     params = tf.init_params(jax.random.key(seed), cfg)
     state = init_dfl_state(dfl_cfg, params, optimizer, jax.random.key(seed + 1))
-    pipe = FLDataPipeline(topo, DataConfig(seq_len=seq_len,
-                                           per_client_batch=per_client_batch,
-                                           vocab_size=cfg.vocab_size,
-                                           seed=seed), arch=cfg)
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
     history = {"loss": [], "disagreement": [], "drift": []}
     t0 = time.time()
@@ -71,6 +83,77 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
     return {"state": state, "history": history, "topology": topo, "cfg": cfg}
 
 
+def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
+                  clients: int = 2, t_client: int = 4, t_server: int = 5,
+                  epochs: int = 3, seq_len: int = 128, per_client_batch: int = 2,
+                  gamma: float = 0.05, graph: str = "ring",
+                  consensus_mode: str = "gossip",
+                  participation_rate: float = 1.0,
+                  participation_kind: str = "bernoulli",
+                  edge_drop_prob: float = 0.0,
+                  straggler_weaken: float = 0.0,
+                  faults: str = "",
+                  ckpt_dir: Optional[str] = None,
+                  seed: int = 0, log_every: int = 1,
+                  attn_impl: str = "reference") -> dict:
+    """Dynamic-federation LM training: the same Algorithm-1 cycle driven by
+    the scenario engine — partial client participation, per-epoch degraded
+    server graphs, and scheduled server failure/rejoin (``faults`` is the
+    ``"drop:EPOCH:SERVER,rejoin:EPOCH:SERVER"`` CLI syntax)."""
+    cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
+        arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
+        seq_len, per_client_batch, seed, attn_impl)
+
+    if participation_rate >= 1.0:
+        part = ParticipationSchedule()                     # full
+    elif participation_kind == "bernoulli":
+        part = ParticipationSchedule(kind="bernoulli",
+                                     rate=participation_rate, seed=seed)
+    else:  # fixed_k / round_robin: rate -> clients per server per epoch
+        part = ParticipationSchedule(
+            kind=participation_kind,
+            k=max(1, round(participation_rate * clients)), seed=seed)
+    if edge_drop_prob > 0.0:
+        tsched = TopologySchedule(kind="edge_drop", drop_prob=edge_drop_prob,
+                                  seed=seed + 1)
+    elif straggler_weaken > 0.0:
+        tsched = TopologySchedule(kind="straggler", weaken=straggler_weaken,
+                                  seed=seed + 1)
+    else:
+        tsched = TopologySchedule()                        # static
+    engine = make_engine(topo, loss_fn, optimizer,
+                         consensus_mode=consensus_mode,
+                         participation=part, topology_schedule=tsched,
+                         faults=FaultSchedule.parse(faults))
+
+    params = tf.init_params(jax.random.key(seed), cfg)
+    state = init_dfl_state(engine.cfg, params, optimizer,
+                           jax.random.key(seed + 1))
+
+    def batch_fn(epoch, alive):
+        return pipe.epoch_batches(epoch, server_ids=alive)
+
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    history: dict = {}
+    t0 = time.time()
+    for epoch in range(epochs):
+        state, rec = engine.run_epoch(state, epoch, batch_fn)
+        for k, v in rec.items():
+            history.setdefault(k, []).append(v)
+        if ckpt is not None:
+            ckpt.save(epoch, state.client_params,
+                      meta={"arch": cfg.name, "epoch": epoch,
+                            "alive": list(engine.alive)})
+        if epoch % log_every == 0:
+            print(f"epoch {epoch:4d}  loss={rec['loss']:.4f}  "
+                  f"M={int(rec['num_servers'])}  "
+                  f"part={rec['participation']:.2f}  "
+                  f"disagreement={rec['disagreement']:.3e}  "
+                  f"sigma_prod={rec['sigma_prod']:.3e}  "
+                  f"({time.time() - t0:.1f}s)")
+    return {"state": state, "history": history, "engine": engine, "cfg": cfg}
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="smollm-360m")
@@ -91,12 +174,38 @@ def main() -> None:
                    choices=("gossip", "collapsed", "chebyshev", "exact_mean",
                             "none"))
     p.add_argument("--ckpt-dir", default=None)
+    dyn = p.add_argument_group(
+        "dynamic federation (any of these switches to the scenario engine)")
+    dyn.add_argument("--participation-rate", type=float, default=1.0,
+                     help="fraction of clients training each epoch (<1 "
+                          "enables partial participation)")
+    dyn.add_argument("--participation-kind", default="bernoulli",
+                     choices=("bernoulli", "fixed_k", "round_robin"))
+    dyn.add_argument("--edge-drop-prob", type=float, default=0.0,
+                     help="per-epoch probability that each server link fails")
+    dyn.add_argument("--straggler-weaken", type=float, default=0.0,
+                     help="weight fraction removed from one random link "
+                          "per epoch (slow links)")
+    dyn.add_argument("--faults", default="",
+                     help="server fault schedule, e.g. 'drop:5:1,rejoin:9:1'")
     args = p.parse_args()
-    train(args.arch, smoke=args.smoke, servers=args.servers,
-          clients=args.clients, t_client=args.t_client,
-          t_server=args.t_server, epochs=args.epochs, seq_len=args.seq_len,
-          per_client_batch=args.batch, gamma=args.gamma, graph=args.graph,
-          consensus_mode=args.consensus_mode, ckpt_dir=args.ckpt_dir)
+    kw = dict(smoke=args.smoke, servers=args.servers, clients=args.clients,
+              t_client=args.t_client, t_server=args.t_server,
+              epochs=args.epochs, seq_len=args.seq_len,
+              per_client_batch=args.batch, gamma=args.gamma,
+              graph=args.graph, consensus_mode=args.consensus_mode,
+              ckpt_dir=args.ckpt_dir)
+    dynamic = (args.participation_rate < 1.0 or args.edge_drop_prob > 0.0
+               or args.straggler_weaken > 0.0 or bool(args.faults))
+    if dynamic:
+        train_dynamic(args.arch,
+                      participation_rate=args.participation_rate,
+                      participation_kind=args.participation_kind,
+                      edge_drop_prob=args.edge_drop_prob,
+                      straggler_weaken=args.straggler_weaken,
+                      faults=args.faults, **kw)
+    else:
+        train(args.arch, **kw)
 
 
 if __name__ == "__main__":

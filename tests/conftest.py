@@ -3,6 +3,19 @@ real single CPU device; only launch/dryrun.py forces 512 placeholders."""
 import jax
 import pytest
 
+# Fast-tier arch subset for the per-architecture suites (test_models_smoke,
+# test_decode): one representative per family — dense, dense+GQA, MoE+SWA,
+# SSM, vision frontend.  The remaining archs exercise the same code paths
+# with heavier smoke configs and run in the slow tier (-m slow).
+FAST_ARCHS = ("smollm_360m", "qwen3_1_7b", "mixtral_8x22b", "mamba2_780m",
+              "internvl2_1b")
+
+
+def arch_params(arch_ids, fast=FAST_ARCHS):
+    """parametrize values with non-fast archs marked slow."""
+    return [pytest.param(a, marks=() if a in fast else (pytest.mark.slow,))
+            for a in arch_ids]
+
 
 @pytest.fixture(scope="session")
 def rng_key():

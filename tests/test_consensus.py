@@ -81,6 +81,32 @@ def test_chebyshev_preserves_mean_and_accelerates(rng_key):
     assert dis(cheb) < dis(plain)
 
 
+@pytest.mark.parametrize("block", [3, 5, 64])
+def test_gossip_scan_blocked_pad_unpad_roundtrip(block, rng_key):
+    """Non-divisible leaf sizes force padding: blocked gossip must still
+    equal the reference leaf-wise scan after unpadding (total flattened
+    D = 4*3 + 7 = 19 is divisible by none of the blocks)."""
+    m, t_s = 5, 6
+    a = jnp.asarray(tp.metropolis_weights(tp.ring_graph(m)), jnp.float32)
+    tree = _tree(m, rng_key)
+    out_blocked = cns.gossip_scan_blocked(a, tree, t_s, block=block)
+    out_ref = cns.gossip_scan(a, tree, t_s)
+    for l1, l2 in zip(jax.tree.leaves(out_blocked),
+                      jax.tree.leaves(out_ref)):
+        assert l1.shape == l2.shape
+        np.testing.assert_allclose(l1, l2, rtol=2e-5, atol=2e-5)
+
+
+def test_gossip_scan_blocked_t0_and_shapes(rng_key):
+    m = 4
+    a = jnp.asarray(tp.metropolis_weights(tp.ring_graph(m)), jnp.float32)
+    tree = _tree(m, rng_key)
+    out = cns.gossip_scan_blocked(a, tree, 0)
+    for before, after in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(before, after)   # T_S=0 is identity
+
+
+@pytest.mark.slow
 def test_ring_gossip_shard_map_multidevice():
     """ppermute ring gossip == dense A gossip, on an 8-device subprocess."""
     import subprocess
@@ -121,6 +147,7 @@ def test_consensus_mix_kernel_pytree(rng_key):
         np.testing.assert_allclose(l1, l2, rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_gossip_shard_map_matches_dense():
     """The production u16-wire blocked shard_map gossip == dense gossip_scan
     numerically, on an 8-device (2 servers x 2 replica x 2 model) mesh."""

@@ -4,10 +4,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import arch_params
 from repro.configs import ARCH_IDS, get_smoke
 from repro.models import transformer as tf
 
 OPTS = tf.ApplyOptions(remat=False, moe_no_drop=True)
+
+ARCH_PARAMS = arch_params(ARCH_IDS)
 
 
 def _batch(cfg, key, b, s):
@@ -22,7 +25,7 @@ def _batch(cfg, key, b, s):
     return batch
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_decode_matches_forward(arch_id, rng_key):
     """Greedy-decode 3 tokens; logits at each step must match running the
     full forward over the extended sequence (drop-free MoE)."""

@@ -15,7 +15,16 @@ from repro.core import DFLConfig, FLTopology, build_dfl_epoch_step, init_dfl_sta
 from repro.models import transformer as tf
 from repro.optim import sgd
 
+from conftest import arch_params
+
 B, S = 2, 32
+
+# The two double-jit equivalence suites keep smaller fast subsets than the
+# conftest default (each param costs two full jit compiles).
+ARCH_PARAMS = arch_params(ARCH_IDS)
+TRAIN_PARAMS = arch_params(ARCH_IDS,
+                           ("smollm_360m", "mixtral_8x22b", "mamba2_780m"))
+MICRO_PARAMS = arch_params(ARCH_IDS, ("smollm_360m", "mixtral_8x22b"))
 
 
 def _batch(cfg, key, lead=(B,), seq=S):
@@ -30,7 +39,7 @@ def _batch(cfg, key, lead=(B,), seq=S):
     return batch
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_forward_shapes_and_finite(arch_id, rng_key):
     cfg = get_smoke(arch_id)
     assert cfg.num_layers <= 3 and cfg.d_model <= 512
@@ -45,7 +54,7 @@ def test_forward_shapes_and_finite(arch_id, rng_key):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", TRAIN_PARAMS)
 def test_dfl_train_step(arch_id, rng_key):
     """One full DFL epoch (2 servers x 2 clients, T_C=2, T_S=3)."""
     cfg = get_smoke(arch_id)
@@ -74,7 +83,7 @@ def test_dfl_train_step(arch_id, rng_key):
                                   np.asarray(leaf[:, 1]))
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", MICRO_PARAMS)
 def test_grad_microbatching_matches_full_batch(arch_id, rng_key):
     """grad_microbatches=2 == full-batch gradient (Eq. 3 equivalence)."""
     cfg = get_smoke(arch_id)

@@ -79,6 +79,110 @@ def test_max_step_size_and_epsilon():
     assert eps_small < eps
 
 
+def test_topology_validates_edge_cases():
+    # T_S = 0 is a legal epoch split (no consensus period)
+    topo = tp.FLTopology(num_servers=3, clients_per_server=2, t_client=1,
+                         t_server=0)
+    assert topo.epoch_len == 1
+    assert topo.sigma() == tp.sigma_a(topo.mixing_matrix(), 0)
+    # ... but negative T_S is not
+    with pytest.raises(ValueError):
+        tp.FLTopology(num_servers=3, clients_per_server=2, t_client=1,
+                      t_server=-1)
+    # M = 1 degenerates to single-server FL: no graph, sigma = 0
+    solo = tp.FLTopology(num_servers=1, clients_per_server=4, t_client=2,
+                         t_server=5)
+    assert solo.sigma() == 0.0
+    assert not solo.adjacency().any()
+
+
+def test_star_hub_drop_falls_back_to_ring():
+    """Removing the hub of a star disconnects the induced subgraph; surgery
+    must fall back to a ring over the survivors (Assumption 1 restored)."""
+    topo = tp.FLTopology(num_servers=5, clients_per_server=2, t_client=10,
+                         t_server=5, graph_kind="star")
+    new, keep = topo.drop_server(0)
+    assert new.graph_kind == "ring"
+    assert tp.is_connected(new.adjacency())
+    assert list(keep) == [1, 2, 3, 4]
+    # dropping a LEAF keeps the star intact
+    new2, _ = topo.drop_server(3)
+    assert new2.graph_kind == "star"
+    assert tp.is_connected(new2.adjacency())
+
+
+def test_torus_survives_surgery_to_any_m():
+    """build_graph('torus', m) must emit exactly m nodes for EVERY m (graph
+    surgery walks through arbitrary — including prime — server counts)."""
+    for m in range(2, 12):
+        adj = tp.build_graph("torus", m)
+        assert adj.shape == (m, m), m
+        assert tp.is_connected(adj), m
+    with pytest.raises(ValueError):
+        tp.build_graph("torus", 8, rows=3)   # 3 does not divide 8
+    topo = tp.FLTopology(num_servers=8, clients_per_server=2, t_client=2,
+                         t_server=1, graph_kind="torus")
+    new, keep = topo.drop_server(0)          # 7 servers: prime
+    assert new.adjacency().shape == (7, 7)
+    assert tp.is_connected(new.adjacency())
+
+
+def test_rejoin_server_inverse_surgery():
+    topo = tp.FLTopology(num_servers=5, clients_per_server=2, t_client=10,
+                         t_server=5, graph_kind="ring")
+    dropped, _ = topo.drop_server(2)
+    rejoined, idx = dropped.rejoin_server()
+    assert rejoined.num_servers == 5
+    assert idx == 4                        # newcomer takes the last row
+    assert tp.is_connected(rejoined.adjacency())
+
+
+def test_erdos_renyi_fallback_path_is_connected():
+    """p=0 can never sample a connected graph: after 100 tries the fallback
+    must still return a connected (ring-spanning) graph."""
+    adj = tp.erdos_renyi_graph(8, 0.0, seed=0)
+    assert tp.is_connected(adj)
+    assert (adj == adj.T).all()
+    assert not adj.diagonal().any()
+    # a tiny-but-nonzero p exercises fallback-with-random-extras
+    adj2 = tp.erdos_renyi_graph(12, 0.01, seed=3)
+    assert tp.is_connected(adj2)
+    assert (adj2 == adj2.T).all()
+
+
+def test_weaken_links_stays_doubly_stochastic():
+    a = tp.metropolis_weights(tp.ring_graph(6))
+    weak = tp.weaken_links(a, [(0, 1), (2, 3)], factor=0.8)
+    tp.check_mixing_matrix(weak)
+    assert weak[0, 1] == pytest.approx(0.2 * a[0, 1])
+    assert tp.sigma_a(weak, 1) < 1.0       # still a contraction
+    with pytest.raises(ValueError):
+        tp.weaken_links(a, [(0, 0)], 0.5)
+    with pytest.raises(ValueError):
+        tp.weaken_links(a, [(0, 1)], 1.5)
+
+
+def test_random_edge_drop_repairs_connectivity():
+    adj = tp.ring_graph(8)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        out = tp.random_edge_drop(adj, 0.9, rng, ensure_connected=True)
+        assert tp.is_connected(out)
+        assert (out == out.T).all()
+    # without repair, p=1 drops everything
+    bare = tp.random_edge_drop(adj, 1.0, np.random.default_rng(0),
+                               ensure_connected=False)
+    assert not bare.any()
+
+
+def test_sigma_product_constant_matches_power():
+    a = tp.metropolis_weights(tp.ring_graph(5))
+    assert tp.sigma_product([a, a, a], 4) == pytest.approx(
+        tp.sigma_a(a, 12), abs=1e-10)
+    with pytest.raises(ValueError):
+        tp.sigma_product([], 3)
+
+
 def test_drop_server_graph_surgery():
     topo = tp.FLTopology(num_servers=5, clients_per_server=2, t_client=10,
                          t_server=5, graph_kind="ring")
