@@ -14,6 +14,9 @@ theory quantities the paper derives and our beyond-paper claims):
   topology_sweep        ring/line/star/complete/torus: sigma_A + spectral gap
   dynamic_federation    convergence under full vs sampled participation vs
                         faulty links vs server churn (the scenario engine)
+  directed_federation   symmetric vs naive row-stochastic (biased) vs
+                        push-sum (unbiased) gossip under directed /
+                        asymmetrically-degraded links
   kernel_micro          Pallas-kernel (interpret) vs jnp-oracle parity +
                         CPU wall time (correctness harness, not TPU perf)
   lm_epoch_throughput   DFL epoch wall time on a smoke LM (CPU reference)
@@ -268,6 +271,72 @@ def bench_dynamic_federation():
         record("dynamic_federation", f"{name}_wall_s", round(dt, 2))
 
 
+def bench_directed_federation():
+    """Symmetric gossip vs naive row-stochastic gossip (biased) vs push-sum
+    (unbiased) under directed/asymmetrically-degraded server links.  The
+    acceptance metric: push-sum's final disagreement AND distance-to-ideal
+    stay within tolerance of the symmetric baseline while naive
+    row-stochastic gossip stays biased (it converges to the Perron-weighted
+    w_pi, not the uniform w*)."""
+    from repro.core import (FLTopology, TopologySchedule, init_dfl_state,
+                            make_engine, perron_weights)
+    from repro.data import (RegressionSpec, make_regression_task,
+                            perron_ideal)
+    from repro.optim import sgd
+
+    m, n, t_c, t_s, epochs = 5, 5, 25, 30, 80
+    ring = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                      t_server=t_s, graph_kind="ring")
+    directed = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                          t_server=t_s, graph_kind="random_orientation",
+                          mixing="out_degree")
+    task = make_regression_task(directed, RegressionSpec(concept_shift=2.0),
+                                seed=0)
+    w_star = task["w_star"]
+    d = np.asarray(task["x"]).shape[-1]
+    pi = perron_weights(directed.mixing_matrix())
+    w_pi = perron_ideal(task["x"], task["y"], pi)
+    record("directed_federation", "perron_bias_norm",
+           round(float(np.linalg.norm(w_pi - w_star)), 5))
+
+    gamma = 0.4 / (9.0 * t_c)
+    scenarios = {
+        "symmetric": dict(topo=ring, mixing="symmetric"),
+        "naive_row_stochastic": dict(topo=directed, mixing="row_stochastic"),
+        "push_sum": dict(topo=directed, mixing="push_sum"),
+        "push_sum_asymmetric": dict(
+            topo=ring, mixing="push_sum",
+            topology_schedule=TopologySchedule(kind="asymmetric",
+                                               drop_prob=0.4, seed=11)),
+    }
+    errs = {}
+    for name, sc in scenarios.items():
+        kw = {k: v for k, v in sc.items() if k != "topo"}
+        engine = make_engine(sc["topo"], task["loss_fn"], sgd(gamma), **kw)
+        state = init_dfl_state(engine.cfg, jnp.zeros((d,)), sgd(gamma),
+                               jax.random.key(0))
+        t0 = time.time()
+        state, hist = engine.run(state, epochs, task["batch_fn"])
+        dt = time.time() - t0
+        servers = np.asarray(state.client_params[:, 0])
+        errs[name] = float(np.linalg.norm(servers - w_star, axis=-1).max())
+        err_pi = float(np.linalg.norm(servers - w_pi, axis=-1).max())
+        record("directed_federation", f"{name}_err_to_wstar",
+               round(errs[name], 5))
+        record("directed_federation", f"{name}_err_to_wpi", round(err_pi, 5))
+        record("directed_federation", f"{name}_final_disagreement",
+               f"{hist['disagreement'][-1]:.3e}")
+        if "psum_min_weight" in hist:
+            record("directed_federation", f"{name}_psum_min_weight",
+                   round(hist["psum_min_weight"][-1], 4))
+        record("directed_federation", f"{name}_wall_s", round(dt, 2))
+    tol = 1.2 * errs["symmetric"] + 0.02
+    record("directed_federation", "push_sum_unbiased",
+           bool(errs["push_sum"] <= tol and errs["push_sum_asymmetric"] <= tol))
+    record("directed_federation", "naive_row_stochastic_biased",
+           bool(errs["naive_row_stochastic"] > 1.5 * errs["push_sum"]))
+
+
 def bench_lm_epoch_throughput():
     from repro.launch.train import train
     t0 = time.time()
@@ -287,6 +356,7 @@ BENCHES = {
     "consensus_strategies": bench_consensus_strategies,
     "topology_sweep": bench_topology_sweep,
     "dynamic_federation": bench_dynamic_federation,
+    "directed_federation": bench_directed_federation,
     "kernel_micro": bench_kernel_micro,
     "lm_epoch_throughput": bench_lm_epoch_throughput,
 }

@@ -4,11 +4,17 @@ from repro.core.topology import (FLTopology, build_graph, is_connected,
                                  metropolis_weights, uniform_weights,
                                  check_mixing_matrix, sigma_a, sigma_product,
                                  spectral_gap, drop_edges, random_edge_drop,
-                                 weaken_links)
+                                 weaken_links, directed_ring, is_directed,
+                                 is_strongly_connected, random_orientation,
+                                 random_direction_drop, out_degree_weights,
+                                 check_row_stochastic, perron_weights,
+                                 push_sum_deviation, sigma_push_sum)
 from repro.core.consensus import (mix_pytree, gossip_scan, gossip_scan_tv,
                                   gossip_collapsed, gossip_chebyshev,
                                   collapse_mixing, chebyshev_coefficients,
-                                  make_ring_gossip)
+                                  make_ring_gossip, PushSumState,
+                                  init_push_sum, gossip_push_sum,
+                                  gossip_push_sum_tv)
 from repro.core.dfl import (DFLConfig, DFLState, DFLMetrics,
                             build_dfl_epoch_step, build_fedavg_epoch_step,
                             build_local_only_epoch_step, init_dfl_state,

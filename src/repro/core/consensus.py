@@ -27,7 +27,7 @@ exchange (lax.ppermute) for ring graphs under shard_map.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -85,13 +85,20 @@ def gossip_scan(a: jax.Array, tree: Any, t_server: int) -> Any:
 def gossip_scan_tv(a_rounds: jax.Array, tree: Any) -> Any:
     """Time-varying consensus: round t applies ``a_rounds[t]``.
 
-    ``a_rounds`` is a traced ``(T_S, M, M)`` stack of (doubly-stochastic)
-    mixing matrices — the fully general form of Eq. 5 where the server graph
-    may change BETWEEN ROUNDS (link failures mid-consensus, straggler
-    reweighting).  A stack of T_S identical matrices is exactly
-    ``gossip_scan`` (same per-round operator, same ordering); each round
-    preserves the server mean, and the product of the stack governs the
-    contraction (``topology.sigma_product`` with t_s=1 per entry)."""
+    ``a_rounds`` layout — a traced ``(T_S, M, M)`` stack with one mixing
+    matrix PER ROUND, not per epoch: ``a_rounds[t]`` is the operator of
+    consensus round ``t`` within a single consensus period, so the leading
+    axis is the round index and its length is this period's T_S.  This is
+    the fully general form of Eq. 5 where the server graph may change
+    BETWEEN ROUNDS (link failures mid-consensus, straggler reweighting).
+    Contrast ``schedule.TopologySchedule``, which emits ONE ``(M, M)``
+    matrix per epoch ``A_p``; to feed such a per-epoch matrix here,
+    broadcast it to ``(T_S, M, M)`` — a stack of T_S identical matrices is
+    exactly ``gossip_scan(a, tree, T_S)`` (same per-round operator, same
+    ordering).  Each round preserves the server mean when every
+    ``a_rounds[t]`` is doubly stochastic, and the ordered product of the
+    stack governs the contraction (``topology.sigma_product`` with t_s=1
+    per entry)."""
     if a_rounds.shape[0] == 0:
         return tree
 
@@ -152,6 +159,113 @@ def gossip_scan_blocked(a: jax.Array, tree: Any, t_server: int,
         new_leaves.append(flat[:, off:off + size].reshape(leaf.shape))
         off += size
     return jax.tree.unflatten(treedef, new_leaves)
+
+
+# ---------------------------------------------------------------------------
+# push-sum (ratio) consensus for DIRECTED server graphs
+#
+# When link failures make the graph directed, no doubly-stochastic matrix
+# may exist on its support (Eq. 6 is unsatisfiable): the best a node can do
+# locally is split its mass over its out-neighbours — a ROW-stochastic A
+# (topology.out_degree_weights).  Naive gossip with such an A converges to
+# the Perron-weighted average pi' W (pi the left Perron vector of A), a
+# BIASED aggregate.  Push-sum / ratio consensus (Kempe et al. 2003;
+# Nedic & Olshevsky 2015) fixes this by mixing a numerator AND a scalar
+# weight with the column-stochastic transpose P = A' and reading out the
+# ratio:
+#
+#     num <- P num,   w <- P w,     z_i = num_i / w_i
+#
+# P column-stochastic preserves both sums (sum num = sum W_0, sum w = M),
+# and P^t -> v 1' (sum v = 1), so num -> v * sum(W_0), w -> v * M and every
+# ratio z_i -> the exact uniform mean — the skew v cancels.  Operationally
+# each round IS the row-stochastic protocol run in push mode: node i sends
+# a[i, j]-weighted shares of its (num, w) along its OUT-edges; P = A' is
+# just that send pattern written as a matrix acting on the receive side.
+# When A is doubly stochastic, P = A' is row-stochastic too, w stays at 1
+# identically and push-sum degenerates to plain gossip.
+# ---------------------------------------------------------------------------
+
+
+class PushSumState(NamedTuple):
+    """Numerator pytree (leaves ``(M, *w)``) + per-server scalar weight
+    ``(M,)``.  Invariants under mixing: weights stay positive and sum to M;
+    ``ratio()`` of a freshly-initialised state is the values themselves."""
+
+    values: Any          # numerator pytree, leading server axis M
+    weight: jax.Array    # (M,) float, > 0, sum == M
+
+    def ratio(self) -> Any:
+        """The unbiased read-out z_i = num_i / w_i, broadcast leaf-wise."""
+        return jax.tree.map(
+            lambda v: v / self.weight.reshape(
+                (-1,) + (1,) * (v.ndim - 1)).astype(v.dtype),
+            self.values)
+
+
+def init_push_sum(tree: Any) -> PushSumState:
+    """Start of a consensus period: numerator = the server models, weight =
+    1 for every server.  Weights RESET here each period by design: with a
+    persistent weight the finite-round ratio is no longer exact on
+    consensus states (P^t(c*1)/P^t(1) == c for all t only when num and w
+    start aligned), and re-weighting the numerator by a carried weight
+    provably re-introduces the Perron bias — see docs/dynamic_federation.md."""
+    m = jax.tree.leaves(tree)[0].shape[0]
+    return PushSumState(tree, jnp.ones((m,), jnp.float32))
+
+
+def _push_leaf(p: jax.Array, leaf: jax.Array) -> jax.Array:
+    return jnp.tensordot(p.astype(leaf.dtype), leaf, axes=([1], [0]))
+
+
+def gossip_push_sum(a: jax.Array, state: PushSumState,
+                    t_server: int) -> PushSumState:
+    """T_S rounds of push-sum over a ROW-stochastic ``a`` (shape (M, M),
+    support = directed graph + self-loops, e.g. topology.out_degree_weights).
+
+    Numerator and weight are mixed with the same column-stochastic operator
+    ``P = a.T``; they interact only at read-out (``.ratio()``), so each leaf
+    loops independently exactly like ``gossip_scan``.  The weight recursion
+    is a tiny (M,) matvec and costs nothing next to the parameter leaves."""
+    if t_server == 0:
+        return state
+    p = a.T
+
+    def leaf_loop(leaf):
+        return jax.lax.fori_loop(
+            0, t_server, lambda _, w: _push_leaf(p, w), leaf)
+
+    values = jax.tree.map(leaf_loop, state.values)
+    weight = jax.lax.fori_loop(
+        0, t_server, lambda _, w: (p @ w.astype(p.dtype)).astype(w.dtype),
+        state.weight)
+    return PushSumState(values, weight)
+
+
+def gossip_push_sum_tv(a_rounds: jax.Array,
+                       state: PushSumState) -> PushSumState:
+    """Time-varying push-sum: round t mixes with ``a_rounds[t].T``.
+
+    ``a_rounds`` follows the ``gossip_scan_tv`` layout — a traced
+    ``(T_S, M, M)`` stack of ROW-stochastic matrices, one per round.  Every
+    round preserves sum(num) and sum(w) (each transpose is column
+    stochastic), so the ratio read-out stays unbiased under arbitrary
+    per-round graph changes as long as the sequence is jointly strongly
+    connected."""
+    if a_rounds.shape[0] == 0:
+        return state
+
+    def leaf_loop(leaf):
+        return jax.lax.fori_loop(
+            0, a_rounds.shape[0],
+            lambda i, w: _push_leaf(a_rounds[i].T, w), leaf)
+
+    values = jax.tree.map(leaf_loop, state.values)
+    weight = jax.lax.fori_loop(
+        0, a_rounds.shape[0],
+        lambda i, w: (a_rounds[i].T @ w.astype(a_rounds.dtype)).astype(w.dtype),
+        state.weight)
+    return PushSumState(values, weight)
 
 
 def collapse_mixing(a: np.ndarray, t_server: int) -> np.ndarray:

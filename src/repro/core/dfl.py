@@ -25,6 +25,16 @@ the natural privacy-preserving choice — moments never leave the client).
                  aggregator (the baseline the paper argues against)
     "none"       no inter-server communication (fully local ablation)
 
+Directed federation (``DFLConfig.mixing``): when degraded links make the
+server graph directed, Eq. 6's doubly-stochastic A may not exist on its
+support.  ``mixing="push_sum"`` replaces the consensus period with ratio
+consensus (``consensus.gossip_push_sum``): numerator and a per-server scalar
+weight both mixed by the column-stochastic A', read out as the unbiased
+ratio; the terminal weights ride along in ``DFLState.psum_weight``.
+``mixing="row_stochastic"`` keeps the naive (biased) W <- A W update as the
+baseline.  See docs/dynamic_federation.md for why naive row-stochastic
+gossip is biased.
+
 Dynamic federation (``DFLConfig.dynamic=True``): the compiled epoch step
 additionally takes a ``schedule.EpochSchedule`` operand — a per-epoch
 ``(M, N)`` participation mask and a per-epoch ``(M, M)`` mixing matrix —
@@ -53,12 +63,22 @@ LossFn = Callable[[Any, Any, jax.Array], Tuple[jax.Array, Any]]
 
 
 class DFLState(NamedTuple):
-    """Carried across epochs. ``client_params`` leaves: (M, N, *w)."""
+    """Carried across epochs. ``client_params`` leaves: (M, N, *w).
+
+    ``psum_weight`` is only populated under ``DFLConfig(mixing="push_sum")``:
+    the ``(M,)`` per-server push-sum weight at the END of the last consensus
+    period (positive, sums to M).  It is a directed-gossip diagnostic — a
+    weight near 0 means that server's ratio read-out num/w was
+    ill-conditioned this epoch — and the state the engine must reset on
+    server drop/rejoin; each consensus period itself restarts from weight 1
+    (see ``consensus.init_push_sum`` for why).  ``None`` in every other
+    mixing mode."""
 
     client_params: Any
     opt_state: Any
     epoch: jax.Array          # int32 scalar
     rng: jax.Array
+    psum_weight: Optional[jax.Array] = None   # (M,) or None
 
 
 class DFLMetrics(NamedTuple):
@@ -72,6 +92,20 @@ class DFLMetrics(NamedTuple):
 class DFLConfig:
     topology: FLTopology
     consensus_mode: str = "gossip"   # gossip | gossip_blocked | collapsed | chebyshev | exact_mean | none
+    # How the mixing matrix is interpreted by the consensus period:
+    #   "symmetric"       the paper: A doubly stochastic (Eq. 6), plain
+    #                     gossip W <- A W preserves the mean.
+    #   "row_stochastic"  naive directed gossip: apply a row-stochastic A
+    #                     (topology.mixing="out_degree") with the SAME
+    #                     W <- A W update.  Converges to the BIASED
+    #                     Perron-weighted average pi' W — kept as the
+    #                     baseline that shows why push-sum is needed.
+    #   "push_sum"        directed gossip done right: ratio consensus with
+    #                     numerator + weight mixed by A' (column
+    #                     stochastic); unbiased on any strongly-connected
+    #                     digraph.  The epoch step carries the per-server
+    #                     weights in DFLState.psum_weight.
+    mixing: str = "symmetric"
     chebyshev_rounds: Optional[int] = None  # default: ceil(sqrt(T_S * gap stuff)) picked by caller
     param_dtype: Any = jnp.float32
     # NamedSharding for the flattened (M, D) gossip matrix in
@@ -230,10 +264,31 @@ def build_dfl_epoch_step(
     """
     topo = cfg.topology
     m, n = topo.num_servers, topo.clients_per_server
+    if cfg.mixing not in ("symmetric", "row_stochastic", "push_sum"):
+        raise ValueError(f"unknown mixing interpretation {cfg.mixing!r}")
+    if cfg.mixing == "symmetric" and topo.mixing == "out_degree" and m > 1:
+        raise ValueError(
+            "topology.mixing='out_degree' emits a row-stochastic (generally "
+            "not doubly stochastic) A: running it through the symmetric "
+            "gossip path would silently converge to the biased "
+            "Perron-weighted average — choose DFLConfig(mixing='push_sum') "
+            "(unbiased) or mixing='row_stochastic' (the explicit biased "
+            "baseline)")
+    if cfg.mixing != "symmetric":
+        allowed = ("gossip", "collapsed", "none") if cfg.mixing == "push_sum" \
+            else ("gossip", "gossip_blocked", "collapsed", "none")
+        if cfg.consensus_mode not in allowed:
+            raise ValueError(
+                f"consensus_mode={cfg.consensus_mode!r} is undefined for "
+                f"mixing={cfg.mixing!r}; choose one of {allowed}")
+        if cfg.consensus_override is not None:
+            raise ValueError("consensus_override is a symmetric-gossip hook; "
+                             "it cannot implement the directed paths")
     a_np = topo.mixing_matrix() if m > 1 else np.ones((1, 1))
     a = jnp.asarray(a_np, jnp.float32)
     a_eff = jnp.asarray(cns.collapse_mixing(a_np, topo.t_server), jnp.float32)
-    lam2 = float(np.sort(np.abs(np.linalg.eigvalsh(a_np)))[::-1][1]) if m > 1 else 0.0
+    lam2 = (float(np.sort(np.abs(np.linalg.eigvalsh(a_np)))[::-1][1])
+            if m > 1 and cfg.consensus_mode == "chebyshev" else 0.0)
     cheb_rounds = cfg.chebyshev_rounds or max(1, int(np.ceil(np.sqrt(topo.t_server))))
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
@@ -290,34 +345,53 @@ def build_dfl_epoch_step(
                          "A_p; dynamic mode requires a traced-A consensus "
                          "mode ('gossip', 'gossip_blocked', 'collapsed')")
 
-    def apply_consensus(server_tree, a_p=None):
-        """a_p: optional traced per-epoch mixing matrix (dynamic mode);
-        defaults to the static topology's A."""
+    def _collapse_traced(a_p):
+        # traced A_p: collapse A_p^{T_S} inside the program (M x M, trivial)
+        return jax.lax.fori_loop(
+            0, topo.t_server, lambda _, p: a_p @ p,
+            jnp.eye(m, dtype=a_p.dtype))
+
+    def apply_consensus(server_tree, a_p=None, psum_weight=None):
+        """Run the consensus period.  ``a_p``: optional traced per-epoch
+        mixing matrix (dynamic mode); defaults to the static topology's A.
+        Returns ``(server_tree, psum_weight)`` — the weight is the terminal
+        push-sum weight under mixing='push_sum' and passes through unchanged
+        otherwise."""
         if m == 1 or cfg.consensus_mode == "none" or topo.t_server == 0:
-            return server_tree
-        if cfg.consensus_override is not None:
-            return cfg.consensus_override(server_tree)
+            return server_tree, psum_weight
         a_op = a if a_p is None else a_p
+        if cfg.mixing == "push_sum":
+            # each consensus period is a fresh ratio consensus: numerator =
+            # this epoch's server aggregates, weight reset to 1 (the carried
+            # DFLState.psum_weight is last period's terminal weight, kept as
+            # a diagnostic — see init_push_sum for why it must not seed the
+            # next period)
+            ps = cns.init_push_sum(server_tree)
+            if cfg.consensus_mode == "collapsed":
+                eff = a_eff if a_p is None else _collapse_traced(a_p)
+                ps = cns.gossip_push_sum(eff, ps, 1)
+            else:
+                ps = cns.gossip_push_sum(a_op, ps, topo.t_server)
+            return ps.ratio(), ps.weight
+        if cfg.consensus_override is not None:
+            return cfg.consensus_override(server_tree), psum_weight
         if cfg.consensus_mode == "gossip":
-            return cns.gossip_scan(a_op, server_tree, topo.t_server)
+            return (cns.gossip_scan(a_op, server_tree, topo.t_server),
+                    psum_weight)
         if cfg.consensus_mode == "gossip_blocked":
-            return cns.gossip_scan_blocked(
+            return (cns.gossip_scan_blocked(
                 a_op, server_tree, topo.t_server,
-                flat_sharding=cfg.gossip_flat_sharding)
+                flat_sharding=cfg.gossip_flat_sharding), psum_weight)
         if cfg.consensus_mode == "collapsed":
-            if a_p is None:
-                return cns.gossip_collapsed(a_eff, server_tree)
-            # traced A_p: collapse inside the program (M x M, trivial)
-            eff = jax.lax.fori_loop(
-                0, topo.t_server, lambda _, p: a_p @ p,
-                jnp.eye(m, dtype=a_p.dtype))
-            return cns.gossip_collapsed(eff, server_tree)
+            eff = a_eff if a_p is None else _collapse_traced(a_p)
+            return cns.gossip_collapsed(eff, server_tree), psum_weight
         if cfg.consensus_mode == "chebyshev":
-            return cns.gossip_chebyshev(a, server_tree, cheb_rounds, lam2)
+            return (cns.gossip_chebyshev(a, server_tree, cheb_rounds, lam2),
+                    psum_weight)
         if cfg.consensus_mode == "exact_mean":
             mean = jax.tree.map(lambda x: x.mean(axis=0, keepdims=True), server_tree)
-            return jax.tree.map(lambda x, mu: jnp.broadcast_to(mu, x.shape),
-                                server_tree, mean)
+            return (jax.tree.map(lambda x, mu: jnp.broadcast_to(mu, x.shape),
+                                 server_tree, mean), psum_weight)
         raise ValueError(f"unknown consensus mode {cfg.consensus_mode!r}")
 
     def epoch_step(state: DFLState, batches: Any) -> Tuple[DFLState, DFLMetrics]:
@@ -339,14 +413,14 @@ def build_dfl_epoch_step(
         server = server_mean(params)
 
         # ---- 3. consensus period: T_S gossip rounds (Eq. 5/7) ----
-        server = apply_consensus(server)
+        server, psw = apply_consensus(server, psum_weight=state.psum_weight)
         disagreement = (disagreement_norm(server) if cfg.metrics == "full"
                         else jnp.zeros((), jnp.float32))
 
         # ---- 4. broadcast w^i_p back to C_i ----
         params = broadcast_to_clients(server, n)
 
-        new_state = DFLState(params, opt_state, state.epoch + 1, rng)
+        new_state = DFLState(params, opt_state, state.epoch + 1, rng, psw)
         metrics = DFLMetrics(loss=losses, server_disagreement=disagreement,
                              client_drift=drift, grad_norm=gnorms[-1])
         return new_state, metrics
@@ -379,14 +453,15 @@ def build_dfl_epoch_step(
         server = masked_server_mean(params, mask)
 
         # ---- 3. consensus over this epoch's graph A_p (Eq. 5/7) ----
-        server = apply_consensus(server, a_p)
+        server, psw = apply_consensus(server, a_p,
+                                      psum_weight=state.psum_weight)
         disagreement = (disagreement_norm(server) if cfg.metrics == "full"
                         else jnp.zeros((), jnp.float32))
 
         # ---- 4. broadcast (every client, participant or not) ----
         params = broadcast_to_clients(server, n)
 
-        new_state = DFLState(params, opt_state, state.epoch + 1, rng)
+        new_state = DFLState(params, opt_state, state.epoch + 1, rng, psw)
         metrics = DFLMetrics(loss=losses, server_disagreement=disagreement,
                              client_drift=drift, grad_norm=gnorms[-1])
         return new_state, metrics
@@ -396,13 +471,17 @@ def build_dfl_epoch_step(
 
 def init_dfl_state(cfg: DFLConfig, params: Any, optimizer: Optimizer,
                    rng: jax.Array) -> DFLState:
-    """Replicate shared w_0 (Alg. 1 'Initialize') and build optimizer state."""
+    """Replicate shared w_0 (Alg. 1 'Initialize') and build optimizer state.
+    Under ``mixing='push_sum'`` the state additionally carries a unit
+    per-server push-sum weight."""
     topo = cfg.topology
     client_params = replicate_to_clients(params, topo.num_servers,
                                          topo.clients_per_server)
     opt_state = optimizer.init(client_params)
+    psw = (jnp.ones((topo.num_servers,), jnp.float32)
+           if cfg.mixing == "push_sum" else None)
     return DFLState(client_params, opt_state,
-                    jnp.zeros((), jnp.int32), rng)
+                    jnp.zeros((), jnp.int32), rng, psw)
 
 
 # ---------------------------------------------------------------------------

@@ -56,12 +56,34 @@ class DynamicFederationEngine:
     def __post_init__(self):
         if not self.cfg.dynamic:
             self.cfg = dataclasses.replace(self.cfg, dynamic=True)
+        if (self.topology_schedule.kind == "asymmetric"
+                and self.cfg.mixing == "symmetric"):
+            raise ValueError(
+                "TopologySchedule(kind='asymmetric') emits row-stochastic "
+                "A_p: the symmetric gossip path would silently converge to "
+                "a biased average — use DFLConfig(mixing='push_sum') or "
+                "mixing='row_stochastic'")
         self.topo: FLTopology = self.cfg.topology
         # original server ids still alive, in row order of the state arrays
         self.alive: List[int] = list(range(self.topo.num_servers))
         self._next_id: int = self.topo.num_servers
         self._steps: Dict[int, Callable] = {}
-        self._tracker = SigmaTracker(self.topo.num_servers)
+        self._tracker = self._fresh_tracker()
+
+    def _fresh_tracker(self) -> SigmaTracker:
+        mode = "push_sum" if self.cfg.mixing == "push_sum" else "average"
+        return SigmaTracker(self.topo.num_servers, mode=mode)
+
+    def _reset_psum_weight(self, state: dfl.DFLState) -> dfl.DFLState:
+        """Push-sum weights are per-server mass fractions of the CURRENT
+        federation (positive, summing to M): after drop/rejoin surgery the
+        old weights describe a federation that no longer exists, so they
+        reset to 1 — consistent with every consensus period starting from
+        unit weight anyway (``consensus.init_push_sum``)."""
+        if self.cfg.mixing != "push_sum":
+            return state
+        return state._replace(
+            psum_weight=jnp.ones((self.topo.num_servers,), jnp.float32))
 
     # -- compiled-step cache -------------------------------------------------
     def _step(self) -> Callable:
@@ -90,8 +112,8 @@ class DynamicFederationEngine:
             jax.tree.map(leaf, state.client_params),
             jax.tree.map(leaf, state.opt_state),
             state.epoch, state.rng)
-        self._tracker = SigmaTracker(self.topo.num_servers)
-        return state
+        self._tracker = self._fresh_tracker()
+        return self._reset_psum_weight(state)
 
     def _rejoin(self, state: dfl.DFLState, server: Optional[int]) -> dfl.DFLState:
         """A server re-enters with the survivor-mean model (fresh id when
@@ -113,8 +135,8 @@ class DynamicFederationEngine:
             jax.tree.map(leaf, state.client_params),
             jax.tree.map(leaf, state.opt_state),
             state.epoch, state.rng)
-        self._tracker = SigmaTracker(self.topo.num_servers)
-        return state
+        self._tracker = self._fresh_tracker()
+        return self._reset_psum_weight(state)
 
     def apply_faults(self, state: dfl.DFLState, epoch: int) -> dfl.DFLState:
         for ev in self.faults.at(epoch):
@@ -147,6 +169,10 @@ class DynamicFederationEngine:
             "num_servers": float(m),
             "sigma_prod": sigma_prod,
         }
+        if state.psum_weight is not None:
+            # ratio-consensus conditioning: a terminal weight near 0 means
+            # that server's num/w read-out amplified rounding error
+            record["psum_min_weight"] = float(jnp.min(state.psum_weight))
         return state, record
 
     def run(self, state: dfl.DFLState, epochs: int,
@@ -166,7 +192,35 @@ def make_engine(topology: FLTopology, loss_fn: dfl.LossFn,
                 topology_schedule: Optional[TopologySchedule] = None,
                 faults: Optional[FaultSchedule] = None,
                 **cfg_kw) -> DynamicFederationEngine:
-    """Convenience constructor mirroring ``DFLConfig`` defaults."""
+    """Convenience constructor mirroring ``DFLConfig`` defaults.
+
+    Any extra keyword (``mixing``, ``metrics``, ``grad_microbatches``, ...)
+    is forwarded to ``DFLConfig``; ``dynamic=True`` is always set.  Typical
+    usage on the paper's Sec.-IV regression task::
+
+        from repro.core import (FLTopology, FaultSchedule,
+                                ParticipationSchedule, TopologySchedule,
+                                init_dfl_state, make_engine)
+        from repro.data import make_regression_task
+        from repro.optim import sgd
+        import jax, jax.numpy as jnp
+
+        topo = FLTopology(num_servers=5, clients_per_server=5,
+                          t_client=25, t_server=10, graph_kind="ring")
+        task = make_regression_task(topo, seed=0)
+        engine = make_engine(
+            topo, task["loss_fn"], sgd(1e-3),
+            participation=ParticipationSchedule(kind="bernoulli", rate=0.5),
+            topology_schedule=TopologySchedule(kind="edge_drop",
+                                              drop_prob=0.3),
+            faults=FaultSchedule.parse("drop:10:2,rejoin:25:2"))
+        state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(1e-3),
+                               jax.random.key(0))
+        state, history = engine.run(state, epochs=40, batch_fn=task["batch_fn"])
+
+    ``history`` maps metric name -> per-epoch list (loss, disagreement,
+    drift, participation, num_servers, sigma_prod, and psum_min_weight
+    under ``mixing="push_sum"``)."""
     cfg = dfl.DFLConfig(topology=topology, consensus_mode=consensus_mode,
                         dynamic=True, **cfg_kw)
     return DynamicFederationEngine(

@@ -135,10 +135,21 @@ class TopologySchedule:
       ``straggler`` each epoch, ``n_weak`` uniformly-chosen links carry only
                     ``(1 - weaken)`` of their weight (the rest returns to the
                     endpoint self-loops) — slow links, not dead ones.
+      ``asymmetric`` each epoch, every DIRECTION of every base-graph edge
+                    fails independently w.p. ``drop_prob`` (repaired back to
+                    strong connectivity when ``ensure_connected``), and the
+                    emitted A_p is the ROW-stochastic
+                    ``topology.out_degree_weights`` of the surviving
+                    digraph.  Only meaningful with a push-sum (or explicit
+                    row-stochastic-baseline) consensus path — see
+                    ``dfl.DFLConfig.mixing``.
 
-    Every emitted A_p is symmetric doubly stochastic (Eq. 6 without the
-    fixed-support clause), so each epoch's gossip still preserves the server
-    mean; contraction over a run is tracked by ``SigmaTracker``.
+    Under the first three kinds every emitted A_p is symmetric doubly
+    stochastic (Eq. 6 without the fixed-support clause), so each epoch's
+    gossip preserves the server mean; under ``asymmetric`` the A_p are only
+    row stochastic and plain gossip is biased — push-sum's ratio read-out
+    restores the mean.  Contraction over a run is tracked by
+    ``SigmaTracker`` (mode="push_sum" for the asymmetric case).
     """
 
     kind: str = "static"
@@ -149,7 +160,7 @@ class TopologySchedule:
     seed: int = 0
 
     def __post_init__(self):
-        if self.kind not in ("static", "edge_drop", "straggler"):
+        if self.kind not in ("static", "edge_drop", "straggler", "asymmetric"):
             raise ValueError(f"unknown topology schedule kind {self.kind!r}")
 
     def mixing(self, topo: FLTopology, epoch: int) -> np.ndarray:
@@ -161,6 +172,13 @@ class TopologySchedule:
         if self.kind == "static":
             return topo.mixing_matrix()
         rng = np.random.default_rng((self.seed, epoch))
+        if self.kind == "asymmetric":
+            adj = tp.random_direction_drop(
+                topo.adjacency(), self.drop_prob, rng,
+                ensure_strong=self.ensure_connected)
+            a = tp.out_degree_weights(adj)
+            tp.check_row_stochastic(a, adj)
+            return a
         if self.kind == "edge_drop":
             adj = tp.random_edge_drop(topo.adjacency(), self.drop_prob, rng,
                                       ensure_connected=self.ensure_connected)
@@ -181,21 +199,36 @@ class TopologySchedule:
 class SigmaTracker:
     """Host-side product-contraction tracking for time-varying gossip.
 
-    Accumulates P <- A_p^{T_S} P across epochs; ``sigma()`` is
-    ``||P - 11'/M||_2`` — the factor by which initial server disagreement
-    has provably contracted so far (Lemma 1 with a matrix product in place
-    of a power).  Reset on topology surgery (M changes)."""
+    mode="average" (symmetric/doubly-stochastic gossip): accumulates
+    P <- A_p^{T_S} P across epochs; ``sigma()`` is ``||P - 11'/M||_2`` — the
+    factor by which initial server disagreement has provably contracted so
+    far (Lemma 1 with a matrix product in place of a power).
 
-    def __init__(self, m: int):
+    mode="push_sum" (directed, row-stochastic A_p): accumulates the
+    column-stochastic product P <- (A_p')^{T_S} P and ``sigma()`` is
+    ``topology.push_sum_deviation(P)`` — the contraction of the ratio
+    read-out, which -> 0 under joint strong connectivity even though P
+    itself converges to a skewed rank-one ``v 1'``.
+
+    Reset on topology surgery (M changes)."""
+
+    def __init__(self, m: int, mode: str = "average"):
+        if mode not in ("average", "push_sum"):
+            raise ValueError(f"unknown SigmaTracker mode {mode!r}")
         self.m = m
+        self.mode = mode
         self.prod = np.eye(m)
 
     def update(self, a: np.ndarray, t_server: int) -> float:
-        self.prod = (np.linalg.matrix_power(np.asarray(a, np.float64),
-                                            t_server) @ self.prod)
+        op = np.asarray(a, np.float64)
+        if self.mode == "push_sum":
+            op = op.T
+        self.prod = np.linalg.matrix_power(op, t_server) @ self.prod
         return self.sigma()
 
     def sigma(self) -> float:
+        if self.mode == "push_sum":
+            return tp.push_sum_deviation(self.prod)
         return tp.consensus_deviation(self.prod)
 
 
@@ -226,8 +259,25 @@ class FaultSchedule:
 
     @staticmethod
     def parse(spec: str) -> "FaultSchedule":
-        """Parse ``"drop:EPOCH:SERVER,rejoin:EPOCH:SERVER,..."`` (the CLI
-        surface of ``launch/train.py``)."""
+        """Parse the CLI fault grammar of ``launch/train.py --faults``.
+
+        Grammar (comma-separated events, whitespace around events ignored)::
+
+            spec   ::= "" | event ("," event)*
+            event  ::= kind ":" EPOCH ":" SERVER
+            kind   ::= "drop" | "rejoin"
+
+        where ``EPOCH`` and ``SERVER`` are non-negative decimal integers:
+        the event fires at the START of epoch ``EPOCH`` (before that
+        epoch's local period), and ``SERVER`` is an ORIGINAL server index —
+        stable across surgeries, so ``"drop:5:2,rejoin:9:2"`` drops server
+        2 at epoch 5 and re-admits the SAME server (with its own clients'
+        data shards) at epoch 9.  A rejoined server re-enters at the last
+        row position with the survivors' mean model.  Events need not be
+        sorted; several events may share an epoch and are applied in spec
+        order.  The empty string parses to an empty schedule.  Malformed
+        events (wrong field count, non-numeric epoch/server, unknown kind)
+        raise ``ValueError``."""
         events = []
         for part in filter(None, (s.strip() for s in spec.split(","))):
             fields = part.split(":")

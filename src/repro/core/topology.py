@@ -85,17 +85,127 @@ def torus_2d_graph(rows: int, cols: int) -> np.ndarray:
     return adj
 
 
+# ---------------------------------------------------------------------------
+# directed graphs (adj[i, j] = True means a link i -> j exists)
+#
+# An undirected graph is the special case adj == adj.T; everything below
+# also accepts that, treating each undirected edge as a bidirectional pair.
+# ---------------------------------------------------------------------------
+
+
+def directed_ring(m: int) -> np.ndarray:
+    """Directed cycle 0 -> 1 -> ... -> m-1 -> 0 (strongly connected; its
+    out-degree matrix happens to be doubly stochastic because every node has
+    out-degree exactly 1 — add chords or drop directions to break that)."""
+    adj = np.zeros((m, m), dtype=bool)
+    if m >= 2:
+        idx = np.arange(m)
+        adj[idx, (idx + 1) % m] = True
+    return adj
+
+
+def is_directed(adj: np.ndarray) -> bool:
+    """True when some link exists in only one direction."""
+    return bool((adj != adj.T).any())
+
+
+def is_strongly_connected(adj: np.ndarray) -> bool:
+    """Directed Assumption-1 check: every server reaches every other along
+    link directions.  BFS from node 0 along out-edges and along in-edges
+    (reachability in the reverse graph); both covering all nodes is
+    equivalent to strong connectivity.  Degenerates to ``is_connected`` on a
+    symmetric adjacency."""
+    if not is_directed(adj):
+        return is_connected(adj)
+    return _reaches_all(adj) and _reaches_all(adj.T)
+
+
+def _reaches_all(adj: np.ndarray) -> bool:
+    m = adj.shape[0]
+    if m == 0:
+        return False
+    seen = np.zeros(m, dtype=bool)
+    seen[0] = True
+    frontier = [0]
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for u in np.nonzero(adj[v])[0]:
+                if not seen[u]:
+                    seen[u] = True
+                    nxt.append(u)
+        frontier = nxt
+    return bool(seen.all())
+
+
+def random_orientation(adj: np.ndarray, rng: np.random.Generator,
+                       ensure_strong: bool = True) -> np.ndarray:
+    """Randomly orient every undirected edge (keep exactly one direction).
+
+    Models the realistic degraded regime where each physical link works in
+    only one direction.  With ``ensure_strong`` the orientation is repaired
+    by re-adding reverse directions (in random order) until the digraph is
+    strongly connected — push-sum's Assumption-1 analogue."""
+    iu, ju = np.nonzero(np.triu(adj | adj.T, 1))
+    out = np.zeros_like(adj)
+    flip = rng.random(iu.size) < 0.5
+    out[np.where(flip, iu, ju), np.where(flip, ju, iu)] = True
+    if ensure_strong and adj.shape[0] > 1 and not is_strongly_connected(out):
+        order = rng.permutation(iu.size)
+        for e in order:
+            out[iu[e], ju[e]] = out[ju[e], iu[e]] = True
+            if is_strongly_connected(out):
+                break
+    return out
+
+
+def random_direction_drop(adj: np.ndarray, drop_prob: float,
+                          rng: np.random.Generator,
+                          ensure_strong: bool = True) -> np.ndarray:
+    """Asymmetric link degradation: drop each DIRECTION of each edge
+    independently with probability ``drop_prob`` — the failure mode (radio
+    interference, one-sided congestion) that breaks the symmetry Eq. 6
+    assumes.  An edge can lose one direction (becomes directed), both
+    (vanishes), or neither.  With ``ensure_strong`` dropped directions are
+    re-added (random order) until the digraph is strongly connected.
+
+    Works on directed bases too: only directions PRESENT in ``adj`` are
+    candidates (a symmetric adjacency already lists both directions of
+    every edge as separate nonzero entries), so degradation can never add
+    a reverse link the base graph does not have."""
+    di, dj = np.nonzero(adj)
+    keep = rng.random(di.size) >= drop_prob
+    out = np.zeros_like(adj)
+    out[di[keep], dj[keep]] = True
+    if ensure_strong and adj.shape[0] > 1 and not is_strongly_connected(out):
+        dropped = np.nonzero(~keep)[0]
+        rng.shuffle(dropped)
+        for e in dropped:
+            out[di[e], dj[e]] = True
+            if is_strongly_connected(out):
+                break
+    return out
+
+
 GRAPH_BUILDERS = {
     "ring": ring_graph,
     "complete": complete_graph,
     "star": star_graph,
     "line": line_graph,
+    "directed_ring": directed_ring,
 }
 
 
 def build_graph(kind: str, m: int, **kw) -> np.ndarray:
     if kind == "erdos_renyi":
         return erdos_renyi_graph(m, kw.get("p", 0.5), kw.get("seed", 0))
+    if kind == "random_orientation":
+        # one-way degraded links: a random strongly-connected orientation of
+        # an undirected base family (the generic non-doubly-stochasticisable
+        # directed scenario; out-degrees are unequal, so naive row-stochastic
+        # gossip on it is biased — see consensus.gossip_push_sum)
+        base = build_graph(kw.get("base", "complete"), m)
+        return random_orientation(base, np.random.default_rng(kw.get("seed", 0)))
     if kind == "torus":
         rows = kw.get("rows")
         if rows is not None:
@@ -175,6 +285,87 @@ def check_mixing_matrix(a: np.ndarray, adj: Optional[np.ndarray] = None,
         off = ~np.eye(m, dtype=bool)
         if ((a > atol) & off & ~adj).any():
             raise ValueError("positive weight on a non-edge")
+
+
+def out_degree_weights(adj: np.ndarray) -> np.ndarray:
+    """Row-stochastic mixing weights for a (possibly directed) graph:
+
+        a[i, j] = 1 / (1 + outdeg(i))   for each link i -> j,
+        a[i, i] = 1 / (1 + outdeg(i)),
+
+    the directed analogue of ``uniform_weights``: node i splits its mass
+    uniformly over its out-neighbourhood plus itself, using only LOCAL
+    out-degree knowledge.  Rows always sum to 1; columns sum to 1 only when
+    every node has equal out-degree (e.g. a plain directed ring), so in
+    general this matrix is NOT doubly stochastic: applied naively
+    (``consensus.gossip_scan``) it drives all servers to the Perron-weighted
+    average ``pi' W`` rather than the uniform mean — the bias push-sum
+    (``consensus.gossip_push_sum``) corrects."""
+    m = adj.shape[0]
+    a = np.zeros((m, m))
+    outdeg = adj.sum(1)
+    for i in range(m):
+        share = 1.0 / (1.0 + outdeg[i])
+        a[i, np.nonzero(adj[i])[0]] = share
+        a[i, i] = share
+    return a
+
+
+def check_row_stochastic(a: np.ndarray, adj: Optional[np.ndarray] = None,
+                         atol: float = 1e-10) -> None:
+    """Validate a directed-gossip mixing matrix: rows sum to 1, entries
+    non-negative, positive diagonal (aperiodicity / self-loops), and support
+    inside the directed graph when ``adj`` is given.  The column-sum clause
+    of Eq. 6 is deliberately NOT required — that is the point of the
+    directed regime."""
+    m = a.shape[0]
+    if not np.allclose(a.sum(1), 1.0, atol=atol):
+        raise ValueError("rows must sum to 1")
+    if (a < -atol).any():
+        raise ValueError("entries must be non-negative")
+    if (np.diag(a) <= atol).any():
+        raise ValueError("diagonal must be positive (self-loops)")
+    if adj is not None:
+        off = ~np.eye(m, dtype=bool)
+        if ((a > atol) & off & ~adj).any():
+            raise ValueError("positive weight on a non-edge")
+
+
+def perron_weights(a: np.ndarray) -> np.ndarray:
+    """The left Perron vector pi of a row-stochastic A (pi' A = pi',
+    pi >= 0, sum pi = 1): the stationary weighting that naive gossip
+    converges to (``A^t -> 1 pi'``).  Uniform iff A is doubly stochastic."""
+    ev, vec = np.linalg.eig(np.asarray(a, np.float64).T)
+    k = int(np.argmin(np.abs(ev - 1.0)))
+    pi = np.real(vec[:, k])
+    pi = np.abs(pi)
+    return pi / pi.sum()
+
+
+def push_sum_deviation(p: np.ndarray) -> float:
+    """Contraction of the push-sum RATIO map after mixing with a
+    column-stochastic product ``P``: each server's ratio is
+
+        z_i = (P x)_i / (P 1)_i = (row-normalised P · x)_i,
+
+    so the effective averaging operator on the values is P with each row
+    divided by its sum — row-stochastic by construction — and its distance
+    to exact averaging is ``||rownorm(P) - 11'/M||_2``.  As P approaches its
+    rank-one limit ``v 1'`` (column sums are preserved, so sum v = 1) the
+    row-normalisation cancels v exactly and this deviation -> 0: the ratio
+    is unbiased even though P itself never approaches ``11'/M``."""
+    rows = p.sum(1, keepdims=True)
+    if (rows <= 0).any():
+        raise ValueError("push-sum product has a non-positive weight row")
+    return consensus_deviation(p / rows)
+
+
+def sigma_push_sum(a: np.ndarray, t_s: int) -> float:
+    """Push-sum analogue of ``sigma_a``: contraction of the ratio map after
+    T_S rounds of mixing with ``P = A'`` (the column-stochastic transpose of
+    the row-stochastic A — see ``consensus.gossip_push_sum``)."""
+    p = np.linalg.matrix_power(np.asarray(a, np.float64).T, t_s)
+    return push_sum_deviation(p)
 
 
 def consensus_deviation(p: np.ndarray) -> float:
@@ -283,7 +474,7 @@ class FLTopology:
     t_client: int                    # T_C
     t_server: int                    # T_S
     graph_kind: str = "ring"
-    mixing: str = "metropolis"       # metropolis | uniform
+    mixing: str = "metropolis"       # metropolis | uniform | out_degree
     intra_client_replicas: int = 1   # R: FSDP degree inside one client
 
     def __post_init__(self):
@@ -291,19 +482,38 @@ class FLTopology:
             raise ValueError("need at least 1 server and 1 client")
         if self.t_client < 1 or self.t_server < 0:
             raise ValueError("T_C >= 1, T_S >= 0")
+        if self.mixing not in ("metropolis", "uniform", "out_degree"):
+            raise ValueError(f"unknown mixing weights {self.mixing!r}")
         adj = self.adjacency()
         if adj.shape[0] != self.num_servers:
             raise ValueError(f"graph family {self.graph_kind!r} built "
                              f"{adj.shape[0]} nodes for M={self.num_servers}")
-        if self.num_servers > 1 and not is_connected(adj):
-            raise ValueError("Assumption 1 violated: server graph must be connected")
+        if self.num_servers > 1 and not is_strongly_connected(adj):
+            raise ValueError("Assumption 1 violated: server graph must be "
+                             "(strongly) connected")
+        if is_directed(adj) and self.mixing != "out_degree":
+            raise ValueError(
+                f"graph family {self.graph_kind!r} is directed: symmetric "
+                f"{self.mixing!r} weights cannot satisfy Eq. 6 on it — use "
+                f"mixing='out_degree' (row-stochastic) with a push-sum "
+                f"consensus path")
 
     # -- graph/mixing --------------------------------------------------------
     def adjacency(self) -> np.ndarray:
         return build_graph(self.graph_kind, self.num_servers)
 
+    @property
+    def directed(self) -> bool:
+        """True when some server link exists in only one direction (the
+        regime where the mixing matrix is row- but not doubly stochastic)."""
+        return is_directed(self.adjacency())
+
     def mixing_matrix(self) -> np.ndarray:
         adj = self.adjacency()
+        if self.mixing == "out_degree":
+            a = out_degree_weights(adj)
+            check_row_stochastic(a, adj)
+            return a
         a = metropolis_weights(adj) if self.mixing == "metropolis" else uniform_weights(adj)
         check_mixing_matrix(a, adj)
         return a
@@ -311,7 +521,12 @@ class FLTopology:
     def sigma(self) -> float:
         if self.num_servers == 1:
             return 0.0
-        return sigma_a(self.mixing_matrix(), self.t_server)
+        a = self.mixing_matrix()
+        if self.mixing == "out_degree":
+            # row-stochastic A: the meaningful contraction is that of the
+            # push-sum ratio map, not of A^{T_S} itself
+            return sigma_push_sum(a, self.t_server)
+        return sigma_a(a, self.t_server)
 
     # -- sizes ---------------------------------------------------------------
     @property
@@ -354,7 +569,8 @@ class FLTopology:
             raise ValueError("cannot drop the only server")
         keep = np.array([i for i in range(m) if i != server_idx])
         sub = self.adjacency()[np.ix_(keep, keep)]
-        kind = self.graph_kind if is_connected(sub) else "ring"
+        fallback = "directed_ring" if self.directed else "ring"
+        kind = self.graph_kind if is_strongly_connected(sub) else fallback
         new = dataclasses.replace(self, num_servers=m - 1, graph_kind=kind)
         return new, keep
 

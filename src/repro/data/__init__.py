@@ -1,6 +1,8 @@
 from repro.data.pipeline import (DataConfig, FLDataPipeline,
                                  make_regression_data, make_regression_task,
-                                 RegressionSpec, synthetic_lm_batch)
+                                 perron_ideal, RegressionSpec,
+                                 synthetic_lm_batch)
 
 __all__ = ["DataConfig", "FLDataPipeline", "make_regression_data",
-           "make_regression_task", "RegressionSpec", "synthetic_lm_batch"]
+           "make_regression_task", "perron_ideal", "RegressionSpec",
+           "synthetic_lm_batch"]

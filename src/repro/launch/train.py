@@ -29,12 +29,19 @@ from repro.optim import sgd
 
 
 def _setup_lm(arch_id, smoke, servers, clients, t_client, t_server, graph,
-              gamma, seq_len, per_client_batch, seed, attn_impl):
+              gamma, seq_len, per_client_batch, seed, attn_impl,
+              mixing="symmetric"):
     """Shared trainer scaffolding: arch config, topology, loss, optimizer,
-    data pipeline (used by both the static and the dynamic driver)."""
+    data pipeline (used by both the static and the dynamic driver).
+
+    ``mixing`` is the DFLConfig interpretation (symmetric | row_stochastic |
+    push_sum); the directed paths need row-stochastic out-degree weights on
+    the topology, symmetric gossip needs Metropolis weights."""
     cfg = get_smoke(arch_id) if smoke else get_arch(arch_id)
+    topo_mixing = "out_degree" if mixing != "symmetric" else "metropolis"
     topo = FLTopology(num_servers=servers, clients_per_server=clients,
-                      t_client=t_client, t_server=t_server, graph_kind=graph)
+                      t_client=t_client, t_server=t_server, graph_kind=graph,
+                      mixing=topo_mixing)
     opts = tf.ApplyOptions(remat=False, attn_impl=attn_impl)
     loss_fn = tf.make_loss_fn(cfg, opts)
     optimizer = sgd(gamma)
@@ -49,13 +56,14 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
           clients: int = 2, t_client: int = 4, t_server: int = 5,
           epochs: int = 3, seq_len: int = 128, per_client_batch: int = 2,
           gamma: float = 0.05, graph: str = "ring",
-          consensus_mode: str = "gossip",
+          consensus_mode: str = "gossip", mixing: str = "symmetric",
           ckpt_dir: Optional[str] = None, seed: int = 0,
           log_every: int = 1, attn_impl: str = "reference") -> dict:
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
         arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
-        seq_len, per_client_batch, seed, attn_impl)
-    dfl_cfg = DFLConfig(topology=topo, consensus_mode=consensus_mode)
+        seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
+    dfl_cfg = DFLConfig(topology=topo, consensus_mode=consensus_mode,
+                        mixing=mixing)
     step = jax.jit(build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer),
                    donate_argnums=(0,))
 
@@ -87,22 +95,25 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                   clients: int = 2, t_client: int = 4, t_server: int = 5,
                   epochs: int = 3, seq_len: int = 128, per_client_batch: int = 2,
                   gamma: float = 0.05, graph: str = "ring",
-                  consensus_mode: str = "gossip",
+                  consensus_mode: str = "gossip", mixing: str = "symmetric",
                   participation_rate: float = 1.0,
                   participation_kind: str = "bernoulli",
                   edge_drop_prob: float = 0.0,
                   straggler_weaken: float = 0.0,
+                  asymmetric_drop_prob: float = 0.0,
                   faults: str = "",
                   ckpt_dir: Optional[str] = None,
                   seed: int = 0, log_every: int = 1,
                   attn_impl: str = "reference") -> dict:
     """Dynamic-federation LM training: the same Algorithm-1 cycle driven by
     the scenario engine — partial client participation, per-epoch degraded
-    server graphs, and scheduled server failure/rejoin (``faults`` is the
-    ``"drop:EPOCH:SERVER,rejoin:EPOCH:SERVER"`` CLI syntax)."""
+    server graphs, scheduled server failure/rejoin (``faults`` is the
+    ``"drop:EPOCH:SERVER,rejoin:EPOCH:SERVER"`` CLI syntax), and directed
+    degradation (``asymmetric_drop_prob`` fails individual link DIRECTIONS
+    per epoch; pair it with ``mixing="push_sum"`` for unbiased consensus)."""
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
         arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
-        seq_len, per_client_batch, seed, attn_impl)
+        seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
 
     if participation_rate >= 1.0:
         part = ParticipationSchedule()                     # full
@@ -113,7 +124,11 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
         part = ParticipationSchedule(
             kind=participation_kind,
             k=max(1, round(participation_rate * clients)), seed=seed)
-    if edge_drop_prob > 0.0:
+    if asymmetric_drop_prob > 0.0:
+        tsched = TopologySchedule(kind="asymmetric",
+                                  drop_prob=asymmetric_drop_prob,
+                                  seed=seed + 1)
+    elif edge_drop_prob > 0.0:
         tsched = TopologySchedule(kind="edge_drop", drop_prob=edge_drop_prob,
                                   seed=seed + 1)
     elif straggler_weaken > 0.0:
@@ -122,7 +137,7 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
     else:
         tsched = TopologySchedule()                        # static
     engine = make_engine(topo, loss_fn, optimizer,
-                         consensus_mode=consensus_mode,
+                         consensus_mode=consensus_mode, mixing=mixing,
                          participation=part, topology_schedule=tsched,
                          faults=FaultSchedule.parse(faults))
 
@@ -169,10 +184,17 @@ def main() -> None:
     p.add_argument("--batch", type=int, default=2)
     p.add_argument("--gamma", type=float, default=0.05)
     p.add_argument("--graph", default="ring",
-                   choices=("ring", "complete", "star", "line", "erdos_renyi"))
+                   choices=("ring", "complete", "star", "line", "erdos_renyi",
+                            "directed_ring", "random_orientation"))
     p.add_argument("--consensus-mode", default="gossip",
                    choices=("gossip", "collapsed", "chebyshev", "exact_mean",
                             "none"))
+    p.add_argument("--mixing", default="symmetric",
+                   choices=("symmetric", "row_stochastic", "push_sum"),
+                   help="consensus interpretation of the mixing matrix: "
+                        "symmetric doubly-stochastic gossip (the paper), "
+                        "naive row-stochastic gossip (directed, biased), or "
+                        "push-sum ratio consensus (directed, unbiased)")
     p.add_argument("--ckpt-dir", default=None)
     dyn = p.add_argument_group(
         "dynamic federation (any of these switches to the scenario engine)")
@@ -186,6 +208,10 @@ def main() -> None:
     dyn.add_argument("--straggler-weaken", type=float, default=0.0,
                      help="weight fraction removed from one random link "
                           "per epoch (slow links)")
+    dyn.add_argument("--asymmetric-drop-prob", type=float, default=0.0,
+                     help="per-epoch probability that each link DIRECTION "
+                          "fails independently (directed degradation; "
+                          "combine with --mixing push_sum)")
     dyn.add_argument("--faults", default="",
                      help="server fault schedule, e.g. 'drop:5:1,rejoin:9:1'")
     args = p.parse_args()
@@ -194,15 +220,17 @@ def main() -> None:
               epochs=args.epochs, seq_len=args.seq_len,
               per_client_batch=args.batch, gamma=args.gamma,
               graph=args.graph, consensus_mode=args.consensus_mode,
-              ckpt_dir=args.ckpt_dir)
+              mixing=args.mixing, ckpt_dir=args.ckpt_dir)
     dynamic = (args.participation_rate < 1.0 or args.edge_drop_prob > 0.0
-               or args.straggler_weaken > 0.0 or bool(args.faults))
+               or args.straggler_weaken > 0.0
+               or args.asymmetric_drop_prob > 0.0 or bool(args.faults))
     if dynamic:
         train_dynamic(args.arch,
                       participation_rate=args.participation_rate,
                       participation_kind=args.participation_kind,
                       edge_drop_prob=args.edge_drop_prob,
                       straggler_weaken=args.straggler_weaken,
+                      asymmetric_drop_prob=args.asymmetric_drop_prob,
                       faults=args.faults, **kw)
     else:
         train(args.arch, **kw)

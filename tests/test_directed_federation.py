@@ -1,0 +1,408 @@
+"""Directed gossip: row-stochastic mixing is biased, push-sum is not.
+
+Covers the directed topology layer (orientation, asymmetric degradation,
+out-degree weights, strong connectivity), the push-sum consensus
+primitives and their invariants (weights positive / sum to M, exact
+degeneration to symmetric gossip), the DFLConfig(mixing=...) paths, and
+the engine's weight reset on server drop/rejoin."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DFLConfig, FLTopology, FaultEvent, FaultSchedule,
+                        SigmaTracker, TopologySchedule, build_dfl_epoch_step,
+                        init_dfl_state, make_engine)
+from repro.core import consensus as cns
+from repro.core import topology as tp
+from repro.data import RegressionSpec, make_regression_task
+from repro.optim import sgd
+
+
+def _skewed_digraph(m=5):
+    """Directed ring + a chord out of node 0: strongly connected with
+    unequal out-degrees, so the out-degree matrix is row- but NOT doubly
+    stochastic and its Perron vector is provably non-uniform."""
+    adj = tp.directed_ring(m)
+    adj[0, 2] = True
+    return adj
+
+
+def _tree(m, key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (m, 4, 3)),
+            "b": jax.random.normal(k2, (m, 7))}
+
+
+# ---------------------------------------------------------------------------
+# directed topology layer
+# ---------------------------------------------------------------------------
+
+
+def test_directed_ring_and_strong_connectivity():
+    adj = tp.directed_ring(5)
+    assert tp.is_directed(adj)
+    assert tp.is_strongly_connected(adj)
+    # removing one link of a directed cycle kills strong connectivity
+    broken = adj.copy()
+    broken[1, 2] = False
+    assert not tp.is_strongly_connected(broken)
+    # undirected delegates to plain connectivity
+    assert tp.is_strongly_connected(tp.ring_graph(5))
+    assert not tp.is_strongly_connected(np.zeros((3, 3), bool))
+
+
+def test_random_orientation_repair_and_determinism():
+    base = tp.complete_graph(6)
+    for seed in range(5):
+        adj = tp.random_orientation(base, np.random.default_rng(seed))
+        assert tp.is_strongly_connected(adj)
+        # orientation only uses base edges
+        assert not (adj & ~(base | base.T)).any()
+    a1 = tp.random_orientation(base, np.random.default_rng(3))
+    a2 = tp.random_orientation(base, np.random.default_rng(3))
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_random_direction_drop_repairs_to_strong_connectivity():
+    base = tp.ring_graph(6)
+    for seed in range(5):
+        adj = tp.random_direction_drop(base, 0.5,
+                                       np.random.default_rng(seed))
+        assert tp.is_strongly_connected(adj)
+        assert not (adj & ~(base | base.T)).any()
+    # with repair off, heavy drop rates may disconnect — and a drop rate of
+    # 1 with repair must still return something strongly connected
+    adj = tp.random_direction_drop(base, 1.0, np.random.default_rng(0),
+                                   ensure_strong=True)
+    assert tp.is_strongly_connected(adj)
+    # on an already-directed base, degradation must never resurrect a
+    # reverse link the base graph does not have
+    dbase = _skewed_digraph()
+    for seed in range(5):
+        adj = tp.random_direction_drop(dbase, 0.5,
+                                       np.random.default_rng(seed))
+        assert not (adj & ~dbase).any()
+    np.testing.assert_array_equal(
+        tp.random_direction_drop(dbase, 0.0, np.random.default_rng(0)),
+        dbase)
+
+
+def test_out_degree_weights_row_stochastic_not_doubly():
+    adj = _skewed_digraph()
+    a = tp.out_degree_weights(adj)
+    tp.check_row_stochastic(a, adj)
+    np.testing.assert_allclose(a.sum(1), 1.0, atol=1e-12)
+    assert not np.allclose(a.sum(0), 1.0)      # NOT doubly stochastic
+    pi = tp.perron_weights(a)
+    assert pi.min() > 0 and abs(pi.sum() - 1.0) < 1e-9
+    assert np.abs(pi - 1.0 / 5).max() > 0.02   # non-uniform Perron vector
+    # plain directed ring: every out-degree equal -> doubly stochastic,
+    # uniform Perron weights
+    a_ring = tp.out_degree_weights(tp.directed_ring(5))
+    np.testing.assert_allclose(a_ring.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(tp.perron_weights(a_ring), 0.2, atol=1e-9)
+
+
+def test_check_row_stochastic_rejects_bad_matrices():
+    with pytest.raises(ValueError, match="rows"):
+        tp.check_row_stochastic(np.array([[0.5, 0.4], [0.5, 0.5]]))
+    with pytest.raises(ValueError, match="non-negative"):
+        tp.check_row_stochastic(np.array([[1.5, -0.5], [0.5, 0.5]]))
+    with pytest.raises(ValueError, match="diagonal"):
+        tp.check_row_stochastic(np.array([[0.0, 1.0], [0.5, 0.5]]))
+    with pytest.raises(ValueError, match="non-edge"):
+        tp.check_row_stochastic(
+            np.array([[0.5, 0.5], [0.5, 0.5]]),
+            np.array([[False, True], [False, False]]))
+
+
+def test_sigma_push_sum_contracts_where_sigma_a_does_not():
+    a = tp.out_degree_weights(_skewed_digraph())
+    # the ratio map contracts to exact averaging...
+    assert tp.sigma_push_sum(a, 50) < 1e-5
+    assert tp.sigma_push_sum(a, 50) < tp.sigma_push_sum(a, 5)
+    # ...while the raw row-stochastic power converges to 1 pi' != 11'/M
+    assert tp.sigma_a(a, 50) > 0.1
+
+
+def test_fltopology_directed_validation_and_sigma():
+    topo = FLTopology(num_servers=5, clients_per_server=2, t_client=3,
+                      t_server=25, graph_kind="directed_ring",
+                      mixing="out_degree")
+    assert topo.directed
+    tp.check_row_stochastic(topo.mixing_matrix(), topo.adjacency())
+    assert topo.sigma() < 0.1          # push-sum contraction, not sigma_a
+    with pytest.raises(ValueError, match="directed"):
+        FLTopology(num_servers=5, clients_per_server=2, t_client=3,
+                   t_server=2, graph_kind="directed_ring")
+    with pytest.raises(ValueError, match="unknown mixing"):
+        FLTopology(num_servers=3, clients_per_server=2, t_client=3,
+                   t_server=2, mixing="bogus")
+    # drop_server on a directed family falls back to a DIRECTED ring
+    new, keep = topo.drop_server(2)
+    assert new.num_servers == 4 and new.directed
+
+
+# ---------------------------------------------------------------------------
+# push-sum consensus primitives
+# ---------------------------------------------------------------------------
+
+
+def test_push_sum_matches_gossip_on_doubly_stochastic(rng_key):
+    """Degeneration: with Eq. 6 weights the push-sum weight stays 1 and the
+    ratio equals plain gossip to fp32 tolerance."""
+    m, t_s = 5, 9
+    a = jnp.asarray(tp.metropolis_weights(tp.ring_graph(m)), jnp.float32)
+    tree = _tree(m, rng_key)
+    ps = cns.gossip_push_sum(a, cns.init_push_sum(tree), t_s)
+    ref = cns.gossip_scan(a, tree, t_s)
+    np.testing.assert_allclose(np.asarray(ps.weight), 1.0, rtol=1e-5)
+    for l1, l2 in zip(jax.tree.leaves(ps.ratio()), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_push_sum_unbiased_where_naive_row_stochastic_is_biased(rng_key):
+    """The tentpole claim, at the primitive level: on a skewed digraph,
+    naive gossip converges to the Perron-weighted average pi'x (NOT the
+    mean), push-sum's ratio converges to the exact mean."""
+    a_np = tp.out_degree_weights(_skewed_digraph())
+    pi = tp.perron_weights(a_np)
+    a = jnp.asarray(a_np, jnp.float32)
+    x = jax.random.normal(rng_key, (5, 11))
+    mean = np.asarray(x).mean(0)
+    biased = pi @ np.asarray(x)
+    gap = np.abs(biased - mean).max()
+    assert gap > 0.01                                 # the bias is real
+
+    naive = np.asarray(cns.gossip_scan(a, {"w": x}, 200)["w"])
+    np.testing.assert_allclose(naive, np.broadcast_to(biased, naive.shape),
+                               atol=1e-4)            # lands on pi'x ...
+    assert np.abs(naive - mean).max() > 0.5 * gap    # ... away from mean
+
+    ps = cns.gossip_push_sum(a, cns.init_push_sum({"w": x}), 200)
+    ratio = np.asarray(ps.ratio()["w"])
+    np.testing.assert_allclose(ratio, np.broadcast_to(mean, ratio.shape),
+                               atol=1e-4)            # unbiased
+
+
+def test_push_sum_weight_invariants_across_rounds(rng_key):
+    """Weights stay positive and sum to M at every round."""
+    m = 5
+    a = jnp.asarray(tp.out_degree_weights(_skewed_digraph()), jnp.float32)
+    tree = {"w": jax.random.normal(rng_key, (m, 3))}
+    for t in range(1, 12):
+        ps = cns.gossip_push_sum(a, cns.init_push_sum(tree), t)
+        w = np.asarray(ps.weight)
+        assert (w > 0).all(), (t, w)
+        np.testing.assert_allclose(w.sum(), m, rtol=1e-5)
+        # numerator sum is preserved too (column-stochastic mixing)
+        np.testing.assert_allclose(np.asarray(ps.values["w"]).sum(0),
+                                   np.asarray(tree["w"]).sum(0), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_push_sum_tv_matches_fixed_and_stays_unbiased(rng_key):
+    m = 5
+    a = jnp.asarray(tp.out_degree_weights(_skewed_digraph()), jnp.float32)
+    tree = {"w": jax.random.normal(rng_key, (m, 7))}
+    stack = jnp.broadcast_to(a, (6, m, m))
+    tv = cns.gossip_push_sum_tv(stack, cns.init_push_sum(tree))
+    fixed = cns.gossip_push_sum(a, cns.init_push_sum(tree), 6)
+    np.testing.assert_array_equal(np.asarray(tv.weight),
+                                  np.asarray(fixed.weight))
+    np.testing.assert_array_equal(np.asarray(tv.values["w"]),
+                                  np.asarray(fixed.values["w"]))
+    # genuinely time-varying digraphs: many rounds of alternating graphs
+    # still read out the exact mean
+    mats = [tp.out_degree_weights(_skewed_digraph()),
+            tp.out_degree_weights(tp.directed_ring(m)),
+            tp.out_degree_weights(tp.random_orientation(
+                tp.complete_graph(m), np.random.default_rng(1)))]
+    stack = jnp.asarray(np.stack([mats[i % 3] for i in range(60)]),
+                        jnp.float32)
+    out = cns.gossip_push_sum_tv(stack, cns.init_push_sum(tree))
+    mean = np.asarray(tree["w"]).mean(0)
+    np.testing.assert_allclose(np.asarray(out.ratio()["w"]),
+                               np.broadcast_to(mean, (m, 7)), atol=1e-4)
+
+
+def test_sigma_tracker_push_sum_mode():
+    a = tp.out_degree_weights(_skewed_digraph())
+    tr = SigmaTracker(5, mode="push_sum")
+    sig = [tr.update(a, 10) for _ in range(3)]
+    assert sig[0] > sig[1] > sig[2]
+    assert sig[-1] == pytest.approx(tp.sigma_push_sum(a, 30), abs=1e-9)
+    # average mode would (wrongly) report no contraction here
+    tr_avg = SigmaTracker(5, mode="average")
+    assert tr_avg.update(a, 30) > 0.1
+    with pytest.raises(ValueError, match="mode"):
+        SigmaTracker(5, mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# DFLConfig(mixing=...) paths
+# ---------------------------------------------------------------------------
+
+
+def _directed_topo(t_c=5, t_s=8):
+    return FLTopology(num_servers=5, clients_per_server=3, t_client=t_c,
+                      t_server=t_s, graph_kind="random_orientation",
+                      mixing="out_degree")
+
+
+def test_mixing_validation():
+    topo = _directed_topo()
+    loss = lambda w, b, r: (jnp.zeros(()), {})
+    with pytest.raises(ValueError, match="unknown mixing"):
+        build_dfl_epoch_step(DFLConfig(topology=topo, mixing="bogus"),
+                             loss, sgd(1e-3))
+    with pytest.raises(ValueError, match="Perron-weighted"):
+        build_dfl_epoch_step(DFLConfig(topology=topo), loss, sgd(1e-3))
+    with pytest.raises(ValueError, match="undefined"):
+        build_dfl_epoch_step(
+            DFLConfig(topology=topo, mixing="push_sum",
+                      consensus_mode="chebyshev"), loss, sgd(1e-3))
+    with pytest.raises(ValueError, match="consensus_override"):
+        build_dfl_epoch_step(
+            DFLConfig(topology=topo, mixing="push_sum",
+                      consensus_override=lambda t: t), loss, sgd(1e-3))
+    with pytest.raises(ValueError, match="asymmetric"):
+        make_engine(FLTopology(num_servers=3, clients_per_server=2,
+                               t_client=2, t_server=2), loss, sgd(1e-3),
+                    topology_schedule=TopologySchedule(kind="asymmetric",
+                                                       drop_prob=0.3))
+
+
+def test_push_sum_epoch_step_matches_symmetric_on_undirected():
+    """mixing='push_sum' over a doubly-stochastic topology reproduces the
+    symmetric epoch step to fp32 tolerance (and carries unit weights)."""
+    topo = FLTopology(num_servers=4, clients_per_server=3, t_client=5,
+                      t_server=6, graph_kind="ring")
+    task = make_regression_task(topo, seed=0)
+    opt = sgd(1e-3)
+    step_sym = jax.jit(build_dfl_epoch_step(
+        DFLConfig(topology=topo), task["loss_fn"], opt))
+    cfg_ps = DFLConfig(topology=topo, mixing="push_sum")
+    step_ps = jax.jit(build_dfl_epoch_step(cfg_ps, task["loss_fn"], opt))
+    st_sym = init_dfl_state(DFLConfig(topology=topo), jnp.zeros((2,)), opt,
+                            jax.random.key(0))
+    st_ps = init_dfl_state(cfg_ps, jnp.zeros((2,)), opt, jax.random.key(0))
+    assert st_ps.psum_weight.shape == (4,) and st_sym.psum_weight is None
+    for _ in range(3):
+        st_sym, _ = step_sym(st_sym, task["batches"])
+        st_ps, _ = step_ps(st_ps, task["batches"])
+    np.testing.assert_allclose(np.asarray(st_ps.client_params),
+                               np.asarray(st_sym.client_params),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(st_ps.psum_weight), 1.0,
+                               rtol=1e-5)
+
+
+def test_push_sum_collapsed_matches_gossip_rounds():
+    """consensus_mode='collapsed' under push_sum (one round with A^{T_S})
+    equals the T_S-round schedule."""
+    topo = _directed_topo()
+    task = make_regression_task(topo, seed=1)
+    opt = sgd(1e-3)
+    outs = {}
+    for mode in ("gossip", "collapsed"):
+        cfg = DFLConfig(topology=topo, mixing="push_sum",
+                        consensus_mode=mode)
+        step = jax.jit(build_dfl_epoch_step(cfg, task["loss_fn"], opt))
+        st = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+        st, _ = step(st, task["batches"])
+        outs[mode] = st
+    np.testing.assert_allclose(np.asarray(outs["gossip"].client_params),
+                               np.asarray(outs["collapsed"].client_params),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(outs["gossip"].psum_weight),
+                               np.asarray(outs["collapsed"].psum_weight),
+                               rtol=2e-5)
+
+
+def test_dfl_bias_end_to_end():
+    """Through the full DFL stack with per-server concept shift: naive
+    row-stochastic training is measurably biased away from w*, push-sum is
+    not (it matches the symmetric fixed point)."""
+    topo = FLTopology(num_servers=5, clients_per_server=3, t_client=15,
+                      t_server=25, graph_kind="random_orientation",
+                      mixing="out_degree")
+    task = make_regression_task(topo, RegressionSpec(concept_shift=2.0),
+                                seed=0)
+    gamma = 0.4 / (9.0 * topo.t_client)
+    errs = {}
+    for mixing in ("push_sum", "row_stochastic"):
+        cfg = DFLConfig(topology=topo, mixing=mixing)
+        step = jax.jit(build_dfl_epoch_step(cfg, task["loss_fn"],
+                                            sgd(gamma)))
+        st = init_dfl_state(cfg, jnp.zeros((2,)), sgd(gamma),
+                            jax.random.key(0))
+        for _ in range(60):
+            st, _ = step(st, task["batches"])
+        servers = np.asarray(st.client_params[:, 0])
+        errs[mixing] = float(
+            np.linalg.norm(servers - task["w_star"], axis=-1).max())
+    assert errs["row_stochastic"] > 1.5 * errs["push_sum"], errs
+    assert errs["push_sum"] < 0.2, errs
+
+
+# ---------------------------------------------------------------------------
+# engine: asymmetric schedules and weight reset on surgery
+# ---------------------------------------------------------------------------
+
+
+def test_engine_asymmetric_push_sum_converges():
+    base = FLTopology(num_servers=5, clients_per_server=3, t_client=15,
+                      t_server=12, graph_kind="ring")
+    task = make_regression_task(base, seed=0)
+    gamma = 0.4 / (9.0 * base.t_client)
+    engine = make_engine(base, task["loss_fn"], sgd(gamma),
+                         mixing="push_sum",
+                         topology_schedule=TopologySchedule(
+                             kind="asymmetric", drop_prob=0.4, seed=7))
+    state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(gamma),
+                           jax.random.key(0))
+    state, hist = engine.run(state, 60, task["batch_fn"])
+    servers = np.asarray(state.client_params[:, 0])
+    err = float(np.linalg.norm(servers - task["w_star"], axis=-1).max())
+    assert err < 0.3, err
+    assert hist["sigma_prod"][-1] < 1e-6           # push-sum tracker mode
+    assert 0.0 < hist["psum_min_weight"][-1] <= 1.0 + 1e-6
+
+
+def test_engine_drop_rejoin_resets_push_sum_weight():
+    base = FLTopology(num_servers=4, clients_per_server=2, t_client=4,
+                      t_server=6, graph_kind="ring")
+    task = make_regression_task(base, seed=0)
+    gamma = 1e-3
+    engine = make_engine(base, task["loss_fn"], sgd(gamma),
+                         mixing="push_sum",
+                         topology_schedule=TopologySchedule(
+                             kind="asymmetric", drop_prob=0.5, seed=3),
+                         faults=FaultSchedule((FaultEvent(2, "drop", 1),
+                                               FaultEvent(4, "rejoin", 1))))
+    state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(gamma),
+                           jax.random.key(0))
+    # run to just before the drop; weights are generally non-uniform now
+    for epoch in range(2):
+        state, _ = engine.run_epoch(state, epoch, task["batch_fn"])
+    assert state.psum_weight.shape == (4,)
+    # surgery itself resets the weights to ones at the NEW federation size
+    surgically = engine.apply_faults(state, 2)
+    assert surgically.psum_weight.shape == (3,)
+    np.testing.assert_array_equal(np.asarray(surgically.psum_weight), 1.0)
+    assert engine.alive == [0, 2, 3]
+    # the tracker was rebuilt in push_sum mode at the new size
+    assert engine._tracker.mode == "push_sum" and engine._tracker.m == 3
+    # continue through the rejoin via the normal loop
+    for epoch in range(3, 6):
+        state, rec = engine.run_epoch(surgically if epoch == 3 else state,
+                                      epoch, task["batch_fn"])
+    assert engine.alive == [0, 2, 3, 1]
+    assert state.psum_weight.shape == (4,)
+    assert (np.asarray(state.psum_weight) > 0).all()
+    np.testing.assert_allclose(np.asarray(state.psum_weight).sum(), 4.0,
+                               rtol=1e-5)
