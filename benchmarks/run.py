@@ -17,6 +17,10 @@ theory quantities the paper derives and our beyond-paper claims):
   directed_federation   symmetric vs naive row-stochastic (biased) vs
                         push-sum (unbiased) gossip under directed /
                         asymmetrically-degraded links
+  consensus_backends    einsum vs blocked vs shard_map consensus execution
+                        on the DYNAMIC engine (traced per-epoch A_p):
+                        peak-RSS + epoch throughput per backend, one clean
+                        subprocess each, plus cross-backend agreement
   kernel_micro          Pallas-kernel (interpret) vs jnp-oracle parity +
                         CPU wall time (correctness harness, not TPU perf)
   lm_epoch_throughput   DFL epoch wall time on a smoke LM (CPU reference)
@@ -337,6 +341,103 @@ def bench_directed_federation():
            bool(errs["naive_row_stochastic"] > 1.5 * errs["push_sum"]))
 
 
+def bench_consensus_backends():
+    """Consensus-execution backends on the dynamic engine at a gossip-bound
+    model size: einsum (reference per-leaf) vs blocked streaming vs
+    shard_map explicit collectives, each driven through the SAME edge_drop
+    schedule with a traced per-epoch A_p.  Each backend runs in its own
+    subprocess so ru_maxrss is a clean per-path peak; the parent checks the
+    paths agree on the final parameters (allclose) and records peak-RSS and
+    epoch throughput per backend."""
+    import json
+    import subprocess
+    import sys
+
+    child = r'''
+import os, sys, json, time, resource
+backend = sys.argv[1]
+if backend == "shard_map":
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                               + os.environ.get("XLA_FLAGS", ""))
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (FLTopology, TopologySchedule, init_dfl_state,
+                        make_engine)
+from repro.optim import sgd
+
+m, n, t_c, t_s, epochs, d = 4, 2, 2, 10, 5, 1_500_000
+topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                  t_server=t_s, graph_kind="ring")
+
+def loss_fn(w, batch, rng):
+    # gossip-bound toy objective over a wide parameter vector: the epoch
+    # cost is dominated by the consensus period, which is what we meter
+    return 0.5 * jnp.mean(w * w) + 0.0 * batch.sum(), {}
+
+def batch_fn(epoch, alive):
+    return jnp.zeros((t_c, len(alive), n, 1), jnp.float32)
+
+kw = {}
+if backend == "gossip_blocked":
+    kw["consensus_mode"] = "gossip_blocked"
+elif backend == "shard_map":
+    from repro.launch import sharding as shd
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(m), ("server",))
+    server_abs = jax.eval_shape(lambda: jnp.zeros((m, d), jnp.float32))
+    kw["consensus_backend"] = shd.fl_consensus_backend(
+        topo, mesh, server_abs, tp_axis=None)
+engine = make_engine(topo, loss_fn, sgd(1e-3),
+                     topology_schedule=TopologySchedule(
+                         kind="edge_drop", drop_prob=0.3, seed=7), **kw)
+params = jax.random.normal(jax.random.key(0), (d,), jnp.float32)
+state = init_dfl_state(engine.cfg, params, sgd(1e-3), jax.random.key(1))
+state, _ = engine.run_epoch(state, 0, batch_fn)      # compile outside timing
+t0 = time.time()
+for epoch in range(1, epochs):
+    state, _ = engine.run_epoch(state, epoch, batch_fn)
+wall = time.time() - t0
+servers = np.asarray(state.client_params[:, 0], np.float64)
+print(json.dumps({
+    "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024,
+    "epochs_per_s": (epochs - 1) / wall,
+    "checksum": [float(servers.sum()), float(np.abs(servers).max())],
+    "fingerprint": servers[:, ::100_000].tolist(),
+}))
+'''
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    results = {}
+    for backend in ("gossip", "gossip_blocked", "shard_map"):
+        r = subprocess.run([sys.executable, "-c", child, backend],
+                           capture_output=True, text=True, timeout=900,
+                           env={**os.environ, "PYTHONPATH": src})
+        if r.returncode != 0:
+            record("consensus_backends", f"{backend}_error",
+                   r.stderr.strip().splitlines()[-1][:120] if r.stderr
+                   else "failed")
+            continue
+        results[backend] = json.loads(r.stdout.strip().splitlines()[-1])
+        record("consensus_backends", f"{backend}_peak_rss_mb",
+               round(results[backend]["peak_rss_mb"], 1))
+        record("consensus_backends", f"{backend}_epochs_per_s",
+               round(results[backend]["epochs_per_s"], 3))
+    if "gossip" in results:
+        ref_fp = np.asarray(results["gossip"]["fingerprint"])
+        ref_ck = np.asarray(results["gossip"]["checksum"])
+        for backend in ("gossip_blocked", "shard_map"):
+            if backend in results:
+                diff = float(np.abs(
+                    np.asarray(results[backend]["fingerprint"])
+                    - ref_fp).max())
+                # the checksum ([sum, max|.|] over the FULL vector) catches
+                # divergence outside the strided fingerprint coordinates
+                ck = np.asarray(results[backend]["checksum"])
+                ck_ok = bool(np.allclose(ck, ref_ck, rtol=1e-5, atol=1e-3))
+                record("consensus_backends", f"{backend}_vs_einsum_maxdiff",
+                       f"{diff:.3e}")
+                record("consensus_backends", f"{backend}_agrees_with_einsum",
+                       bool(diff < 1e-4 and ck_ok))
+
+
 def bench_lm_epoch_throughput():
     from repro.launch.train import train
     t0 = time.time()
@@ -357,6 +458,7 @@ BENCHES = {
     "topology_sweep": bench_topology_sweep,
     "dynamic_federation": bench_dynamic_federation,
     "directed_federation": bench_directed_federation,
+    "consensus_backends": bench_consensus_backends,
     "kernel_micro": bench_kernel_micro,
     "lm_epoch_throughput": bench_lm_epoch_throughput,
 }

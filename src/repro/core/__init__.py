@@ -10,11 +10,14 @@ from repro.core.topology import (FLTopology, build_graph, is_connected,
                                  check_row_stochastic, perron_weights,
                                  push_sum_deviation, sigma_push_sum)
 from repro.core.consensus import (mix_pytree, gossip_scan, gossip_scan_tv,
-                                  gossip_collapsed, gossip_chebyshev,
-                                  collapse_mixing, chebyshev_coefficients,
-                                  make_ring_gossip, PushSumState,
+                                  gossip_scan_blocked, gossip_collapsed,
+                                  gossip_chebyshev, collapse_mixing,
+                                  chebyshev_coefficients, make_ring_gossip,
+                                  make_gossip_shard_map, PushSumState,
                                   init_push_sum, gossip_push_sum,
-                                  gossip_push_sum_tv)
+                                  gossip_push_sum_tv, gossip_push_sum_blocked,
+                                  ConsensusBackend, ShardMapBackend,
+                                  make_backend)
 from repro.core.dfl import (DFLConfig, DFLState, DFLMetrics,
                             build_dfl_epoch_step, build_fedavg_epoch_step,
                             build_local_only_epoch_step, init_dfl_state,

@@ -6,13 +6,15 @@ round is ``W <- A W`` applied leaf-wise:
 
     new_w[i] = a_ii * w[i] + sum_{j in N_i} a_ij * w[j]      (Eq. 5)
 
-Three execution strategies, all bit-identical in math:
+Execution strategies, all bit-identical in math:
 
 * ``gossip_scan``    — the *faithful* schedule: T_S sequential rounds
                        (lax.fori_loop), each an einsum over the server axis.
                        Under pjit with the server axis sharded this lowers to
                        one all-gather (or neighbour exchanges) per round —
                        exactly the paper's per-iteration message pattern.
+* ``gossip_scan_blocked`` — the same schedule streamed over fixed-size
+                       parameter blocks (deterministic working set).
 * ``gossip_collapsed`` — beyond-paper: precompute A_eff = A^{T_S} on the host
                        (M x M, trivial) and apply it in ONE round.  Output is
                        mathematically identical; collective rounds drop T_S x.
@@ -20,14 +22,31 @@ Three execution strategies, all bit-identical in math:
                        reaching the same contraction with ~sqrt fewer rounds;
                        useful when rounds must stay iterative (fault probing
                        between rounds).
+* ``make_gossip_shard_map`` — the production path: explicit blocked
+                       all-gathers under shard_map, taking the mixing matrix
+                       as a *traced operand* so one compiled program serves
+                       every per-epoch graph.
 
 ``ring_gossip_shard_map`` additionally shows the TPU-native neighbour
 exchange (lax.ppermute) for ring graphs under shard_map.
+
+**Consensus backends.**  ``ConsensusBackend`` wraps each strategy behind one
+interface consumed by ``dfl.build_dfl_epoch_step``:
+
+    backend.mix(server_tree, a_p)            T_S rounds of W <- A W
+    backend.mix_push_sum(state, a_p)         the ratio-consensus variant
+
+``a_p`` is an optional traced per-epoch ``(M, M)`` mixing matrix (dynamic
+federation); ``None`` selects the static topology matrix the backend was
+built with.  ``make_backend`` maps a ``DFLConfig.consensus_mode`` string to
+a backend; ``ShardMapBackend`` is mesh-aware and therefore constructed by
+the launcher (``launch.sharding.fl_consensus_backend``) and injected via
+``DFLConfig.consensus_backend``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -242,6 +261,26 @@ def gossip_push_sum(a: jax.Array, state: PushSumState,
     return PushSumState(values, weight)
 
 
+def gossip_push_sum_blocked(a: jax.Array, state: PushSumState,
+                            t_server: int, block: int = 4_194_304,
+                            flat_sharding=None) -> PushSumState:
+    """Blocked push-sum: the ``gossip_scan_blocked`` streaming schedule run
+    in ratio-consensus form.  The numerator pytree is streamed through the
+    same fixed-``block`` machinery with the column-stochastic operator
+    ``P = a.T`` (blocks mix independently, so block-major iteration is the
+    identical operator), while the ``(M,)`` weight recursion is a trivial
+    matvec outside the stream.  Accepts a traced per-epoch ``a``.
+
+    Functional form of ``BlockedGossipBackend.mix_push_sum`` (which is
+    just the generic ``ConsensusBackend.mix_push_sum`` over the blocked
+    ``_mix``) — one source of truth for the streaming push-sum logic."""
+    if t_server == 0:
+        return state
+    return BlockedGossipBackend(
+        None, t_server, block=block,
+        flat_sharding=flat_sharding).mix_push_sum(state, a)
+
+
 def gossip_push_sum_tv(a_rounds: jax.Array,
                        state: PushSumState) -> PushSumState:
     """Time-varying push-sum: round t mixes with ``a_rounds[t].T``.
@@ -331,10 +370,16 @@ def gossip_chebyshev(a: jax.Array, tree: Any, rounds: int, lam2: float) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def make_gossip_shard_map(mesh, a_np: np.ndarray, t_server: int,
-                          leaf_specs: Any, *, axis_name: str = "server",
+def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
+                          axis_name: str = "server",
                           block: int = 16_777_216) -> Callable:
-    """T_S-round gossip as an explicit shard_map program.
+    """T_S-round gossip as an explicit shard_map program, returned as
+    ``run(operator, tree)`` with the ``(M, M)`` mixing ``operator`` a
+    *traced operand* — one compiled program serves every per-epoch graph
+    (dynamic federation), and a compile-time-constant operator recovers the
+    static case.  Pass ``A`` for plain gossip ``W <- A W``; pass ``A.T``
+    (the column-stochastic transpose) to mix a push-sum numerator — the
+    body applies ``operator`` row-wise either way.
 
     Inside the shard_map every device flattens its LOCAL weight shards into
     one vector and scans over fixed ``block``-element slices; each slice
@@ -348,14 +393,14 @@ def make_gossip_shard_map(mesh, a_np: np.ndarray, t_server: int,
 
     ``leaf_specs``: PartitionSpec pytree of the server tree (leading
     'server' axis + intra-client weight axes) — used as in_specs and
-    out_specs.
+    out_specs; the operator itself rides in replicated.
     """
-    m = a_np.shape[0]
-    a = jnp.asarray(a_np, jnp.float32)
+    from jax.sharding import PartitionSpec as P
 
-    def body(tree):
+    def body(a, tree):
+        m = a.shape[0]
         idx = jax.lax.axis_index(axis_name)
-        row = a[idx]                                     # (M,) my weights
+        row = a[idx].astype(jnp.float32)                 # (M,) my weights
         leaves, treedef = jax.tree.flatten(tree)
         dtype = leaves[0].dtype
         # Wire-format control: carry the gossip stream as u16 bit-patterns
@@ -414,8 +459,8 @@ def make_gossip_shard_map(mesh, a_np: np.ndarray, t_server: int,
                 from_wire(out).astype(leaf.dtype).reshape(leaf.shape))
         return jax.tree.unflatten(treedef, new_leaves)
 
-    return shard_map_compat(body, mesh, (leaf_specs,), leaf_specs,
-                            check=False)
+    return shard_map_compat(body, mesh, (P(None, None), leaf_specs),
+                            leaf_specs, check=False)
 
 
 # ---------------------------------------------------------------------------
@@ -463,3 +508,221 @@ def make_ring_gossip(mesh: jax.sharding.Mesh, axis_name: str, t_server: int,
         return shard_map_compat(per_shard, mesh, (specs,), specs)(tree)
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# consensus backends: one interface over every execution strategy
+# ---------------------------------------------------------------------------
+
+
+class ConsensusBackend:
+    """One consensus period (Eq. 5/7) behind one interface.
+
+    ``mix(tree, a_p)`` runs T_S rounds of ``W <- A W`` on a server-leading
+    pytree; ``mix_push_sum(state, a_p)`` runs the ratio-consensus variant
+    (numerator and weight both mixed by the column-stochastic ``A'``, see
+    ``gossip_push_sum``).  ``a_p`` is an optional *traced* per-epoch
+    ``(M, M)`` mixing matrix — the dynamic engine passes a fresh one every
+    epoch through the SAME compiled program; ``None`` selects the static
+    matrix the backend was built with.
+
+    Class flags gate what a backend can express:
+
+    * ``supports_traced`` — can consume a traced ``A_p`` (False only for
+      strategies needing host-side spectral data, e.g. Chebyshev).
+    * ``supports_directed`` — applies the literal ``W <- A W`` update, so
+      row-stochastic A and the push-sum correction are well-defined.
+    * ``mesh_bound`` — closed over a fixed physical mesh (shard_map): the
+      server axis cannot survive fault surgery that changes M.
+    """
+
+    name = "?"
+    supports_traced = True
+    supports_directed = True
+    mesh_bound = False
+
+    def __init__(self, a_static: Optional[np.ndarray], t_server: int):
+        self.a_static = (None if a_static is None
+                         else jnp.asarray(a_static, jnp.float32))
+        self.t_server = t_server
+
+    def _resolve(self, a_p: Optional[jax.Array]) -> jax.Array:
+        if a_p is not None:
+            return a_p
+        if self.a_static is None:
+            raise ValueError(f"{self.name!r} backend was built without a "
+                             f"static mixing matrix; pass a per-epoch A_p")
+        return self.a_static
+
+    def mix(self, tree: Any, a_p: Optional[jax.Array] = None) -> Any:
+        """T_S rounds of ``W <- A W`` over the leading server axis."""
+        return self._mix(tree, self._resolve(a_p))
+
+    def mix_push_sum(self, state: PushSumState,
+                     a_p: Optional[jax.Array] = None) -> PushSumState:
+        """Ratio consensus: numerator streamed through the SAME execution
+        strategy with ``P = A'``, weight by the trivial ``(M,)`` matvec."""
+        if not self.supports_directed:
+            raise ValueError(
+                f"consensus backend {self.name!r} has no ratio-consensus "
+                f"analogue: its value update is not the literal W <- A W, "
+                f"so a numerator/weight pair mixed by it would be "
+                f"inconsistent")
+        p = jnp.swapaxes(self._resolve(a_p), 0, 1)
+        return PushSumState(self._mix(state.values, p),
+                            self._mix_weight(state.weight, p))
+
+    def _mix_weight(self, weight: jax.Array, p: jax.Array) -> jax.Array:
+        return jax.lax.fori_loop(
+            0, self.t_server,
+            lambda _, w: (p @ w.astype(p.dtype)).astype(w.dtype), weight)
+
+    def _mix(self, tree: Any, a: jax.Array) -> Any:
+        raise NotImplementedError
+
+
+class GossipBackend(ConsensusBackend):
+    """The reference per-leaf einsum schedule (``gossip_scan``)."""
+
+    name = "gossip"
+
+    def _mix(self, tree, a):
+        return gossip_scan(a, tree, self.t_server)
+
+
+class BlockedGossipBackend(ConsensusBackend):
+    """``gossip_scan_blocked``: fixed-block streaming — the pjit production
+    path whose live working set is one (M, block) gather, not a full leaf."""
+
+    name = "gossip_blocked"
+
+    def __init__(self, a_static, t_server, *, block: int = 4_194_304,
+                 flat_sharding=None):
+        super().__init__(a_static, t_server)
+        self.block = block
+        self.flat_sharding = flat_sharding
+
+    def _mix(self, tree, a):
+        return gossip_scan_blocked(a, tree, self.t_server, block=self.block,
+                                   flat_sharding=self.flat_sharding)
+
+
+class CollapsedBackend(ConsensusBackend):
+    """One round with ``A_eff = A^{T_S}`` — host-side float64 collapse for
+    the static matrix, in-program (M x M, trivial) collapse for a traced
+    per-epoch ``A_p``."""
+
+    name = "collapsed"
+
+    def __init__(self, a_static, t_server):
+        super().__init__(a_static, t_server)
+        self._eff_static = (None if a_static is None else jnp.asarray(
+            collapse_mixing(np.asarray(a_static), t_server), jnp.float32))
+
+    def _eff(self, a_p: Optional[jax.Array]) -> jax.Array:
+        if a_p is None:
+            if self._eff_static is None:
+                raise ValueError("'collapsed' backend was built without a "
+                                 "static mixing matrix; pass a per-epoch A_p")
+            return self._eff_static
+        return jax.lax.fori_loop(
+            0, self.t_server, lambda _, p: a_p @ p,
+            jnp.eye(a_p.shape[0], dtype=a_p.dtype))
+
+    def mix(self, tree, a_p=None):
+        return gossip_collapsed(self._eff(a_p), tree)
+
+    def mix_push_sum(self, state, a_p=None):
+        # (A^{T_S})' == (A')^{T_S}: one collapsed round of the transpose
+        effp = jnp.swapaxes(self._eff(a_p), 0, 1)
+        weight = (effp @ state.weight.astype(effp.dtype)).astype(
+            state.weight.dtype)
+        return PushSumState(mix_pytree(effp, state.values), weight)
+
+
+class ChebyshevBackend(ConsensusBackend):
+    """Chebyshev semi-iterative gossip.  Needs lambda_2 of the STATIC
+    matrix on the host, so it cannot consume a traced per-epoch ``A_p``;
+    its affine recursion has negative coefficients, so no ratio-consensus
+    (push-sum) analogue exists either."""
+
+    name = "chebyshev"
+    supports_traced = False
+    supports_directed = False
+
+    def __init__(self, a_static, t_server, *, rounds: Optional[int] = None):
+        if a_static is None:
+            raise ValueError("'chebyshev' needs the static mixing matrix up "
+                             "front (lambda_2 is host-side spectral data) "
+                             "and can never take a traced per-epoch A_p")
+        super().__init__(a_static, t_server)
+        a_np = np.asarray(a_static)
+        self.lam2 = (float(np.sort(np.abs(
+            np.linalg.eigvalsh(a_np)))[::-1][1])
+            if a_np.shape[0] > 1 else 0.0)
+        self.rounds = rounds or max(1, int(np.ceil(np.sqrt(t_server))))
+
+    def _mix(self, tree, a):
+        return gossip_chebyshev(a, tree, self.rounds, self.lam2)
+
+
+class ExactMeanBackend(ConsensusBackend):
+    """The idealised sigma_A = 0 limit (hierarchical FL with a root
+    aggregator): ignores the mixing matrix entirely, so the directed /
+    push-sum interpretations are undefined for it."""
+
+    name = "exact_mean"
+    supports_directed = False
+
+    def _mix(self, tree, a):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True),
+                                       x.shape), tree)
+
+
+class ShardMapBackend(ConsensusBackend):
+    """The production explicit-collective path (``make_gossip_shard_map``):
+    blocked u16-wire all-gathers over the mesh's server axis, with the
+    mixing matrix a traced operand.  Mesh-aware, so it is built by the
+    launcher (``launch.sharding.fl_consensus_backend``) and injected via
+    ``DFLConfig.consensus_backend``; being bound to a physical mesh axis it
+    cannot survive fault surgery that changes M (``mesh_bound``)."""
+
+    name = "shard_map"
+    mesh_bound = True
+
+    def __init__(self, mesh, a_static, t_server, leaf_specs, *,
+                 axis_name: str = "server", block: int = 16_777_216):
+        super().__init__(a_static, t_server)
+        self._run = make_gossip_shard_map(mesh, t_server, leaf_specs,
+                                          axis_name=axis_name, block=block)
+
+    def _mix(self, tree, a):
+        return self._run(a, tree)
+
+
+BACKEND_MODES = ("gossip", "gossip_blocked", "collapsed", "chebyshev",
+                 "exact_mean")
+
+
+def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
+                 chebyshev_rounds: Optional[int] = None,
+                 gossip_flat_sharding=None,
+                 block: int = 4_194_304) -> ConsensusBackend:
+    """Map a ``DFLConfig.consensus_mode`` string to a ``ConsensusBackend``.
+
+    ``shard_map`` is absent on purpose: it needs a mesh and per-leaf
+    PartitionSpecs, so the launcher builds it directly
+    (``launch.sharding.fl_consensus_backend``)."""
+    if mode == "gossip":
+        return GossipBackend(a_static, t_server)
+    if mode == "gossip_blocked":
+        return BlockedGossipBackend(a_static, t_server, block=block,
+                                    flat_sharding=gossip_flat_sharding)
+    if mode == "collapsed":
+        return CollapsedBackend(a_static, t_server)
+    if mode == "chebyshev":
+        return ChebyshevBackend(a_static, t_server, rounds=chebyshev_rounds)
+    if mode == "exact_mean":
+        return ExactMeanBackend(a_static, t_server)
+    raise ValueError(f"unknown consensus mode {mode!r}")

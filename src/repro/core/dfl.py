@@ -18,12 +18,20 @@ client-local (the paper's SGD is stateless; for stateful optimizers this is
 the natural privacy-preserving choice — moments never leave the client).
 
 ``consensus_mode``:
-    "gossip"     faithful T_S-round schedule (the paper)
-    "collapsed"  beyond-paper: one round with A_eff = A^{T_S} (identical math)
-    "chebyshev"  beyond-paper: accelerated polynomial gossip
-    "exact_mean" idealised sigma_A=0 limit == hierarchical FL with a root
-                 aggregator (the baseline the paper argues against)
-    "none"       no inter-server communication (fully local ablation)
+    "gossip"         faithful T_S-round schedule (the paper)
+    "gossip_blocked" same schedule streamed over fixed-size parameter blocks
+                     (the memory-deterministic production form)
+    "collapsed"      beyond-paper: one round with A_eff = A^{T_S} (identical math)
+    "chebyshev"      beyond-paper: accelerated polynomial gossip
+    "exact_mean"     idealised sigma_A=0 limit == hierarchical FL with a root
+                     aggregator (the baseline the paper argues against)
+    "none"           no inter-server communication (fully local ablation)
+
+Execution is delegated to a ``consensus.ConsensusBackend`` resolved from
+``consensus_mode`` (or injected via ``DFLConfig.consensus_backend`` for
+mesh-aware strategies like ``consensus.ShardMapBackend``); every backend
+accepts the traced per-epoch ``A_p`` of dynamic mode and implements a
+push-sum variant, so every execution path serves every scenario.
 
 Directed federation (``DFLConfig.mixing``): when degraded links make the
 server graph directed, Eq. 6's doubly-stochastic A may not exist on its
@@ -111,10 +119,12 @@ class DFLConfig:
     # NamedSharding for the flattened (M, D) gossip matrix in
     # consensus_mode="gossip_blocked" (e.g. P("server", ("replica","model"))).
     gossip_flat_sharding: Optional[Any] = None
-    # Production override: a callable server_tree -> server_tree implementing
-    # the T_S-round gossip (e.g. consensus.make_gossip_shard_map).  Same math
-    # as "gossip"; used by the launcher where mesh/leaf specs are known.
-    consensus_override: Optional[Callable[[Any], Any]] = None
+    # Explicit consensus execution backend (consensus.ConsensusBackend).
+    # None: resolved from consensus_mode via consensus.make_backend.  Set by
+    # the launcher for mesh-aware strategies (consensus.ShardMapBackend via
+    # launch.sharding.fl_consensus_backend) — same math as "gossip", with
+    # the per-epoch A_p still a traced operand in dynamic mode.
+    consensus_backend: Optional[Any] = None
     # "full": compute the Lemma-1/Lemma-3 diagnostics (server disagreement,
     # client drift, grad norm) every epoch — the right setting for the
     # paper-scale simulations and tests.  "light": skip them (zeros) — at
@@ -254,13 +264,14 @@ def build_dfl_epoch_step(
     cfg: DFLConfig,
     loss_fn: LossFn,
     optimizer: Optimizer,
-    donate: bool = True,
 ) -> Callable[[DFLState, Any], Tuple[DFLState, DFLMetrics]]:
     """Return ``epoch_step(state, batches) -> (state, metrics)``.
 
     ``batches`` leaves are ``(T_C, M, N, *per_client_batch)`` — one
     microbatch per client per local iteration.  The returned function is NOT
-    jitted; callers wrap it in jax.jit with the desired shardings.
+    jitted; callers wrap it in jax.jit with the desired shardings (and
+    donation — see ``engine.DynamicFederationEngine._step`` and
+    ``launch.train.train``).
     """
     topo = cfg.topology
     m, n = topo.num_servers, topo.clients_per_server
@@ -274,22 +285,30 @@ def build_dfl_epoch_step(
             "Perron-weighted average — choose DFLConfig(mixing='push_sum') "
             "(unbiased) or mixing='row_stochastic' (the explicit biased "
             "baseline)")
-    if cfg.mixing != "symmetric":
-        allowed = ("gossip", "collapsed", "none") if cfg.mixing == "push_sum" \
-            else ("gossip", "gossip_blocked", "collapsed", "none")
-        if cfg.consensus_mode not in allowed:
-            raise ValueError(
-                f"consensus_mode={cfg.consensus_mode!r} is undefined for "
-                f"mixing={cfg.mixing!r}; choose one of {allowed}")
-        if cfg.consensus_override is not None:
-            raise ValueError("consensus_override is a symmetric-gossip hook; "
-                             "it cannot implement the directed paths")
     a_np = topo.mixing_matrix() if m > 1 else np.ones((1, 1))
-    a = jnp.asarray(a_np, jnp.float32)
-    a_eff = jnp.asarray(cns.collapse_mixing(a_np, topo.t_server), jnp.float32)
-    lam2 = (float(np.sort(np.abs(np.linalg.eigvalsh(a_np)))[::-1][1])
-            if m > 1 and cfg.consensus_mode == "chebyshev" else 0.0)
-    cheb_rounds = cfg.chebyshev_rounds or max(1, int(np.ceil(np.sqrt(topo.t_server))))
+    if cfg.consensus_backend is not None:
+        backend = cfg.consensus_backend
+    elif cfg.consensus_mode == "none":
+        backend = None
+    else:
+        backend = cns.make_backend(
+            cfg.consensus_mode, a_np, topo.t_server,
+            chebyshev_rounds=cfg.chebyshev_rounds,
+            gossip_flat_sharding=cfg.gossip_flat_sharding)
+    if backend is not None:
+        if cfg.mixing != "symmetric" and not backend.supports_directed:
+            raise ValueError(
+                f"consensus backend {backend.name!r} is undefined for "
+                f"mixing={cfg.mixing!r}: the directed paths need the "
+                f"literal W <- A W / ratio-consensus update — use one of "
+                f"('gossip', 'gossip_blocked', 'collapsed', 'shard_map', "
+                f"'none')")
+        if cfg.dynamic and not backend.supports_traced:
+            raise ValueError(
+                f"consensus backend {backend.name!r} needs host-side "
+                f"spectral data of the mixing matrix and cannot consume a "
+                f"traced per-epoch A_p; use 'gossip', 'gossip_blocked', "
+                f"'collapsed' or a shard_map backend")
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     # vmap over clients within a server, then over servers
@@ -335,64 +354,24 @@ def build_dfl_epoch_step(
             gnorm = jnp.zeros((), jnp.float32)
         return (params, opt_state, rng), (loss, gnorm)
 
-    if cfg.dynamic and cfg.consensus_mode == "chebyshev":
-        raise ValueError("chebyshev consensus needs host-side spectral data "
-                         "of the mixing matrix and cannot run with a traced "
-                         "per-epoch A; use 'gossip' or 'collapsed'")
-    if cfg.dynamic and cfg.consensus_override is not None:
-        raise ValueError("consensus_override closes over a fixed mixing "
-                         "matrix and would silently ignore the per-epoch "
-                         "A_p; dynamic mode requires a traced-A consensus "
-                         "mode ('gossip', 'gossip_blocked', 'collapsed')")
-
-    def _collapse_traced(a_p):
-        # traced A_p: collapse A_p^{T_S} inside the program (M x M, trivial)
-        return jax.lax.fori_loop(
-            0, topo.t_server, lambda _, p: a_p @ p,
-            jnp.eye(m, dtype=a_p.dtype))
-
     def apply_consensus(server_tree, a_p=None, psum_weight=None):
-        """Run the consensus period.  ``a_p``: optional traced per-epoch
-        mixing matrix (dynamic mode); defaults to the static topology's A.
+        """Run the consensus period through the resolved ConsensusBackend.
+        ``a_p``: optional traced per-epoch mixing matrix (dynamic mode);
+        ``None`` selects the static topology's A held by the backend.
         Returns ``(server_tree, psum_weight)`` — the weight is the terminal
         push-sum weight under mixing='push_sum' and passes through unchanged
         otherwise."""
-        if m == 1 or cfg.consensus_mode == "none" or topo.t_server == 0:
+        if m == 1 or topo.t_server == 0 or backend is None:
             return server_tree, psum_weight
-        a_op = a if a_p is None else a_p
         if cfg.mixing == "push_sum":
             # each consensus period is a fresh ratio consensus: numerator =
             # this epoch's server aggregates, weight reset to 1 (the carried
             # DFLState.psum_weight is last period's terminal weight, kept as
             # a diagnostic — see init_push_sum for why it must not seed the
             # next period)
-            ps = cns.init_push_sum(server_tree)
-            if cfg.consensus_mode == "collapsed":
-                eff = a_eff if a_p is None else _collapse_traced(a_p)
-                ps = cns.gossip_push_sum(eff, ps, 1)
-            else:
-                ps = cns.gossip_push_sum(a_op, ps, topo.t_server)
+            ps = backend.mix_push_sum(cns.init_push_sum(server_tree), a_p)
             return ps.ratio(), ps.weight
-        if cfg.consensus_override is not None:
-            return cfg.consensus_override(server_tree), psum_weight
-        if cfg.consensus_mode == "gossip":
-            return (cns.gossip_scan(a_op, server_tree, topo.t_server),
-                    psum_weight)
-        if cfg.consensus_mode == "gossip_blocked":
-            return (cns.gossip_scan_blocked(
-                a_op, server_tree, topo.t_server,
-                flat_sharding=cfg.gossip_flat_sharding), psum_weight)
-        if cfg.consensus_mode == "collapsed":
-            eff = a_eff if a_p is None else _collapse_traced(a_p)
-            return cns.gossip_collapsed(eff, server_tree), psum_weight
-        if cfg.consensus_mode == "chebyshev":
-            return (cns.gossip_chebyshev(a, server_tree, cheb_rounds, lam2),
-                    psum_weight)
-        if cfg.consensus_mode == "exact_mean":
-            mean = jax.tree.map(lambda x: x.mean(axis=0, keepdims=True), server_tree)
-            return (jax.tree.map(lambda x, mu: jnp.broadcast_to(mu, x.shape),
-                                 server_tree, mean), psum_weight)
-        raise ValueError(f"unknown consensus mode {cfg.consensus_mode!r}")
+        return backend.mix(server_tree, a_p), psum_weight
 
     def epoch_step(state: DFLState, batches: Any) -> Tuple[DFLState, DFLMetrics]:
         # ---- 1. local period: T_C client SGD iterations (Eq. 3) ----

@@ -64,9 +64,19 @@ class DynamicFederationEngine:
                 "a biased average — use DFLConfig(mixing='push_sum') or "
                 "mixing='row_stochastic'")
         self.topo: FLTopology = self.cfg.topology
+        # fail at construction, not mid-run: every fault event must name an
+        # ORIGINAL server id (data shards are keyed by original identity)
+        self.faults.validate(self.topo.num_servers)
+        if (self.faults.events and self.cfg.consensus_backend is not None
+                and getattr(self.cfg.consensus_backend, "mesh_bound", False)):
+            raise ValueError(
+                "a mesh-bound consensus backend (shard_map) cannot survive "
+                "fault surgery: the server axis is a physical mesh axis and "
+                "cannot change size with M — use consensus_mode="
+                "'gossip_blocked' for fault scenarios")
         # original server ids still alive, in row order of the state arrays
         self.alive: List[int] = list(range(self.topo.num_servers))
-        self._next_id: int = self.topo.num_servers
+        self._initial_m: int = self.topo.num_servers
         self._steps: Dict[int, Callable] = {}
         self._tracker = self._fresh_tracker()
 
@@ -90,8 +100,11 @@ class DynamicFederationEngine:
         m = self.topo.num_servers
         if m not in self._steps:
             cfg = dataclasses.replace(self.cfg, topology=self.topo)
+            # donate the carried state: without this every dynamic epoch
+            # holds TWO full copies of client params + optimizer state (the
+            # static trainer path has always donated — train.py)
             self._steps[m] = jax.jit(dfl.build_dfl_epoch_step(
-                cfg, self.loss_fn, self.optimizer))
+                cfg, self.loss_fn, self.optimizer), donate_argnums=(0,))
         return self._steps[m]
 
     # -- fault surgery -------------------------------------------------------
@@ -116,15 +129,21 @@ class DynamicFederationEngine:
         return self._reset_psum_weight(state)
 
     def _rejoin(self, state: dfl.DFLState, server: Optional[int]) -> dfl.DFLState:
-        """A server re-enters with the survivor-mean model (fresh id when
-        ``server`` is None or unused)."""
-        if server is None:
-            server = self._next_id
+        """ORIGINAL server ``server`` re-enters with the survivor-mean
+        model.  Fresh ids are rejected: client data ownership is keyed by
+        original identity (``BatchFn``), so a server that never existed has
+        no data shard — admitting one would crash (or silently alias
+        another server's shard) at the first ``batch_fn`` call."""
+        if server is None or not 0 <= server < self._initial_m:
+            raise ValueError(
+                f"rejoin needs an ORIGINAL server id in [0, "
+                f"{self._initial_m}) — got {server!r}; a fresh server has "
+                f"no data shard (data follows original identity, see "
+                f"FaultSchedule.validate)")
         if server in self.alive:
             raise ValueError(f"server {server} is already alive")
         self.topo, idx = self.topo.rejoin_server()
         self.alive.append(server)
-        self._next_id = max(self._next_id, server + 1)
 
         def leaf(x):
             if x.ndim >= 1 and x.shape[0] == idx:

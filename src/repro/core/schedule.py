@@ -277,7 +277,9 @@ class FaultSchedule:
         sorted; several events may share an epoch and are applied in spec
         order.  The empty string parses to an empty schedule.  Malformed
         events (wrong field count, non-numeric epoch/server, unknown kind)
-        raise ``ValueError``."""
+        raise ``ValueError``; ids outside the ORIGINAL federation (>= M)
+        are rejected by ``FaultSchedule.validate`` when the engine is
+        constructed."""
         events = []
         for part in filter(None, (s.strip() for s in spec.split(","))):
             fields = part.split(":")
@@ -289,6 +291,24 @@ class FaultSchedule:
             kind, epoch, server = fields
             events.append(FaultEvent(int(epoch), kind, int(server)))
         return FaultSchedule(tuple(events))
+
+    def validate(self, num_servers: int) -> None:
+        """Reject events naming servers the federation never had.
+
+        ``SERVER`` ids are ORIGINAL indices: client data ownership is keyed
+        by original identity (``engine.BatchFn`` / the data pipelines), so
+        an id >= the initial federation size has no data shard — a
+        ``rejoin`` for it would crash (or silently alias another server's
+        shard) mid-run at the first batch fetch.  The engine calls this at
+        construction so a bad schedule fails before any training."""
+        for ev in self.events:
+            if ev.server >= num_servers:
+                raise ValueError(
+                    f"fault event {ev.kind}:{ev.epoch}:{ev.server} names "
+                    f"server {ev.server}, but the federation has only "
+                    f"{num_servers} ORIGINAL servers (ids 0.."
+                    f"{num_servers - 1}); fresh-id rejoin is undefined — "
+                    f"data shards are keyed by original identity")
 
     def at(self, epoch: int) -> Tuple[FaultEvent, ...]:
         return tuple(e for e in self.events if e.epoch == epoch)

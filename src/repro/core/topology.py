@@ -476,6 +476,12 @@ class FLTopology:
     graph_kind: str = "ring"
     mixing: str = "metropolis"       # metropolis | uniform | out_degree
     intra_client_replicas: int = 1   # R: FSDP degree inside one client
+    # Explicit adjacency, carried through graph surgery (graph_kind
+    # "explicit"): a hashable tuple-of-tuples of bool, row i = out-links of
+    # server i.  None for family-built graphs.  drop_server stores the
+    # INDUCED subgraph here so removing a server never invents links the
+    # survivors do not have (and never resamples a random family).
+    explicit_adjacency: Optional[Tuple[Tuple[bool, ...], ...]] = None
 
     def __post_init__(self):
         if self.num_servers < 1 or self.clients_per_server < 1:
@@ -484,6 +490,11 @@ class FLTopology:
             raise ValueError("T_C >= 1, T_S >= 0")
         if self.mixing not in ("metropolis", "uniform", "out_degree"):
             raise ValueError(f"unknown mixing weights {self.mixing!r}")
+        if (self.explicit_adjacency is not None) != (
+                self.graph_kind == "explicit"):
+            raise ValueError("explicit_adjacency and graph_kind='explicit' "
+                             "go together: set both (FLTopology."
+                             "with_adjacency) or neither")
         adj = self.adjacency()
         if adj.shape[0] != self.num_servers:
             raise ValueError(f"graph family {self.graph_kind!r} built "
@@ -500,7 +511,25 @@ class FLTopology:
 
     # -- graph/mixing --------------------------------------------------------
     def adjacency(self) -> np.ndarray:
+        if self.explicit_adjacency is not None:
+            return np.asarray(self.explicit_adjacency, dtype=bool)
         return build_graph(self.graph_kind, self.num_servers)
+
+    @staticmethod
+    def freeze_adjacency(adj: np.ndarray) -> Tuple[Tuple[bool, ...], ...]:
+        """Hashable form of an adjacency matrix (the frozen dataclass must
+        stay hashable, so ndarrays cannot be fields)."""
+        return tuple(tuple(bool(v) for v in row)
+                     for row in np.asarray(adj, dtype=bool))
+
+    def with_adjacency(self, adj: np.ndarray) -> "FLTopology":
+        """This topology over an EXPLICIT server graph (the graph-surgery
+        carrier): ``num_servers`` follows the matrix, all validation
+        (connectivity, directedness vs mixing weights) re-runs."""
+        adj = np.asarray(adj, dtype=bool)
+        return dataclasses.replace(
+            self, num_servers=adj.shape[0], graph_kind="explicit",
+            explicit_adjacency=FLTopology.freeze_adjacency(adj))
 
     @property
     def directed(self) -> bool:
@@ -559,9 +588,17 @@ class FLTopology:
 
     # -- fault tolerance -------------------------------------------------------
     def drop_server(self, server_idx: int) -> Tuple["FLTopology", np.ndarray]:
-        """Graph surgery after a server failure: remove the node, keep the
-        induced subgraph if still connected else fall back to a ring over the
-        survivors.  Returns (new topology, survivor index map)."""
+        """Graph surgery after a server failure: remove the node and KEEP
+        the induced subgraph if it is still (strongly) connected — carried
+        as an explicit adjacency, so no phantom links appear between the
+        failed server's neighbours and random families (``erdos_renyi``)
+        are never resampled.  When the induced subgraph happens to equal
+        the family rebuilt at M-1 (complete minus a node, star minus a
+        leaf) the family kind is kept.  If the removal disconnects the
+        survivors, fall back to a (directed) ring over them — Assumption 1
+        must be restored somehow, and that repair is explicit in the
+        returned ``graph_kind``.  Returns (new topology, survivor index
+        map)."""
         m = self.num_servers
         if not 0 <= server_idx < m:
             raise ValueError("bad server index")
@@ -569,14 +606,32 @@ class FLTopology:
             raise ValueError("cannot drop the only server")
         keep = np.array([i for i in range(m) if i != server_idx])
         sub = self.adjacency()[np.ix_(keep, keep)]
-        fallback = "directed_ring" if self.directed else "ring"
-        kind = self.graph_kind if is_strongly_connected(sub) else fallback
-        new = dataclasses.replace(self, num_servers=m - 1, graph_kind=kind)
-        return new, keep
+        if not is_strongly_connected(sub):
+            fallback = "directed_ring" if self.directed else "ring"
+            new = dataclasses.replace(self, num_servers=m - 1,
+                                      graph_kind=fallback,
+                                      explicit_adjacency=None)
+            return new, keep
+        if self.explicit_adjacency is None:
+            fam = build_graph(self.graph_kind, m - 1)
+            if np.array_equal(sub, fam):
+                return dataclasses.replace(self, num_servers=m - 1), keep
+        return self.with_adjacency(sub), keep
 
     def rejoin_server(self) -> Tuple["FLTopology", int]:
-        """Inverse surgery: a (recovered) server re-enters the federation.
-        The graph family is rebuilt at M+1 nodes; the newcomer takes the last
-        index.  Returns (new topology, insert index)."""
-        new = dataclasses.replace(self, num_servers=self.num_servers + 1)
-        return new, self.num_servers
+        """Inverse surgery: a (recovered) server re-enters the federation,
+        taking the last index.  For family graphs the family is rebuilt at
+        M+1 nodes (the newcomer plugs back into the topology's pattern);
+        for an explicit post-surgery graph the newcomer enters fully
+        connected to every survivor — it just received the survivor-mean
+        model, so links to everyone are the natural bootstrap (and keep the
+        graph strongly connected with no further repair).  Returns
+        (new topology, insert index)."""
+        m = self.num_servers
+        if self.explicit_adjacency is None:
+            return dataclasses.replace(self, num_servers=m + 1), m
+        grown = np.zeros((m + 1, m + 1), dtype=bool)
+        grown[:m, :m] = self.adjacency()
+        grown[m, :m] = True
+        grown[:m, m] = True
+        return self.with_adjacency(grown), m

@@ -45,6 +45,8 @@ def run_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # jax returns [dict] per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = rl.collective_bytes(hlo)
     chips = bundle.mesh.devices.size
@@ -99,9 +101,11 @@ def main() -> None:
                    help="run every supported (arch, shape) pair")
     p.add_argument("--multi-pod", action="store_true",
                    help="2-pod (2,16,16) mesh instead of single-pod (16,16)")
-    p.add_argument("--consensus-mode", default="gossip_shardmap",
+    p.add_argument("--consensus-mode", default=None,
                    choices=("gossip", "gossip_blocked", "gossip_shardmap",
-                            "collapsed", "chebyshev", "exact_mean"))
+                            "collapsed", "chebyshev", "exact_mean"),
+                   help="override the per-plan consensus backend selection "
+                        "(plans.DeploymentPlan.consensus_backend)")
     p.add_argument("--out-dir", default=None)
     args = p.parse_args()
 
@@ -110,7 +114,7 @@ def main() -> None:
     failures = []
     for arch_id, shape_name in pairs:
         kw = {}
-        if shape_name == "train_4k" and args.consensus_mode != "gossip_shardmap":
+        if shape_name == "train_4k" and args.consensus_mode:
             kw["consensus_mode"] = args.consensus_mode
         try:
             run_one(arch_id, shape_name, multi_pod=args.multi_pod,

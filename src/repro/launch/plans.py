@@ -60,6 +60,12 @@ class DeploymentPlan:
     # collective and -33% peak with SP off at prefill_32k, while its train
     # shape prefers SP for the memory win — the knobs are independent).
     serve_seq_parallel: Optional[bool] = None
+    # Consensus execution path for the train shape (the launcher's default;
+    # an explicit build_train_lowering(consensus_mode=...) overrides):
+    # "gossip_shardmap" = explicit blocked shard_map collectives
+    # (consensus.ShardMapBackend — deterministic memory, u16 wire),
+    # "gossip_blocked" = pjit blocked streaming, "gossip" = per-leaf einsum.
+    consensus_backend: str = "gossip_shardmap"
 
     def serve_dtype(self):
         return jnp.bfloat16          # deployment dtype for all archs

@@ -165,6 +165,38 @@ def fl_state_specs(state: Any, mesh: Mesh, *,
                        tp_axis=tp_axis, fsdp_axis="replica")
 
 
+def fl_server_specs(server_tree: Any, mesh: Mesh, *,
+                    tp_axis: Optional[str] = "model") -> Any:
+    """Server-aggregate tree (leaves ``(M, *w)``): leading 'server' axis
+    plus the same name-keyed TP/FSDP placement as the client tree — the
+    leaf specs a shard_map consensus backend gossips over."""
+    return _tree_specs(server_tree, ("server",), mesh,
+                       tp_axis=tp_axis, fsdp_axis="replica")
+
+
+def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
+                         tp_axis: Optional[str] = "model",
+                         block: Optional[int] = None) -> Any:
+    """Mesh-aware consensus-backend construction (the production path).
+
+    Builds a ``consensus.ShardMapBackend`` gossiping ``server_tree``-shaped
+    aggregates over the mesh's 'server' axis with ``fl_server_specs``
+    placement, seeded with the topology's static mixing matrix (a traced
+    per-epoch ``A_p`` still overrides it in dynamic mode).  Inject the
+    result via ``DFLConfig.consensus_backend``; selection between this,
+    'gossip_blocked' and plain 'gossip' is per deployment plan
+    (``launch.plans.DeploymentPlan.consensus_backend``)."""
+    import numpy as np
+
+    from repro.core import consensus as cns
+
+    a_np = (topo.mixing_matrix() if topo.num_servers > 1
+            else np.ones((1, 1)))
+    specs = fl_server_specs(server_tree, mesh, tp_axis=tp_axis)
+    kw = {} if block is None else {"block": block}
+    return cns.ShardMapBackend(mesh, a_np, topo.t_server, specs, **kw)
+
+
 def named(tree_specs: Any, mesh: Mesh) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))

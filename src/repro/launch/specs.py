@@ -27,7 +27,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs import INPUT_SHAPES, ArchConfig, InputShape, get_arch
 from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
                         init_dfl_state, server_mean)
-from repro.core import consensus as cns
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_fl_mesh, make_serve_mesh
 from repro.launch.plans import DeploymentPlan, plan_for
@@ -88,13 +87,15 @@ def token_batch_specs(cfg: ArchConfig, lead: Tuple[int, ...], seq_len: int,
 
 def build_train_lowering(arch_id: str, shape: InputShape, *,
                          multi_pod: bool = False,
-                         consensus_mode: str = "gossip_shardmap",
+                         consensus_mode: Optional[str] = None,
                          remat: bool = True,
                          plan: Optional[DeploymentPlan] = None,
                          graph_kind: str = "ring",
                          seq_parallel: Optional[bool] = None) -> LoweringBundle:
     cfg = get_arch(arch_id)
     plan = plan or plan_for(arch_id)
+    # consensus execution path: per-plan backend selection unless overridden
+    consensus_mode = consensus_mode or plan.consensus_backend
     spec = plan.fl_spec(multi_pod)
     mesh = make_fl_mesh(spec, multi_pod=multi_pod)
     m, n, r = spec.num_servers, spec.clients_per_server, spec.fsdp
@@ -161,18 +162,17 @@ def build_train_lowering(arch_id: str, shape: InputShape, *,
                             mesh, P("server", flat_axes)))
     tp_axis = None if plan.batch_over_model else "model"
     if consensus_mode == "gossip_shardmap":
-        # explicit blocked shard_map gossip (same math as "gossip")
+        # explicit blocked shard_map gossip (same math as "gossip"),
+        # injected as a mesh-aware ConsensusBackend
         params_abs0 = _abstract(
             lambda: tf.init_params(jax.random.key(0), cfg, dtype))
         client_abs = _abstract(lambda: jax.tree.map(
             lambda p: jnp.zeros((m, n) + p.shape, p.dtype), params_abs0))
         server_abs = jax.eval_shape(server_mean, client_abs)
-        server_specs = shd._tree_specs(server_abs, ("server",), mesh,
-                                       tp_axis=tp_axis, fsdp_axis="replica")
-        override = cns.make_gossip_shard_map(
-            mesh, topo.mixing_matrix(), topo.t_server, server_specs)
+        backend = shd.fl_consensus_backend(topo, mesh, server_abs,
+                                           tp_axis=tp_axis)
         dfl_cfg = dataclasses.replace(dfl_cfg, consensus_mode="gossip",
-                                      consensus_override=override)
+                                      consensus_backend=backend)
     step = build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer)
 
     state_abs = _abstract(lambda: init_dfl_state(

@@ -13,10 +13,11 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_arch, get_smoke
@@ -24,8 +25,55 @@ from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
                         init_dfl_state, make_engine, FaultSchedule,
                         ParticipationSchedule, TopologySchedule)
 from repro.data import DataConfig, FLDataPipeline
+from repro.launch import sharding as shd
 from repro.models import transformer as tf
 from repro.optim import sgd
+
+CONSENSUS_BACKENDS = ("auto", "einsum", "blocked", "shard_map")
+
+
+def resolve_consensus_backend(backend: str, consensus_mode: str,
+                              topo: FLTopology,
+                              params) -> Tuple[str, Optional[object]]:
+    """Map the ``--consensus-backend`` CLI flag to the DFLConfig pair
+    ``(consensus_mode, consensus_backend)``.
+
+    ``auto`` keeps ``consensus_mode`` as given; ``einsum`` forces the
+    per-leaf reference path ('gossip'); ``blocked`` forces the streamed
+    'gossip_blocked' path; ``shard_map`` builds the explicit-collective
+    ``consensus.ShardMapBackend`` over a ('server',)-axis mesh — that
+    needs at least M devices (on CPU set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=M``)."""
+    if backend not in CONSENSUS_BACKENDS:
+        raise ValueError(f"unknown consensus backend {backend!r}; choose "
+                         f"one of {CONSENSUS_BACKENDS}")
+    if backend == "auto":
+        return consensus_mode, None
+    gossip_family = consensus_mode in ("gossip", "gossip_blocked")
+    if not gossip_family:
+        raise ValueError(
+            f"--consensus-backend {backend} re-executes the T_S-round "
+            f"gossip schedule and is undefined for consensus_mode="
+            f"{consensus_mode!r}; use --consensus-backend auto there")
+    if backend == "einsum":
+        return "gossip", None
+    if backend == "blocked":
+        return "gossip_blocked", None
+    m = topo.num_servers
+    ndev = jax.device_count()
+    if ndev < m:
+        raise ValueError(
+            f"the shard_map backend gossips over a physical 'server' mesh "
+            f"axis of size M={m} but only {ndev} device(s) are visible; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={m} "
+            f"on CPU")
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:m]).reshape(m),
+                             ("server",))
+    server_abs = jax.eval_shape(
+        lambda p: jax.tree.map(
+            lambda x: jnp.zeros((m,) + x.shape, x.dtype), p), params)
+    return "gossip", shd.fl_consensus_backend(topo, mesh, server_abs,
+                                              tp_axis=None)
 
 
 def _setup_lm(arch_id, smoke, servers, clients, t_client, t_server, graph,
@@ -57,17 +105,20 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
           epochs: int = 3, seq_len: int = 128, per_client_batch: int = 2,
           gamma: float = 0.05, graph: str = "ring",
           consensus_mode: str = "gossip", mixing: str = "symmetric",
+          consensus_backend: str = "auto",
           ckpt_dir: Optional[str] = None, seed: int = 0,
           log_every: int = 1, attn_impl: str = "reference") -> dict:
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
         arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
         seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
+    params = tf.init_params(jax.random.key(seed), cfg)
+    consensus_mode, backend = resolve_consensus_backend(
+        consensus_backend, consensus_mode, topo, params)
     dfl_cfg = DFLConfig(topology=topo, consensus_mode=consensus_mode,
-                        mixing=mixing)
+                        mixing=mixing, consensus_backend=backend)
     step = jax.jit(build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer),
                    donate_argnums=(0,))
 
-    params = tf.init_params(jax.random.key(seed), cfg)
     state = init_dfl_state(dfl_cfg, params, optimizer, jax.random.key(seed + 1))
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
     history = {"loss": [], "disagreement": [], "drift": []}
@@ -96,6 +147,7 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                   epochs: int = 3, seq_len: int = 128, per_client_batch: int = 2,
                   gamma: float = 0.05, graph: str = "ring",
                   consensus_mode: str = "gossip", mixing: str = "symmetric",
+                  consensus_backend: str = "auto",
                   participation_rate: float = 1.0,
                   participation_kind: str = "bernoulli",
                   edge_drop_prob: float = 0.0,
@@ -114,6 +166,9 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
         arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
         seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
+    params = tf.init_params(jax.random.key(seed), cfg)
+    consensus_mode, backend = resolve_consensus_backend(
+        consensus_backend, consensus_mode, topo, params)
 
     if participation_rate >= 1.0:
         part = ParticipationSchedule()                     # full
@@ -138,10 +193,10 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
         tsched = TopologySchedule()                        # static
     engine = make_engine(topo, loss_fn, optimizer,
                          consensus_mode=consensus_mode, mixing=mixing,
+                         consensus_backend=backend,
                          participation=part, topology_schedule=tsched,
                          faults=FaultSchedule.parse(faults))
 
-    params = tf.init_params(jax.random.key(seed), cfg)
     state = init_dfl_state(engine.cfg, params, optimizer,
                            jax.random.key(seed + 1))
 
@@ -169,7 +224,7 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
     return {"state": state, "history": history, "engine": engine, "cfg": cfg}
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="smollm-360m")
     p.add_argument("--smoke", action="store_true", default=True)
@@ -187,8 +242,15 @@ def main() -> None:
                    choices=("ring", "complete", "star", "line", "erdos_renyi",
                             "directed_ring", "random_orientation"))
     p.add_argument("--consensus-mode", default="gossip",
-                   choices=("gossip", "collapsed", "chebyshev", "exact_mean",
-                            "none"))
+                   choices=("gossip", "gossip_blocked", "collapsed",
+                            "chebyshev", "exact_mean", "none"))
+    p.add_argument("--consensus-backend", default="auto",
+                   choices=CONSENSUS_BACKENDS,
+                   help="consensus execution backend: auto (follow "
+                        "--consensus-mode), einsum (per-leaf reference "
+                        "gossip), blocked (fixed-block streaming), or "
+                        "shard_map (explicit collectives over a physical "
+                        "'server' mesh axis; needs >= M devices)")
     p.add_argument("--mixing", default="symmetric",
                    choices=("symmetric", "row_stochastic", "push_sum"),
                    help="consensus interpretation of the mixing matrix: "
@@ -214,12 +276,17 @@ def main() -> None:
                           "combine with --mixing push_sum)")
     dyn.add_argument("--faults", default="",
                      help="server fault schedule, e.g. 'drop:5:1,rejoin:9:1'")
-    args = p.parse_args()
+    return p
+
+
+def main() -> None:
+    args = build_parser().parse_args()
     kw = dict(smoke=args.smoke, servers=args.servers, clients=args.clients,
               t_client=args.t_client, t_server=args.t_server,
               epochs=args.epochs, seq_len=args.seq_len,
               per_client_batch=args.batch, gamma=args.gamma,
               graph=args.graph, consensus_mode=args.consensus_mode,
+              consensus_backend=args.consensus_backend,
               mixing=args.mixing, ckpt_dir=args.ckpt_dir)
     dynamic = (args.participation_rate < 1.0 or args.edge_drop_prob > 0.0
                or args.straggler_weaken > 0.0

@@ -1,4 +1,6 @@
 """Consensus strategies (Eq. 5/7): faithful vs collapsed vs Chebyshev."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -130,7 +132,7 @@ print("OK")
 """
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={**os.environ, "PYTHONPATH": "src"})
     assert "OK" in r.stdout, r.stderr[-2000:]
 
 
@@ -168,8 +170,8 @@ tree = {"w": jax.random.normal(jax.random.key(0), (m, 8, 64), jnp.bfloat16),
 specs = {"w": P("server", "replica", "model"), "b": P("server", "model")}
 tree = {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
         for k, v in tree.items()}
-run = cns.make_gossip_shard_map(mesh, a_np, t_s, specs, block=128)
-out_sm = jax.jit(run)(tree)
+run = cns.make_gossip_shard_map(mesh, t_s, specs, block=128)
+out_sm = jax.jit(run)(jnp.asarray(a_np, jnp.float32), tree)
 out_ref = cns.gossip_scan(jnp.asarray(a_np, jnp.float32),
                           {k: v.astype(jnp.float32) for k, v in tree.items()},
                           t_s)
@@ -181,5 +183,5 @@ print("OK")
 """
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={**os.environ, "PYTHONPATH": "src"})
     assert "OK" in r.stdout, r.stderr[-2000:]

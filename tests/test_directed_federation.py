@@ -265,10 +265,14 @@ def test_mixing_validation():
         build_dfl_epoch_step(
             DFLConfig(topology=topo, mixing="push_sum",
                       consensus_mode="chebyshev"), loss, sgd(1e-3))
-    with pytest.raises(ValueError, match="consensus_override"):
+    # an injected backend without a directed update (exact_mean ignores A)
+    # is rejected the same way as the consensus_mode string would be
+    backend = cns.make_backend("exact_mean", topo.mixing_matrix(),
+                               topo.t_server)
+    with pytest.raises(ValueError, match="undefined"):
         build_dfl_epoch_step(
             DFLConfig(topology=topo, mixing="push_sum",
-                      consensus_override=lambda t: t), loss, sgd(1e-3))
+                      consensus_backend=backend), loss, sgd(1e-3))
     with pytest.raises(ValueError, match="asymmetric"):
         make_engine(FLTopology(num_servers=3, clients_per_server=2,
                                t_client=2, t_server=2), loss, sgd(1e-3),

@@ -329,8 +329,16 @@ def test_engine_rejects_bad_fault_events():
         ids = np.asarray(alive)
         return batches[0][:, ids], batches[1][:, ids]
 
+    # ids outside the ORIGINAL federation fail at CONSTRUCTION, not mid-run:
+    # a fresh server has no data shard (batch_fn slices by original id)
+    for kind in ("drop", "rejoin"):
+        with pytest.raises(ValueError, match="ORIGINAL"):
+            make_engine(topo, loss_fn, sgd(gamma),
+                        faults=FaultSchedule((FaultEvent(0, kind, 7),)))
+    # dropping a server twice is a runtime liveness error
     engine = make_engine(topo, loss_fn, sgd(gamma),
-                         faults=FaultSchedule((FaultEvent(0, "drop", 7),)))
+                         faults=FaultSchedule((FaultEvent(0, "drop", 2),
+                                               FaultEvent(0, "drop", 2))))
     state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(gamma),
                            jax.random.key(0))
     with pytest.raises(ValueError, match="not alive"):
@@ -342,6 +350,14 @@ def test_engine_rejects_bad_fault_events():
                             jax.random.key(0))
     with pytest.raises(ValueError, match="already alive"):
         engine2.run(state2, 1, batch_fn)
+    # direct fresh-id rejoin (the old crash path: _next_id minting) is gone
+    engine3 = make_engine(topo, loss_fn, sgd(gamma))
+    state3 = init_dfl_state(engine3.cfg, jnp.zeros((2,)), sgd(gamma),
+                            jax.random.key(0))
+    with pytest.raises(ValueError, match="ORIGINAL"):
+        engine3._rejoin(state3, None)
+    with pytest.raises(ValueError, match="ORIGINAL"):
+        engine3._rejoin(state3, 5)
 
 
 def test_dynamic_mode_rejects_chebyshev():
@@ -353,13 +369,15 @@ def test_dynamic_mode_rejects_chebyshev():
                              sgd(1e-3))
 
 
-def test_dynamic_mode_rejects_consensus_override():
-    """An override closes over a fixed A and would silently ignore A_p."""
+def test_dynamic_mode_rejects_non_traced_backend_instance():
+    """An injected backend that cannot consume a traced per-epoch A_p
+    (chebyshev needs host-side spectral data) is rejected up front."""
     topo = FLTopology(num_servers=3, clients_per_server=2, t_client=2,
                       t_server=2)
-    cfg = DFLConfig(topology=topo, dynamic=True,
-                    consensus_override=lambda t: t)
-    with pytest.raises(ValueError, match="consensus_override"):
+    backend = cns.make_backend("chebyshev", topo.mixing_matrix(),
+                               topo.t_server)
+    cfg = DFLConfig(topology=topo, dynamic=True, consensus_backend=backend)
+    with pytest.raises(ValueError, match="chebyshev"):
         build_dfl_epoch_step(cfg, lambda w, b, r: (jnp.zeros(()), {}),
                              sgd(1e-3))
 

@@ -194,3 +194,80 @@ def test_drop_server_graph_surgery():
     with pytest.raises(ValueError):
         tp.FLTopology(num_servers=1, clients_per_server=1, t_client=1,
                       t_server=0).drop_server(0)
+
+
+def test_drop_server_keeps_induced_adjacency():
+    """Regression: dropping a server from a ring must NOT silently
+    reconnect its two neighbours with a phantom link — the survivors keep
+    exactly the induced subgraph (carried as an explicit adjacency)."""
+    topo = tp.FLTopology(num_servers=5, clients_per_server=2, t_client=10,
+                         t_server=5, graph_kind="ring")
+    adj = topo.adjacency()
+    new, keep = topo.drop_server(2)
+    induced = adj[np.ix_(keep, keep)]
+    np.testing.assert_array_equal(new.adjacency(), induced)
+    # old neighbours 1 and 3 sit at new rows 1 and 2: NOT linked
+    assert not new.adjacency()[1, 2]
+    assert new.graph_kind == "explicit"
+    # the topology stays hashable (frozen dataclass, tuple-backed matrix)
+    assert isinstance(hash(new), int)
+    # mixing matrix / sigma still well-defined on the explicit graph
+    tp.check_mixing_matrix(new.mixing_matrix(), new.adjacency())
+    assert 0.0 < new.sigma() < 1.0
+
+
+def test_drop_server_erdos_renyi_not_resampled():
+    """Regression: surgery on a random family must keep the induced graph,
+    not resample an unrelated erdos_renyi(seed=0, p=0.5) at M-1."""
+    topo = tp.FLTopology(num_servers=8, clients_per_server=2, t_client=2,
+                         t_server=1, graph_kind="erdos_renyi")
+    adj = topo.adjacency()
+    new, keep = topo.drop_server(3)
+    if tp.is_connected(adj[np.ix_(keep, keep)]):
+        np.testing.assert_array_equal(new.adjacency(),
+                                      adj[np.ix_(keep, keep)])
+    else:
+        assert new.graph_kind == "ring"
+
+
+def test_drop_server_family_kept_when_induced_matches():
+    """complete minus a node IS complete(M-1): the family kind survives."""
+    topo = tp.FLTopology(num_servers=5, clients_per_server=2, t_client=2,
+                         t_server=1, graph_kind="complete")
+    new, _ = topo.drop_server(2)
+    assert new.graph_kind == "complete"
+    assert new.explicit_adjacency is None
+
+
+def test_explicit_rejoin_connects_newcomer_to_all():
+    topo = tp.FLTopology(num_servers=5, clients_per_server=2, t_client=2,
+                         t_server=1, graph_kind="ring")
+    dropped, _ = topo.drop_server(2)            # explicit line
+    rejoined, idx = dropped.rejoin_server()
+    assert idx == 4 and rejoined.num_servers == 5
+    adj = rejoined.adjacency()
+    # survivors' induced subgraph untouched, newcomer linked to everyone
+    np.testing.assert_array_equal(adj[:4, :4], dropped.adjacency())
+    assert adj[4, :4].all() and adj[:4, 4].all() and not adj[4, 4]
+    assert tp.is_connected(adj)
+    # repeated surgery keeps working on the explicit carrier
+    again, keep2 = rejoined.drop_server(0)
+    np.testing.assert_array_equal(
+        again.adjacency(), rejoined.adjacency()[np.ix_(keep2, keep2)])
+
+
+def test_explicit_adjacency_validation():
+    with pytest.raises(ValueError, match="explicit"):
+        tp.FLTopology(num_servers=3, clients_per_server=1, t_client=1,
+                      t_server=1, graph_kind="explicit")
+    with pytest.raises(ValueError, match="explicit"):
+        tp.FLTopology(num_servers=3, clients_per_server=1, t_client=1,
+                      t_server=1, graph_kind="ring",
+                      explicit_adjacency=tp.FLTopology.freeze_adjacency(
+                          tp.ring_graph(3)))
+    # a disconnected explicit matrix still fails Assumption 1
+    with pytest.raises(ValueError, match="Assumption 1"):
+        tp.FLTopology(num_servers=3, clients_per_server=1, t_client=1,
+                      t_server=1, graph_kind="explicit",
+                      explicit_adjacency=tp.FLTopology.freeze_adjacency(
+                          np.zeros((3, 3), bool)))
