@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run --only fig3_consensus
+    PYTHONPATH=src python -m benchmarks.run --only kernel_micro,topology_sweep
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI: tiny sizes
+
+``--smoke`` shrinks every benchmark to seconds (fewer epochs / smaller
+trees) so the CI fast job can execute the full harness on every push —
+numbers are NOT meaningful in smoke mode, it exists to keep the benchmarks
+from rotting; ``--only`` takes a comma-separated subset.
 
 Benchmarks (the paper has one experiment, Fig. 3; the rest exercise the
 theory quantities the paper derives and our beyond-paper claims):
@@ -21,6 +28,11 @@ theory quantities the paper derives and our beyond-paper claims):
                         on the DYNAMIC engine (traced per-epoch A_p):
                         peak-RSS + epoch throughput per backend, one clean
                         subprocess each, plus cross-backend agreement
+  compressed_consensus  the repro.comm layer: compressor x backend sweep
+                        recording bytes-on-wire (BytesTracker) vs consensus
+                        error vs wall-clock; checks int8+EF reaches the
+                        fig-3 tolerance at >= 3.5x fewer bytes and that the
+                        metadata byte counts match the analytic forms
   kernel_micro          Pallas-kernel (interpret) vs jnp-oracle parity +
                         CPU wall time (correctness harness, not TPU perf)
   lm_epoch_throughput   DFL epoch wall time on a smoke LM (CPU reference)
@@ -38,6 +50,12 @@ import numpy as np
 
 RESULTS = []
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+SMOKE = False     # set by --smoke: tiny sizes, seconds per bench
+
+
+def S(full, smoke):
+    """Pick the full-size or the smoke-size value of a benchmark knob."""
+    return smoke if SMOKE else full
 
 
 def record(name, metric, value):
@@ -52,8 +70,9 @@ def bench_fig3_consensus():
     from repro.data import RegressionSpec, make_regression_data
     from repro.optim import sgd
 
-    topo = FLTopology(num_servers=5, clients_per_server=5, t_client=250,
-                      t_server=25, graph_kind="ring")
+    topo = FLTopology(num_servers=5, clients_per_server=5,
+                      t_client=S(250, 25), t_server=S(25, 5),
+                      graph_kind="ring")
     data = make_regression_data(topo, RegressionSpec(), seed=0)
     x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
 
@@ -71,7 +90,7 @@ def bench_fig3_consensus():
     w_star = np.linalg.lstsq(np.asarray(x).reshape(-1, 2),
                              np.asarray(y).reshape(-1), rcond=None)[0]
     consensus_epoch = None
-    for epoch in range(200):
+    for epoch in range(S(200, 12)):
         state, metrics = step(state, batches)
         servers = np.asarray(state.client_params[:, 0])
         err = float(np.linalg.norm(servers - w_star, axis=-1).max())
@@ -93,8 +112,9 @@ def bench_thm1_epsilon_sweep():
     from repro.data import RegressionSpec, make_regression_data
     from repro.optim import sgd
 
-    for (t_c, t_s, graph) in [(25, 5, "ring"), (25, 25, "ring"),
-                              (50, 10, "line"), (25, 5, "complete")]:
+    combos = [(25, 5, "ring"), (25, 25, "ring"),
+              (50, 10, "line"), (25, 5, "complete")]
+    for (t_c, t_s, graph) in S(combos, combos[:1]):
         topo = FLTopology(num_servers=5, clients_per_server=5, t_client=t_c,
                           t_server=t_s, graph_kind=graph)
         data = make_regression_data(topo, RegressionSpec(heterogeneity=1.0),
@@ -112,7 +132,7 @@ def bench_thm1_epsilon_sweep():
         state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
         batches = (jnp.broadcast_to(x, (t_c,) + x.shape),
                    jnp.broadcast_to(y, (t_c,) + y.shape))
-        for _ in range(150):
+        for _ in range(S(150, 10)):
             state, _ = step(state, batches)
         w_star = np.linalg.lstsq(np.asarray(x).reshape(-1, 2),
                                  np.asarray(y).reshape(-1), rcond=None)[0]
@@ -133,7 +153,8 @@ def bench_consensus_strategies():
     a_np = tp.metropolis_weights(tp.ring_graph(m))
     a = jnp.asarray(a_np, jnp.float32)
     a_eff = jnp.asarray(cns.collapse_mixing(a_np, t_s), jnp.float32)
-    tree = {"w": jax.random.normal(jax.random.key(0), (m, 1_000_000))}
+    tree = {"w": jax.random.normal(jax.random.key(0),
+                                   (m, S(1_000_000, 20_000)))}
     lam2 = float(np.sort(np.abs(np.linalg.eigvalsh(a_np)))[::-1][1])
 
     funcs = {
@@ -143,14 +164,15 @@ def bench_consensus_strategies():
             lambda t: cns.gossip_chebyshev(a, t, 5, lam2)),
     }
     base = None
+    reps = S(5, 1)
     for name, fn in funcs.items():
         out = fn(tree)
         jax.block_until_ready(out)
         t0 = time.time()
-        for _ in range(5):
+        for _ in range(reps):
             out = fn(tree)
             jax.block_until_ready(out)
-        dt = (time.time() - t0) / 5
+        dt = (time.time() - t0) / reps
         record("consensus_strategies", f"{name}_ms", round(dt * 1000, 2))
         dis = float(jnp.linalg.norm(out["w"] - out["w"].mean(0)))
         record("consensus_strategies", f"{name}_residual_disagreement",
@@ -190,8 +212,9 @@ def bench_kernel_micro():
     from repro.kernels import ops, ref
 
     key = jax.random.key(0)
-    q = jax.random.normal(key, (2, 512, 8, 64))
-    kv = jax.random.normal(key, (2, 512, 2, 64))
+    seq = S(512, 128)
+    q = jax.random.normal(key, (2, seq, 8, 64))
+    kv = jax.random.normal(key, (2, seq, 2, 64))
 
     def time_it(fn, *args):
         out = fn(*args)
@@ -208,10 +231,10 @@ def bench_kernel_micro():
     record("kernel_micro", "flash_attn_interpret_ms", round(t_k, 1))
     record("kernel_micro", "flash_attn_jnp_ms", round(t_r, 1))
 
-    xs = jax.random.normal(key, (2, 512, 4, 64))
-    bs = jax.random.normal(key, (2, 512, 1, 128)) * 0.5
-    cs = jax.random.normal(key, (2, 512, 1, 128)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(key, (2, 512, 4)))
+    xs = jax.random.normal(key, (2, seq, 4, 64))
+    bs = jax.random.normal(key, (2, seq, 1, 128)) * 0.5
+    cs = jax.random.normal(key, (2, seq, 1, 128)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(key, (2, seq, 4)))
     ac = -jnp.exp(jnp.linspace(-1, 1, 4))
     (y_k, _), t_k = time_it(
         lambda *a: ops.ssd_scan(*a, chunk=128), xs, bs, cs, dt, ac)
@@ -232,7 +255,7 @@ def bench_dynamic_federation():
     from repro.data import RegressionSpec, make_regression_task
     from repro.optim import sgd
 
-    m, n, t_c, t_s, epochs = 5, 5, 25, 10, 50
+    m, n, t_c, t_s, epochs = 5, 5, S(25, 5), S(10, 4), S(50, 6)
     topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
                       t_server=t_s, graph_kind="ring")
     task = make_regression_task(topo, RegressionSpec(heterogeneity=0.5),
@@ -288,7 +311,7 @@ def bench_directed_federation():
                             perron_ideal)
     from repro.optim import sgd
 
-    m, n, t_c, t_s, epochs = 5, 5, 25, 30, 80
+    m, n, t_c, t_s, epochs = 5, 5, S(25, 5), S(30, 8), S(80, 6)
     ring = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
                       t_server=t_s, graph_kind="ring")
     directed = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
@@ -364,7 +387,7 @@ from repro.core import (FLTopology, TopologySchedule, init_dfl_state,
                         make_engine)
 from repro.optim import sgd
 
-m, n, t_c, t_s, epochs, d = 4, 2, 2, 10, 5, 1_500_000
+m, n, t_c, t_s, epochs, d = 4, 2, 2, 10, int(sys.argv[2]), int(sys.argv[3])
 topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
                   t_server=t_s, graph_kind="ring")
 
@@ -406,8 +429,10 @@ print(json.dumps({
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
     results = {}
+    epochs, d = S(5, 3), S(1_500_000, 100_000)
     for backend in ("gossip", "gossip_blocked", "shard_map"):
-        r = subprocess.run([sys.executable, "-c", child, backend],
+        r = subprocess.run([sys.executable, "-c", child, backend,
+                            str(epochs), str(d)],
                            capture_output=True, text=True, timeout=900,
                            env={**os.environ, "PYTHONPATH": src})
         if r.returncode != 0:
@@ -440,15 +465,102 @@ print(json.dumps({
 
 def bench_lm_epoch_throughput():
     from repro.launch.train import train
+    epochs, t_c, seq = S(3, 1), S(3, 2), S(128, 32)
     t0 = time.time()
-    res = train("smollm-360m", servers=2, clients=2, t_client=3, t_server=5,
-                epochs=3, seq_len=128, per_client_batch=2, gamma=0.05,
-                log_every=100)
+    res = train("smollm-360m", servers=2, clients=2, t_client=t_c,
+                t_server=5, epochs=epochs, seq_len=seq, per_client_batch=2,
+                gamma=0.05, log_every=100)
     dt = time.time() - t0
-    tokens = 3 * 3 * 4 * 2 * 128
+    tokens = epochs * t_c * 4 * 2 * seq
     record("lm_epoch_throughput", "smoke_tokens_per_s", round(tokens / dt, 1))
     record("lm_epoch_throughput", "loss_delta",
            round(res["history"]["loss"][0] - res["history"]["loss"][-1], 4))
+
+
+def bench_compressed_consensus():
+    """The repro.comm subsystem: compressor x backend sweep on a 32-d
+    regression task (d=2 would make byte ratios meaningless), recording
+    bytes-on-wire vs consensus error vs wall-clock.  Acceptance criteria
+    recorded as explicit booleans: int8 + error feedback reaches the fig-3
+    consensus tolerance (server disagreement < 1e-3, max server error to
+    w* < 0.05) while BytesTracker reports >= 3.5x fewer on-wire bytes than
+    uncompressed float32 gossip; the metadata byte counts equal the
+    analytic closed forms."""
+    from repro.comm.accounting import analytic_row_bytes
+    from repro.comm.compressors import make_compressor
+    from repro.core import FLTopology, init_dfl_state, make_engine
+    from repro.data import RegressionSpec, make_regression_task
+    from repro.optim import sgd
+
+    m, n, t_c, t_s = 5, 5, S(25, 10), S(25, 10)
+    epochs = S(150, 8)
+    d = 32
+    rng = np.random.default_rng(7)
+    w_true = tuple(float(v) for v in
+                   np.concatenate([rng.normal(0, 2.0, d - 1), [2.0]]))
+    topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                      t_server=t_s, graph_kind="ring")
+    task = make_regression_task(
+        topo, RegressionSpec(w_star=w_true, heterogeneity=0.3), seed=0)
+    w_star = task["w_star"]
+    gamma = 0.4 / (9.0 * t_c)
+
+    # metadata-vs-analytic cross-check rides along with the sweep
+    ok = all(make_compressor(s).wire_bytes_per_row(dd)
+             == analytic_row_bytes(make_compressor(s), dd)
+             for s in ("int8", "int4", "top_k:0.05", "random_k:0.1")
+             for dd in (2, d, 1000))
+    record("compressed_consensus", "bytes_metadata_matches_analytic", ok)
+
+    sweep = {
+        "none": ("none", False),
+        "int8": ("int8", False),
+        "int8_ef": ("int8", True),
+        "int4_ef": ("int4", True),
+        "top_k10_ef": ("top_k:0.10", True),
+    }
+    from repro.core import consensus as cns
+
+    a_np = topo.mixing_matrix()
+    stats = {}
+    for label, (spec, use_ef) in sweep.items():
+        for mode in ("gossip", "gossip_blocked"):
+            if mode == "gossip_blocked":
+                # inject a right-sized blocked backend: the default 4 MiB
+                # block would pad this 32-d model 100k-fold per round
+                backend = cns.make_backend(
+                    "gossip_blocked", a_np, t_s, block=256,
+                    compression=spec, error_feedback=use_ef)
+                kw = {"consensus_backend": backend}
+            else:
+                kw = {"consensus_mode": mode, "compression": spec,
+                      "error_feedback": use_ef}
+            engine = make_engine(topo, task["loss_fn"], sgd(gamma), **kw)
+            state = init_dfl_state(engine.cfg, jnp.zeros((d,)), sgd(gamma),
+                                   jax.random.key(0))
+            t0 = time.time()
+            state, hist = engine.run(state, epochs, task["batch_fn"])
+            wall = time.time() - t0
+            servers = np.asarray(state.client_params[:, 0])
+            err = float(np.linalg.norm(servers - w_star, axis=-1).max())
+            dis = hist["disagreement"][-1]
+            tag = f"{label}_{mode}"
+            record("compressed_consensus", f"{tag}_final_err", round(err, 5))
+            record("compressed_consensus", f"{tag}_final_disagreement",
+                   f"{dis:.3e}")
+            record("compressed_consensus", f"{tag}_wall_s", round(wall, 2))
+            if "wire_mb" in hist:
+                record("compressed_consensus", f"{tag}_wire_mb",
+                       round(sum(hist["wire_mb"]), 4))
+                record("compressed_consensus", f"{tag}_bytes_ratio",
+                       round(hist["wire_ratio"][-1], 3))
+            stats[tag] = {"err": err, "dis": dis,
+                          "ratio": hist.get("wire_ratio", [1.0])[-1]}
+    hero = stats["int8_ef_gossip"]
+    record("compressed_consensus", "int8_ef_reaches_fig3_tolerance",
+           bool(hero["dis"] < 1e-3 and hero["err"] < 0.05))
+    record("compressed_consensus", "int8_ef_bytes_ratio_ge_3.5",
+           bool(hero["ratio"] >= 3.5))
 
 
 BENCHES = {
@@ -459,21 +571,40 @@ BENCHES = {
     "dynamic_federation": bench_dynamic_federation,
     "directed_federation": bench_directed_federation,
     "consensus_backends": bench_consensus_backends,
+    "compressed_consensus": bench_compressed_consensus,
     "kernel_micro": bench_kernel_micro,
     "lm_epoch_throughput": bench_lm_epoch_throughput,
 }
 
 
 def main() -> None:
+    global SMOKE
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=tuple(BENCHES), default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark subset, e.g. "
+                         "'kernel_micro,topology_sweep'")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (seconds per bench): keeps benchmarks "
+                         "executable in the CI fast job; numbers are not "
+                         "meaningful")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(BENCHES)
+    SMOKE = args.smoke
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in BENCHES]
+        if unknown:
+            raise SystemExit(f"unknown benchmark(s) {unknown}; choose from "
+                             f"{list(BENCHES)}")
+    else:
+        names = list(BENCHES)
     print("name,metric,value")
     for name in names:
         BENCHES[name]()
     os.makedirs(OUT, exist_ok=True)
-    with open(os.path.join(OUT, "bench_results.csv"), "w") as f:
+    # smoke numbers are for execution coverage only: never overwrite the
+    # recorded full-size results with them
+    out_name = "bench_results_smoke.csv" if SMOKE else "bench_results.csv"
+    with open(os.path.join(OUT, out_name), "w") as f:
         f.write("name,metric,value\n")
         for row in RESULTS:
             f.write(",".join(str(r) for r in row) + "\n")

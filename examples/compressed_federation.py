@@ -1,0 +1,72 @@
+"""Compressed gossip: shipping int8 (or 5% top-k) replicas between servers.
+
+    PYTHONPATH=src python examples/compressed_federation.py
+
+The global-training periods of Algorithm 1 are pure inter-server
+communication — every consensus round moves a full model replica across
+every live edge.  This example runs the paper's regression setting (widened
+to 32 features so byte counts mean something) under the `repro.comm`
+compression layer and prints, per configuration:
+
+  * bytes actually shipped per epoch (`BytesTracker`, host-side ledger),
+  * the compression ratio vs float32 replicas on the same links,
+  * final consensus error (server disagreement) and distance to w*.
+
+Watch two things:
+
+  1. int8 quantization with error feedback tracks the uncompressed run at
+     ~1/4 the wire bytes — the contraction of the consensus period absorbs
+     the (zero-mean) quantization noise;
+  2. top-k sparsification of the WHOLE replica is visibly lossy at period
+     level (every broadcast zeroes the unshipped coordinates): error
+     feedback claws back a large part of the gap — the residual re-offers
+     every withheld coordinate until it ships — but the quantizers remain
+     the practical choice for model-replica gossip; sparsifiers shine on
+     sparse updates, not dense replicas.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FLTopology, init_dfl_state, make_engine
+from repro.data import RegressionSpec, make_regression_task
+from repro.optim import sgd
+
+
+def main() -> None:
+    m, n, t_c, t_s, epochs, d = 5, 5, 25, 25, 120, 32
+    rng = np.random.default_rng(7)
+    w_true = tuple(float(v) for v in
+                   np.concatenate([rng.normal(0, 2.0, d - 1), [2.0]]))
+    topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                      t_server=t_s, graph_kind="ring")
+    task = make_regression_task(
+        topo, RegressionSpec(w_star=w_true, heterogeneity=0.3), seed=0)
+    gamma = 0.4 / (9.0 * t_c)
+
+    configs = [
+        ("uncompressed", "none", False),
+        ("int8", "int8", False),
+        ("int8 + EF", "int8", True),
+        ("int4 + EF", "int4", True),
+        ("top_k 25%", "top_k:0.25", False),
+        ("top_k 25% + EF", "top_k:0.25", True),
+    ]
+    print(f"{'config':>16s} {'wire MB':>9s} {'ratio':>6s} "
+          f"{'disagreement':>13s} {'err to w*':>10s}")
+    for label, spec, use_ef in configs:
+        engine = make_engine(topo, task["loss_fn"], sgd(gamma),
+                             compression=spec, error_feedback=use_ef)
+        state = init_dfl_state(engine.cfg, jnp.zeros((d,)), sgd(gamma),
+                               jax.random.key(0))
+        state, hist = engine.run(state, epochs, task["batch_fn"])
+        servers = np.asarray(state.client_params[:, 0])
+        err = float(np.linalg.norm(servers - task["w_star"], axis=-1).max())
+        mb = sum(hist.get("wire_mb", [0.0]))
+        ratio = hist.get("wire_ratio", [1.0])[-1]
+        print(f"{label:>16s} {mb:9.3f} {ratio:6.2f} "
+              f"{hist['disagreement'][-1]:13.3e} {err:10.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Compressed-gossip communication subsystem.
+
+The paper's global-training periods are pure inter-server communication:
+every consensus round ships a full model replica across every live edge
+(Eq. 5), which dominates the epoch cost once the federation or the model
+grows.  This package puts a lossy-compression layer under the consensus
+execution backends (``core.consensus.ConsensusBackend``):
+
+* ``comm.compressors``     — pure compress/decompress pairs (identity,
+                             int8/int4 stochastic-rounding quantization
+                             with per-chunk scales, top-k and random-k
+                             sparsification), all usable inside jit;
+* ``comm.error_feedback``  — the EF residual recursion that keeps lossy
+                             compression from biasing consensus;
+* ``comm.accounting``      — host-side on-wire byte accounting
+                             (``BytesTracker``, mirroring
+                             ``core.schedule.SigmaTracker``), cross-checked
+                             against closed-form analytic counts.
+
+Integration points: ``core.consensus.CompressedBackend`` wraps any backend,
+``core.dfl.DFLConfig.compression`` / ``error_feedback`` select it, the EF
+residual rides in ``core.dfl.DFLState.ef_residual``, and the dynamic engine
+reports per-epoch wire bytes.  See docs/dynamic_federation.md §compression.
+"""
+from repro.comm.compressors import (Compressed, Compressor,
+                                    IdentityCompressor, RandomKCompressor,
+                                    StochasticQuantizer, TopKCompressor,
+                                    make_compressor, roundtrip_tree,
+                                    tree_message_elems,
+                                    tree_wire_bytes_per_server)
+from repro.comm.error_feedback import ef_roundtrip, init_ef_residual
+from repro.comm.accounting import (BytesTracker, analytic_leaf_bytes,
+                                   analytic_row_bytes,
+                                   uncompressed_row_bytes)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

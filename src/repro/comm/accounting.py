@@ -1,0 +1,121 @@
+"""On-wire byte accounting for the compressed-gossip layer.
+
+``BytesTracker`` mirrors ``core.schedule.SigmaTracker``: a host-side
+per-epoch accumulator the dynamic engine (and the static trainer) updates
+once per epoch.  The count follows the payload-flooding wire model of
+``comm.compressors``: during one consensus period every live DIRECTED link
+carries one compressed row message per round, so
+
+    epoch bytes = sum over links (i <- j)  of  T_S * row_bytes
+    link (i <- j) is live iff  A_p[i, j] != 0, i != j
+
+with ``row_bytes`` the compressor-metadata bytes of one server's message
+(``compressors.tree_wire_bytes_per_server``), plus 4 bytes per message for
+the push-sum weight scalar when ratio consensus is on.  The tracker also
+carries the float32-uncompressed baseline of the SAME traffic so the
+headline compression ratio needs no second run.
+
+``analytic_row_bytes`` is the INDEPENDENT closed-form count per compressor
+family; tests and the ``compressed_consensus`` benchmark cross-check it
+against the metadata-derived ``Compressor.wire_bytes_per_row``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.comm import compressors as cp
+
+
+def uncompressed_row_bytes(d: int, bytes_per_elem: int = 4) -> int:
+    """Baseline: one float32 (by default) replica row on the wire."""
+    return d * bytes_per_elem
+
+
+def analytic_row_bytes(compressor: cp.Compressor, d: int) -> int:
+    """Closed-form on-wire bytes of one compressed d-element row — written
+    independently of ``Compressor.wire_bytes_per_row`` (which derives the
+    count from the actual payload shapes) so the two can cross-check."""
+    if isinstance(compressor, cp.IdentityCompressor):
+        return 4 * d
+    if isinstance(compressor, cp.StochasticQuantizer):
+        nc = -(-d // compressor.chunk)                    # ceil(d / chunk)
+        code_bytes = int(np.ceil(d * compressor.bits / 8))  # codes unpadded
+        return code_bytes + 4 * nc                        # + f32 scales
+    if isinstance(compressor, cp.TopKCompressor):
+        return compressor.k_for(d) * (4 + 4)              # values + indices
+    if isinstance(compressor, cp.RandomKCompressor):
+        return compressor.k_for(d) * 4                    # seed-shared idx
+    raise ValueError(f"no analytic byte count for {compressor!r}")
+
+
+def analytic_leaf_bytes(compressor: cp.Compressor, shape) -> int:
+    """Closed form of ``Compressor.wire_bytes_per_leaf`` for a server-tree
+    leaf shape (leading axis = server).  Shape-preserving quantizers chunk
+    the leaf's LAST axis per row, so the scale count follows the leaf's
+    row structure; flatten-based compressors reduce to the flat-row form."""
+    shape = tuple(shape)
+    d = int(np.prod(shape[1:]))
+    if isinstance(compressor, cp.StochasticQuantizer):
+        rows = int(np.prod(shape[1:-1])) if len(shape) > 2 else 1
+        length = shape[-1] if len(shape) > 1 else 1
+        nc = rows * -(-length // compressor.chunk)
+        return int(np.ceil(d * compressor.bits / 8)) + 4 * nc
+    return analytic_row_bytes(compressor, d)
+
+
+class BytesTracker:
+    """Host-side on-wire byte accumulator for compressed consensus.
+
+    Per epoch, ``update`` takes the epoch's mixing matrix (its off-diagonal
+    support = the live directed links), the round count, the per-row
+    compressed bytes and the per-row element count, and returns this
+    epoch's total; ``per_link`` holds the per-link (M, M) byte matrix of
+    the LAST epoch (entry [i, j] = bytes shipped j -> i this epoch).
+    Cumulative totals drive ``ratio()`` — uncompressed-f32 bytes over
+    compressed bytes for identical traffic."""
+
+    def __init__(self, compressor: cp.Compressor, *, push_sum: bool = False,
+                 baseline_bytes_per_elem: int = 4):
+        self.compressor = compressor
+        self.push_sum = push_sum
+        self.baseline_bytes_per_elem = baseline_bytes_per_elem
+        self.total_bytes = 0
+        self.baseline_bytes = 0
+        self.per_link: Optional[np.ndarray] = None
+        self.history: List[Dict[str, float]] = []
+
+    def _msg_bytes(self, row_bytes: int) -> int:
+        # push-sum ships the (num, w) pair: + one f32 weight scalar per msg
+        return row_bytes + (4 if self.push_sum else 0)
+
+    def epoch_link_bytes(self, a_np: np.ndarray, t_server: int,
+                         row_bytes: int) -> np.ndarray:
+        """(M, M) int64 matrix of this epoch's per-link bytes: entry [i, j]
+        counts the j -> i messages (one per round on every live link)."""
+        a = np.asarray(a_np)
+        live = (a != 0) & ~np.eye(a.shape[0], dtype=bool)
+        return live.astype(np.int64) * (t_server * self._msg_bytes(row_bytes))
+
+    def update(self, a_np: np.ndarray, t_server: int, *, row_bytes: int,
+               elems_per_row: int) -> float:
+        """Account one epoch; returns its total on-wire bytes."""
+        self.per_link = self.epoch_link_bytes(a_np, t_server, row_bytes)
+        epoch_bytes = int(self.per_link.sum())
+        n_msgs = int((self.per_link > 0).sum()) * t_server
+        base_row = self._msg_bytes(uncompressed_row_bytes(
+            elems_per_row, self.baseline_bytes_per_elem))
+        epoch_baseline = n_msgs * base_row
+        self.total_bytes += epoch_bytes
+        self.baseline_bytes += epoch_baseline
+        self.history.append({"bytes": float(epoch_bytes),
+                             "baseline": float(epoch_baseline)})
+        return float(epoch_bytes)
+
+    def ratio(self) -> float:
+        """Cumulative compression ratio: uncompressed-f32 bytes of the same
+        traffic over actually-shipped bytes (>= 1 for real compressors)."""
+        if self.total_bytes == 0:
+            return float("inf") if self.baseline_bytes else 1.0
+        return self.baseline_bytes / self.total_bytes

@@ -1,0 +1,365 @@
+"""Lossy compressors for inter-server gossip messages.
+
+Every compressor is a pure ``compress``/``decompress`` pair over 2-D
+``(M, d)`` arrays — row i is server i's flattened outgoing message — with
+static output shapes, so both directions trace cleanly inside jit.  The
+consensus period then mixes the DECOMPRESSED values
+(``core.consensus.CompressedBackend``): mathematically that is exactly what
+every receiver reconstructs from the on-wire payload.
+
+Wire model.  Gossip is linear in the payloads, so one compressed message
+per server per consensus period, forwarded T_S hops ("payload flooding"),
+realises the whole T_S-round period on decompressed values.  The on-wire
+cost accounted by ``comm.accounting.BytesTracker`` is therefore
+
+    live directed links  x  T_S rounds  x  wire_bytes_per_row.
+
+Compressors:
+
+* ``IdentityCompressor``            exact passthrough (accounting baseline).
+* ``StochasticQuantizer(bits, chunk)``  int8/int4 with per-chunk absmax
+      scales and UNBIASED stochastic rounding ``q = floor(x/s + u)``,
+      ``u ~ U[0, 1)``: ``E[decompress] = x``, so quantization noise is
+      zero-mean and error feedback only has to absorb its variance.  With
+      no rng key the rounding degrades to deterministic round-to-nearest.
+* ``TopKCompressor(ratio)``         per-row magnitude top-k: values plus
+      explicit int32 indices cross the wire.
+* ``RandomKCompressor(ratio)``      k coordinates sampled per call from the
+      SHARED rng key: every server transmits the same coordinate set, so
+      the indices never cross the wire (receivers regenerate them from the
+      shared seed) and the gossip operator acts identically per coordinate.
+
+``make_compressor`` parses the ``DFLConfig.compression`` /
+``--compression`` spec grammar::
+
+    none | int8[:CHUNK] | int4[:CHUNK] | top_k:RATIO | random_k:RATIO
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Compressed(NamedTuple):
+    """On-wire representation of one compressed ``(M, d)`` message batch.
+
+    ``data`` is the payload (quantized codes or kept values); ``scale`` the
+    per-chunk dequantization scales (quantizers only); ``idx`` the kept
+    coordinates (sparsifiers only — shape ``(M, k)`` for top-k, shared
+    ``(k,)`` for seed-coordinated random-k).  Unused fields are ``None``."""
+
+    data: jax.Array
+    scale: Optional[jax.Array] = None
+    idx: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base: a pure compress/decompress pair + metadata-derived wire bytes.
+
+    ``wire_bits_data`` is the TRUE on-wire width of one ``data`` element —
+    it may be narrower than the array dtype carrying it in memory (int4
+    codes ride in int8 arrays).  ``idx_on_wire`` is False when receivers
+    can reconstruct the indices without transmission (shared-seed
+    random-k).  ``shape_preserving`` marks compressors whose round-trip is
+    purely elementwise over the input's natural shape (chunking along the
+    LAST axis only): ``roundtrip_tree`` then skips the ``(M, d)`` flatten
+    entirely, which under pjit is the difference between per-shard local
+    compute and replicating every leaf (the flatten merges sharded weight
+    axes)."""
+
+    wire_bits_data = 32
+    idx_on_wire = True
+    shape_preserving = False
+
+    name = "?"
+
+    def compress(self, x: jax.Array,
+                 key: Optional[jax.Array] = None) -> Compressed:
+        raise NotImplementedError
+
+    def decompress(self, comp: Compressed, d: int) -> jax.Array:
+        raise NotImplementedError
+
+    def roundtrip(self, x: jax.Array,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+        """What the receivers reconstruct: D(C(x)), in ``x``'s dtype."""
+        return self.decompress(self.compress(x, key),
+                               x.shape[-1]).astype(x.dtype)
+
+    def wire_bytes_per_row(self, d: int) -> int:
+        """On-wire bytes of ONE server's compressed d-element message,
+        derived from the ACTUAL compressed representation (``jax.eval_shape``
+        over ``compress`` — payload metadata, not a closed form; the
+        independent closed forms live in ``comm.accounting.
+        analytic_row_bytes`` and the two are cross-checked by tests and the
+        ``compressed_consensus`` benchmark)."""
+        return self.wire_bytes_per_leaf((1, d))
+
+    def wire_bytes_per_leaf(self, shape) -> int:
+        """Bytes of one server's compressed message for a server-tree leaf
+        of the given shape (leading axis = server): what actually crosses
+        the wire, derived from the payload metadata of compressing exactly
+        what ``roundtrip_tree`` compresses — the flat ``(1, d)`` row for
+        flatten-based compressors, the natural ``(1, *w)`` shape for
+        shape-preserving ones (their chunk count follows the leaf's last
+        axis)."""
+        shape = tuple(shape)
+        if not self.shape_preserving:
+            shape = (1, int(np.prod(shape[1:])))
+        else:
+            shape = (1,) + shape[1:]
+        comp = jax.eval_shape(
+            lambda x: self.compress(x, key=jax.random.key(0)),
+            jax.ShapeDtypeStruct(shape, jnp.float32))
+        total = int(np.ceil(comp.data.size * self.wire_bits_data / 8))
+        if comp.scale is not None:
+            total += comp.scale.size * comp.scale.dtype.itemsize
+        if comp.idx is not None and self.idx_on_wire:
+            total += comp.idx.size * comp.idx.dtype.itemsize
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCompressor(Compressor):
+    """Exact passthrough — the float32-wire baseline of the accounting, and
+    the compressor under which the whole layer degenerates exactly."""
+
+    name = "identity"
+    shape_preserving = True
+
+    def compress(self, x, key=None):
+        del key
+        return Compressed(data=x)
+
+    def decompress(self, comp, d):
+        return comp.data[..., :d]
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticQuantizer(Compressor):
+    """int8/int4 quantization with per-chunk absmax scales.
+
+    The LAST axis of the input is split into ``chunk``-element chunks (the
+    last may be partial); chunk c gets scale ``s_c = absmax_c / qmax``
+    (``qmax = 2^{bits-1}-1``) and codes ``q = clip(floor(x/s_c + u), -qmax,
+    qmax)`` with dither ``u ~ U[0, 1)`` — unbiased stochastic rounding
+    (round-to-nearest when no key is given).  On the wire: UNPADDED codes
+    + one f32 scale per chunk; int4 codes are carried in int8 arrays in
+    memory but counted at 4 bits.
+
+    Shape preserving: every op is elementwise except a last-axis-only
+    reshape, so ``(M, *w)`` leaves compress in their natural layout — under
+    pjit each device quantizes its local shard (chunk boundaries follow the
+    leaf's rows, which is also what a real per-tensor wire format does),
+    no gather, no flatten.  Pass ``dither`` explicitly to share the
+    randomness with a fused kernel (``kernels.consensus_mix.
+    quantized_consensus_mix_2d`` parity)."""
+
+    bits: int = 8
+    chunk: int = 256
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError(f"bits must be 4 or 8, got {self.bits}")
+        if self.chunk < 1:
+            raise ValueError("chunk must be >= 1")
+
+    @property
+    def name(self):
+        return f"int{self.bits}"
+
+    @property
+    def wire_bits_data(self):
+        return self.bits
+
+    shape_preserving = True
+
+    @property
+    def qmax(self) -> float:
+        return float(2 ** (self.bits - 1) - 1)
+
+    def _scales(self, x32: jax.Array) -> jax.Array:
+        """(..., nc) per-chunk scales over the last axis of a float32 array
+        (zero-padded virtually: a trailing partial chunk uses only its real
+        elements)."""
+        length = x32.shape[-1]
+        nc = -(-length // self.chunk)
+        pad = nc * self.chunk - length
+        if pad:
+            x32 = jnp.pad(x32, [(0, 0)] * (x32.ndim - 1) + [(0, pad)])
+        chunked = x32.reshape(x32.shape[:-1] + (nc, self.chunk))
+        absmax = jnp.max(jnp.abs(chunked), axis=-1)
+        return jnp.where(absmax > 0, absmax / self.qmax, 1.0)
+
+    def _per_elem(self, scale: jax.Array, d: int) -> jax.Array:
+        """Broadcast (..., nc) chunk scales back onto the d real last-axis
+        elements — codes ship UNPADDED, only the scales carry the chunk
+        structure."""
+        return jnp.repeat(scale, self.chunk, axis=-1)[..., :d]
+
+    def compress(self, x, key=None, *, dither=None):
+        d = x.shape[-1]
+        x32 = x.astype(jnp.float32)
+        scale = self._scales(x32)
+        if dither is None:
+            dither = (jax.random.uniform(key, x32.shape)
+                      if key is not None else 0.5)
+        q = jnp.clip(jnp.floor(x32 / self._per_elem(scale, d) + dither),
+                     -self.qmax, self.qmax).astype(jnp.int8)
+        return Compressed(data=q, scale=scale)
+
+    def decompress(self, comp, d):
+        scale = self._per_elem(comp.scale, d)
+        return comp.data[..., :d].astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor(Compressor):
+    """Per-row magnitude top-k sparsification: each server keeps its
+    ``k = max(1, round(ratio * d))`` largest-|.| coordinates.  Biased (EF
+    recommended); both values AND int32 indices cross the wire — contrast
+    ``RandomKCompressor``, whose shared coordinates cost zero index bytes."""
+
+    ratio: float = 0.05
+
+    name = "top_k"
+
+    def __post_init__(self):
+        if not 0.0 < self.ratio <= 1.0:
+            raise ValueError(f"top_k ratio must be in (0, 1], got {self.ratio}")
+
+    def k_for(self, d: int) -> int:
+        return max(1, min(d, int(round(self.ratio * d))))
+
+    def compress(self, x, key=None):
+        del key
+        k = self.k_for(x.shape[1])
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        vals = jnp.take_along_axis(x, idx, axis=1)
+        return Compressed(data=vals, idx=idx.astype(jnp.int32))
+
+    def decompress(self, comp, d):
+        m = comp.data.shape[0]
+        out = jnp.zeros((m, d), jnp.float32)
+        rows = jnp.arange(m)[:, None]
+        return out.at[rows, comp.idx].set(comp.data.astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomKCompressor(Compressor):
+    """Seed-coordinated random-k sparsification: ONE random coordinate set
+    per call (from the shared rng key) used by every server, so receivers
+    regenerate the indices from the seed and only the values cross the wire.
+    Biased per call (no d/k rescale — error feedback absorbs it, and the
+    unscaled form keeps values bounded, which quantizer-style downstream
+    stages prefer)."""
+
+    ratio: float = 0.05
+
+    name = "random_k"
+    idx_on_wire = False
+
+    def __post_init__(self):
+        if not 0.0 < self.ratio <= 1.0:
+            raise ValueError(
+                f"random_k ratio must be in (0, 1], got {self.ratio}")
+
+    def k_for(self, d: int) -> int:
+        return max(1, min(d, int(round(self.ratio * d))))
+
+    def compress(self, x, key=None):
+        if key is None:
+            raise ValueError("random_k needs the shared rng key (the "
+                             "coordinate set IS the seed)")
+        d = x.shape[1]
+        idx = jax.random.permutation(key, d)[: self.k_for(d)]
+        return Compressed(data=x[:, idx], idx=idx.astype(jnp.int32))
+
+    def decompress(self, comp, d):
+        m = comp.data.shape[0]
+        out = jnp.zeros((m, d), jnp.float32)
+        return out.at[:, comp.idx].set(comp.data.astype(jnp.float32))
+
+
+def make_compressor(spec: str) -> Compressor:
+    """Parse a compression spec string (see module docstring grammar).
+
+    ``"none"`` deliberately raises: it means the compression layer is OFF
+    (no wrapper is built at all), not that an identity compressor runs —
+    callers guard on it before resolving a compressor."""
+    s = spec.strip()
+    if s in ("none", ""):
+        raise ValueError("compression='none' disables the layer; there is "
+                         "no compressor to build")
+    head, _, arg = s.partition(":")
+    if head in ("int8", "int4"):
+        chunk = int(arg) if arg else 256
+        return StochasticQuantizer(bits=int(head[3:]), chunk=chunk)
+    if head in ("top_k", "random_k"):
+        if not arg:
+            raise ValueError(f"{head} needs a keep ratio, e.g. '{head}:0.05'")
+        cls = TopKCompressor if head == "top_k" else RandomKCompressor
+        return cls(ratio=float(arg))
+    if head == "identity":
+        return IdentityCompressor()
+    raise ValueError(f"unknown compression spec {spec!r}; expected none | "
+                     f"int8[:chunk] | int4[:chunk] | top_k:ratio | "
+                     f"random_k:ratio")
+
+
+# ---------------------------------------------------------------------------
+# pytree wrappers over the (M, d) row layout
+# ---------------------------------------------------------------------------
+
+
+def roundtrip_tree(compressor: Compressor, tree: Any,
+                   key: Optional[jax.Array] = None,
+                   flat_sharding=None) -> Any:
+    """Wire-simulate a server tree (leaves ``(M, *w)``): each leaf is
+    flattened to ``(M, d)`` rows, compressed and decompressed per leaf (the
+    rng key folded per leaf index so dither/coordinates differ across
+    leaves), and reshaped back in the leaf's dtype.
+
+    Shape-preserving compressors (identity, the quantizers) skip the
+    flatten and round-trip each leaf in its natural ``(M, *w)`` layout —
+    elementwise per-shard work under pjit.  Flatten-based compressors
+    (top-k / random-k need the whole row to rank coordinates) reshape to
+    ``(M, d)``; ``flat_sharding`` is an optional NamedSharding for that
+    view (e.g. ``P("server", ("replica", "model"))`` — the same constraint
+    ``consensus.gossip_scan_blocked`` uses): without it the partitioner
+    replicates the merged weight axes, which at LM scale is an OOM."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i) if key is not None else None
+        if compressor.shape_preserving:
+            out.append(compressor.roundtrip(leaf, k))
+            continue
+        x = leaf.reshape(leaf.shape[0], -1)
+        if flat_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, flat_sharding)
+        y = compressor.roundtrip(x, k)
+        if flat_sharding is not None:
+            y = jax.lax.with_sharding_constraint(y, flat_sharding)
+        out.append(y.reshape(leaf.shape))
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_message_elems(tree: Any) -> int:
+    """Elements of ONE server's message (the per-row model size): the sum
+    over leaves of everything behind the leading server axis."""
+    return sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(tree))
+
+
+def tree_wire_bytes_per_server(compressor: Compressor, tree: Any) -> int:
+    """On-wire bytes of one server's full compressed message: the per-leaf
+    ``wire_bytes_per_leaf`` summed over leaves (chunking/top-k rounding
+    apply per leaf — and per leaf ROW for shape-preserving compressors —
+    exactly as the in-graph wire simulation does)."""
+    return sum(compressor.wire_bytes_per_leaf(l.shape)
+               for l in jax.tree.leaves(tree))

@@ -1,0 +1,56 @@
+"""Error feedback (EF) for compressed gossip.
+
+Lossy compression of the consensus messages perturbs what the mixing
+operator averages; for BIASED compressors (top-k keeps only the largest
+coordinates, quantizers clip) the perturbation need not vanish and the
+federation can converge to the wrong point.  Error feedback (Seide et al.
+2014; Stich et al. 2018; Karimireddy et al. 2019) keeps each server's
+compression residual locally and folds it into the NEXT period's message:
+
+    msg_i = C(x_i + e_i)                    (crosses the wire)
+    e_i'  = (x_i + e_i) - D(msg_i)          (stays local)
+
+Nothing extra is transmitted; whatever information compression withheld in
+period p is re-offered in period p+1, so the running sum of what receivers
+decode tracks the running sum of the true messages and compression error
+stops accumulating in the consensus direction.  With the identity
+compressor ``D(C(x)) = x`` exactly, the residual is identically zero, and
+the layer degenerates to the uncompressed path.
+
+State: the residual pytree (leaves ``(M, *w)``, mirroring the server
+aggregates) rides across epochs in ``core.dfl.DFLState.ef_residual`` and
+is reset to zero on fault surgery (``core.engine.DynamicFederationEngine``):
+the old residuals are wire state of a federation that no longer exists,
+exactly like the push-sum weights.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.compressors import Compressor, roundtrip_tree
+
+
+def init_ef_residual(server_tree: Any) -> Any:
+    """Zero residual, shaped like the server aggregates (leaves (M, *w))."""
+    return jax.tree.map(jnp.zeros_like, server_tree)
+
+
+def ef_roundtrip(compressor: Compressor, tree: Any, residual: Any,
+                 key: Optional[jax.Array] = None,
+                 flat_sharding=None) -> Tuple[Any, Any]:
+    """One error-compensated transmission of a server tree.
+
+    Returns ``(decompressed message tree, new residual)``; the message tree
+    is what every receiver reconstructs and what the consensus operator
+    mixes.  Residuals accumulate in the leaf dtype (they are bounded by one
+    compression step, so bf16 residuals stay well-conditioned).
+    ``flat_sharding`` is forwarded to the wire simulation (see
+    ``compressors.roundtrip_tree``)."""
+    corrected = jax.tree.map(lambda x, e: x + e, tree, residual)
+    msg = roundtrip_tree(compressor, corrected, key,
+                         flat_sharding=flat_sharding)
+    new_residual = jax.tree.map(lambda c, q: c - q, corrected, msg)
+    return msg, new_residual

@@ -8,7 +8,8 @@ from repro.core.topology import (FLTopology, build_graph, is_connected,
                                  is_strongly_connected, random_orientation,
                                  random_direction_drop, out_degree_weights,
                                  check_row_stochastic, perron_weights,
-                                 push_sum_deviation, sigma_push_sum)
+                                 push_sum_deviation, sigma_push_sum,
+                                 lambda_2, weaken_directed_links)
 from repro.core.consensus import (mix_pytree, gossip_scan, gossip_scan_tv,
                                   gossip_scan_blocked, gossip_collapsed,
                                   gossip_chebyshev, collapse_mixing,
@@ -17,6 +18,7 @@ from repro.core.consensus import (mix_pytree, gossip_scan, gossip_scan_tv,
                                   init_push_sum, gossip_push_sum,
                                   gossip_push_sum_tv, gossip_push_sum_blocked,
                                   ConsensusBackend, ShardMapBackend,
+                                  CompressedBackend, lambda2_traced,
                                   make_backend)
 from repro.core.dfl import (DFLConfig, DFLState, DFLMetrics,
                             build_dfl_epoch_step, build_fedavg_epoch_step,
@@ -24,7 +26,8 @@ from repro.core.dfl import (DFLConfig, DFLState, DFLMetrics,
                             replicate_to_clients, server_mean,
                             masked_server_mean, carry_forward,
                             broadcast_to_clients, global_mean,
-                            disagreement_norm, max_client_drift)
+                            disagreement_norm, max_client_drift,
+                            active_compressor, wants_error_feedback)
 from repro.core.schedule import (EpochSchedule, ParticipationSchedule,
                                  TopologySchedule, SigmaTracker,
                                  FaultEvent, FaultSchedule)

@@ -42,6 +42,12 @@ built with.  ``make_backend`` maps a ``DFLConfig.consensus_mode`` string to
 a backend; ``ShardMapBackend`` is mesh-aware and therefore constructed by
 the launcher (``launch.sharding.fl_consensus_backend``) and injected via
 ``DFLConfig.consensus_backend``.
+
+**Compressed consensus.**  ``CompressedBackend`` wraps any backend with the
+``repro.comm`` wire simulation — lossy compression (quantization /
+sparsification) of each server's outgoing message plus optional error
+feedback — so every execution strategy composes with every compressor; the
+host-side byte ledger is ``comm.accounting.BytesTracker``.
 """
 from __future__ import annotations
 
@@ -51,6 +57,10 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.comm import compressors as _compressors
+from repro.comm import error_feedback as _ef
+from repro.core.topology import lambda_2 as tp_lambda_2
 
 try:                                   # jax >= 0.6: public jax.shard_map
     _shard_map = jax.shard_map
@@ -334,7 +344,7 @@ def chebyshev_coefficients(a: np.ndarray, rounds: int) -> float:
     return float(1.0 / np.cosh(rounds * np.arccosh(x)))
 
 
-def gossip_chebyshev(a: jax.Array, tree: Any, rounds: int, lam2: float) -> Any:
+def gossip_chebyshev(a: jax.Array, tree: Any, rounds: int, lam2) -> Any:
     """Chebyshev semi-iterative consensus:  w_k = 2 c_k/(lam2 c_{k+1}) A w_{k-1}
     - (c_{k-1}/c_{k+1}) w_{k-2}, with c_k = cosh(k acosh(1/lam2)).
 
@@ -342,27 +352,49 @@ def gossip_chebyshev(a: jax.Array, tree: Any, rounds: int, lam2: float) -> Any:
     ~sqrt(1/(1-lam2)) fewer rounds for the same contraction.  Exactly
     mean-preserving like plain gossip (each update is an affine combination
     of doubly-stochastic operators with coefficients summing to 1).
-    """
+
+    ``lam2`` may be a host-side float (static topology) or a TRACED scalar
+    — the per-epoch spectral estimate a ``TopologySchedule`` feeds through
+    ``schedule.EpochSchedule.lam2`` under dynamic federation.  The
+    recursion therefore carries the bounded ratio ``r_k = c_{k-1}/c_k`` in
+    place of the coefficients themselves (the raw c_k overflow f32 within
+    a few rounds when lam2 is small):
+
+        alpha_k = 2x / (2x - r_k),  beta_k = r_k / (2x - r_k),
+        r_{k+1} = 1 / (2x - r_k),   x = 1/lam2,  r_1 = lam2,
+
+    with ``alpha_k - beta_k = 1`` (mean preservation) for every lam2.
+    A clamped ``lam2 -> 0`` degenerates gracefully to plain repeated
+    mixing (alpha -> 1, beta -> 0)."""
     if rounds == 0:
         return tree
-    if lam2 <= 0.0:
+    if isinstance(lam2, (int, float)) and lam2 <= 0.0:
         return mix_pytree(a, tree)
-    x = 1.0 / lam2
-    c_prev, c_cur = 1.0, x  # c_0, c_1
+    x = 1.0 / jnp.maximum(jnp.asarray(lam2, jnp.float32), 1e-6)
+    r = 1.0 / x          # r_1 = c_0 / c_1 = lam2
 
     w_prev = tree
-    w_cur = mix_pytree(a, tree)  # k = 1 step: T_1(x A / 1) -> A w  scaled below
-    # first step of the semi-iteration is just A w (coefficients work out)
+    w_cur = mix_pytree(a, tree)  # k = 1: the first semi-iterate is just A w
     for _ in range(1, rounds):
-        c_next = 2.0 * x * c_cur - c_prev
-        alpha = 2.0 * x * c_cur / c_next
-        beta = c_prev / c_next
+        denom = 2.0 * x - r
+        alpha, beta = 2.0 * x / denom, r / denom
         mixed = mix_pytree(a, w_cur)
         w_next = jax.tree.map(
             lambda m, p: (alpha * m - beta * p).astype(m.dtype), mixed, w_prev)
         w_prev, w_cur = w_cur, w_next
-        c_prev, c_cur = c_cur, c_next
+        r = 1.0 / denom
     return w_cur
+
+
+def lambda2_traced(a: jax.Array) -> jax.Array:
+    """|lambda_2| of a traced symmetric mixing matrix, computed in-graph
+    (tiny (M, M) eigendecomposition).  Fallback for calling a spectral
+    backend with a traced ``A_p`` but no host-side estimate — the engine
+    normally feeds ``topology.lambda_2`` through the schedule instead."""
+    if a.shape[0] < 2:
+        return jnp.zeros((), jnp.float32)
+    ev = jnp.sort(jnp.abs(jnp.linalg.eigvalsh(a)))
+    return ev[-2].astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -528,18 +560,24 @@ class ConsensusBackend:
 
     Class flags gate what a backend can express:
 
-    * ``supports_traced`` — can consume a traced ``A_p`` (False only for
-      strategies needing host-side spectral data, e.g. Chebyshev).
+    * ``supports_traced`` — can consume a traced ``A_p``.
     * ``supports_directed`` — applies the literal ``W <- A W`` update, so
       row-stochastic A and the push-sum correction are well-defined.
     * ``mesh_bound`` — closed over a fixed physical mesh (shard_map): the
       server axis cannot survive fault surgery that changes M.
+    * ``needs_spectral`` — wants a per-epoch spectral estimate ``lam2``
+      alongside a traced ``A_p`` (Chebyshev); the dynamic engine feeds it
+      through ``schedule.EpochSchedule.lam2``.
+    * ``compressed`` — a ``CompressedBackend`` wrapper (lossy wire
+      simulation + error feedback around an inner backend).
     """
 
     name = "?"
     supports_traced = True
     supports_directed = True
     mesh_bound = False
+    needs_spectral = False
+    compressed = False
 
     def __init__(self, a_static: Optional[np.ndarray], t_server: int):
         self.a_static = (None if a_static is None
@@ -554,8 +592,12 @@ class ConsensusBackend:
                              f"static mixing matrix; pass a per-epoch A_p")
         return self.a_static
 
-    def mix(self, tree: Any, a_p: Optional[jax.Array] = None) -> Any:
-        """T_S rounds of ``W <- A W`` over the leading server axis."""
+    def mix(self, tree: Any, a_p: Optional[jax.Array] = None,
+            lam2=None) -> Any:
+        """T_S rounds of ``W <- A W`` over the leading server axis.
+        ``lam2`` is the optional per-epoch spectral hint, consumed only by
+        ``needs_spectral`` backends and ignored everywhere else."""
+        del lam2
         return self._mix(tree, self._resolve(a_p))
 
     def mix_push_sum(self, state: PushSumState,
@@ -629,7 +671,8 @@ class CollapsedBackend(ConsensusBackend):
             0, self.t_server, lambda _, p: a_p @ p,
             jnp.eye(a_p.shape[0], dtype=a_p.dtype))
 
-    def mix(self, tree, a_p=None):
+    def mix(self, tree, a_p=None, lam2=None):
+        del lam2
         return gossip_collapsed(self._eff(a_p), tree)
 
     def mix_push_sum(self, state, a_p=None):
@@ -641,29 +684,38 @@ class CollapsedBackend(ConsensusBackend):
 
 
 class ChebyshevBackend(ConsensusBackend):
-    """Chebyshev semi-iterative gossip.  Needs lambda_2 of the STATIC
-    matrix on the host, so it cannot consume a traced per-epoch ``A_p``;
-    its affine recursion has negative coefficients, so no ratio-consensus
-    (push-sum) analogue exists either."""
+    """Chebyshev semi-iterative gossip.
+
+    Spectral data rides OUTSIDE the matrix: for the static topology,
+    ``lambda_2(A)`` is computed on the host at construction; for a traced
+    per-epoch ``A_p`` (dynamic federation) the matching per-epoch estimate
+    arrives as the traced ``lam2`` operand — the engine computes it
+    host-side per epoch (``topology.lambda_2`` via
+    ``schedule.EpochSchedule.lam2``) since the ratio-parametrised recursion
+    in ``gossip_chebyshev`` handles traced coefficients.  A traced ``A_p``
+    with no estimate falls back to the in-graph ``lambda2_traced``.  The
+    affine recursion has negative coefficients, so no ratio-consensus
+    (push-sum) analogue exists."""
 
     name = "chebyshev"
-    supports_traced = False
     supports_directed = False
+    needs_spectral = True
 
     def __init__(self, a_static, t_server, *, rounds: Optional[int] = None):
-        if a_static is None:
-            raise ValueError("'chebyshev' needs the static mixing matrix up "
-                             "front (lambda_2 is host-side spectral data) "
-                             "and can never take a traced per-epoch A_p")
         super().__init__(a_static, t_server)
-        a_np = np.asarray(a_static)
-        self.lam2 = (float(np.sort(np.abs(
-            np.linalg.eigvalsh(a_np)))[::-1][1])
-            if a_np.shape[0] > 1 else 0.0)
-        self.rounds = rounds or max(1, int(np.ceil(np.sqrt(t_server))))
+        self.lam2 = (None if a_static is None
+                     else tp_lambda_2(np.asarray(a_static)))
+        self.rounds = rounds or max(1, int(np.ceil(np.sqrt(max(t_server,
+                                                               1)))))
 
-    def _mix(self, tree, a):
-        return gossip_chebyshev(a, tree, self.rounds, self.lam2)
+    def mix(self, tree, a_p=None, lam2=None):
+        a = self._resolve(a_p)
+        if lam2 is None:
+            lam2 = self.lam2 if a_p is None else lambda2_traced(a_p)
+        if lam2 is None:
+            raise ValueError("'chebyshev' was built without a static mixing "
+                             "matrix; pass (a_p, lam2) per call")
+        return gossip_chebyshev(a, tree, self.rounds, lam2)
 
 
 class ExactMeanBackend(ConsensusBackend):
@@ -701,6 +753,89 @@ class ShardMapBackend(ConsensusBackend):
         return self._run(a, tree)
 
 
+# ---------------------------------------------------------------------------
+# compressed consensus: the comm subsystem's wrapper over any backend
+# ---------------------------------------------------------------------------
+
+
+class CompressedBackend(ConsensusBackend):
+    """Lossy-compression wrapper around any ``ConsensusBackend`` — the
+    ``repro.comm`` subsystem's hook into the consensus period.
+
+    The wrapped period mixes the DECOMPRESSED server messages: ``mix``
+    becomes ``inner.mix(D(C(W)))`` — mathematically what every receiver
+    reconstructs from the on-wire payload — optionally with error feedback
+    (``comm.error_feedback.ef_roundtrip``) whose per-server residual rides
+    in ``dfl.DFLState.ef_residual``.  Because the T_S rounds are linear in
+    the payloads, shipping each server's ONE compressed payload and letting
+    it propagate T_S hops realises the whole period, so the on-wire cost is
+    live-links x T_S x compressed-row bytes (``comm.accounting.
+    BytesTracker``).  With the identity compressor (and a zero residual)
+    every output is bitwise the inner backend's.
+
+    The push-sum variant compresses the NUMERATOR only; the tiny ``(M,)``
+    weight rides uncompressed (one f32 scalar per message, counted by the
+    tracker).  Capability flags delegate to the inner backend, so the
+    wrapper composes with einsum / blocked / collapsed / chebyshev /
+    shard_map and both mixing modes."""
+
+    compressed = True
+
+    def __init__(self, inner: ConsensusBackend,
+                 compressor: "_compressors.Compressor", *,
+                 error_feedback: bool = True, flat_sharding=None):
+        if getattr(inner, "compressed", False):
+            raise ValueError("refusing to wrap an already-compressed "
+                             "backend: double compression double-counts "
+                             "wire bytes and compounds loss")
+        self.inner = inner
+        self.compressor = compressor
+        self.error_feedback = error_feedback
+        # NamedSharding of the flattened (M, d) leaf views under pjit —
+        # same constraint (and same reason) as gossip_scan_blocked's
+        self.flat_sharding = flat_sharding
+        self.a_static = inner.a_static
+        self.t_server = inner.t_server
+        self.name = f"compressed[{inner.name}+{compressor.name}]"
+        self.supports_traced = inner.supports_traced
+        self.supports_directed = inner.supports_directed
+        self.mesh_bound = inner.mesh_bound
+        self.needs_spectral = inner.needs_spectral
+
+    def _wire(self, tree: Any, residual: Optional[Any],
+              key: Optional[jax.Array]):
+        """Simulate the wire: (decompressed message tree, new residual)."""
+        if residual is not None and self.error_feedback:
+            return _ef.ef_roundtrip(self.compressor, tree, residual, key,
+                                    flat_sharding=self.flat_sharding)
+        return _compressors.roundtrip_tree(
+            self.compressor, tree, key,
+            flat_sharding=self.flat_sharding), residual
+
+    # -- the EF-threading entry points the epoch step calls ------------------
+    def mix_compressed(self, tree: Any, a_p: Optional[jax.Array] = None, *,
+                       residual: Optional[Any] = None,
+                       key: Optional[jax.Array] = None, lam2=None):
+        """``(inner.mix of the wire-simulated tree, new EF residual)``."""
+        msg, new_res = self._wire(tree, residual, key)
+        return self.inner.mix(msg, a_p, lam2=lam2), new_res
+
+    def mix_push_sum_compressed(self, state: PushSumState,
+                                a_p: Optional[jax.Array] = None, *,
+                                residual: Optional[Any] = None,
+                                key: Optional[jax.Array] = None):
+        msg, new_res = self._wire(state.values, residual, key)
+        return self.inner.mix_push_sum(PushSumState(msg, state.weight),
+                                       a_p), new_res
+
+    # -- plain ConsensusBackend interface (no EF state threaded) -------------
+    def mix(self, tree, a_p=None, lam2=None):
+        return self.mix_compressed(tree, a_p, lam2=lam2)[0]
+
+    def mix_push_sum(self, state, a_p=None):
+        return self.mix_push_sum_compressed(state, a_p)[0]
+
+
 BACKEND_MODES = ("gossip", "gossip_blocked", "collapsed", "chebyshev",
                  "exact_mean")
 
@@ -708,21 +843,35 @@ BACKEND_MODES = ("gossip", "gossip_blocked", "collapsed", "chebyshev",
 def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
                  chebyshev_rounds: Optional[int] = None,
                  gossip_flat_sharding=None,
-                 block: int = 4_194_304) -> ConsensusBackend:
+                 block: int = 4_194_304,
+                 compression: str = "none",
+                 error_feedback: bool = False) -> ConsensusBackend:
     """Map a ``DFLConfig.consensus_mode`` string to a ``ConsensusBackend``.
 
-    ``shard_map`` is absent on purpose: it needs a mesh and per-leaf
-    PartitionSpecs, so the launcher builds it directly
-    (``launch.sharding.fl_consensus_backend``)."""
+    ``compression`` other than ``"none"`` (a ``comm.compressors.
+    make_compressor`` spec, e.g. ``"int8"`` / ``"top_k:0.05"``) wraps the
+    resolved backend in a ``CompressedBackend``, optionally with error
+    feedback.  ``shard_map`` is absent on purpose: it needs a mesh and
+    per-leaf PartitionSpecs, so the launcher builds it directly
+    (``launch.sharding.fl_consensus_backend``, which applies the same
+    compression wrap)."""
     if mode == "gossip":
-        return GossipBackend(a_static, t_server)
-    if mode == "gossip_blocked":
-        return BlockedGossipBackend(a_static, t_server, block=block,
-                                    flat_sharding=gossip_flat_sharding)
-    if mode == "collapsed":
-        return CollapsedBackend(a_static, t_server)
-    if mode == "chebyshev":
-        return ChebyshevBackend(a_static, t_server, rounds=chebyshev_rounds)
-    if mode == "exact_mean":
-        return ExactMeanBackend(a_static, t_server)
-    raise ValueError(f"unknown consensus mode {mode!r}")
+        backend = GossipBackend(a_static, t_server)
+    elif mode == "gossip_blocked":
+        backend = BlockedGossipBackend(a_static, t_server, block=block,
+                                       flat_sharding=gossip_flat_sharding)
+    elif mode == "collapsed":
+        backend = CollapsedBackend(a_static, t_server)
+    elif mode == "chebyshev":
+        backend = ChebyshevBackend(a_static, t_server,
+                                   rounds=chebyshev_rounds)
+    elif mode == "exact_mean":
+        backend = ExactMeanBackend(a_static, t_server)
+    else:
+        raise ValueError(f"unknown consensus mode {mode!r}")
+    if compression != "none":
+        backend = CompressedBackend(
+            backend, _compressors.make_compressor(compression),
+            error_feedback=error_feedback,
+            flat_sharding=gossip_flat_sharding)
+    return backend

@@ -80,13 +80,22 @@ class DFLState(NamedTuple):
     ill-conditioned this epoch — and the state the engine must reset on
     server drop/rejoin; each consensus period itself restarts from weight 1
     (see ``consensus.init_push_sum`` for why).  ``None`` in every other
-    mixing mode."""
+    mixing mode.
+
+    ``ef_residual`` is only populated under compressed consensus with error
+    feedback (``DFLConfig.compression`` + ``error_feedback``): the
+    per-server compression residual pytree (leaves ``(M, *w)``, mirroring
+    the server aggregates) of ``comm.error_feedback`` — what each server
+    withheld from the wire last period and re-offers next period.  Like the
+    push-sum weight it is per-server wire state, reset to zero on
+    drop/rejoin surgery by the engine.  ``None`` otherwise."""
 
     client_params: Any
     opt_state: Any
     epoch: jax.Array          # int32 scalar
     rng: jax.Array
     psum_weight: Optional[jax.Array] = None   # (M,) or None
+    ef_residual: Optional[Any] = None         # server-tree pytree or None
 
 
 class DFLMetrics(NamedTuple):
@@ -138,10 +147,23 @@ class DFLConfig:
     # 100B+ archs (DESIGN.md §2).
     grad_microbatches: int = 1
     # Dynamic federation: the epoch step takes an extra EpochSchedule operand
-    # (participation mask + per-epoch mixing matrix) — see module docstring.
-    # chebyshev consensus needs host-side spectral data of the (now traced)
-    # mixing matrix and is rejected in this mode.
+    # (participation mask + per-epoch mixing matrix + optional spectral
+    # estimate for chebyshev) — see module docstring.
     dynamic: bool = False
+    # Lossy inter-server compression (the repro.comm subsystem): a
+    # comm.compressors.make_compressor spec — "none" | "int8[:chunk]" |
+    # "int4[:chunk]" | "top_k:<ratio>" | "random_k:<ratio>".  Anything but
+    # "none" wraps the resolved backend in consensus.CompressedBackend, so
+    # the consensus period mixes the wire-decompressed messages;
+    # "none" builds NO wrapper at all — that path is bitwise the
+    # uncompressed program.
+    compression: str = "none"
+    # Error feedback for the compression above: carry each server's
+    # compression residual in DFLState.ef_residual and fold it into the
+    # next period's message (comm.error_feedback) — removes the persistent
+    # bias of top-k/clipping at zero extra wire cost.  Ignored when
+    # compression == "none".
+    error_feedback: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +278,40 @@ def max_client_drift(client_tree: Any, server_tree: Any) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# compressed-consensus config resolution (shared with engine / launcher)
+# ---------------------------------------------------------------------------
+
+
+def active_compressor(cfg: "DFLConfig"):
+    """The compressor this config's consensus period runs through, or
+    ``None`` when the wire is exact — resolved from an injected
+    ``consensus.CompressedBackend`` first (the launcher's mesh-aware path),
+    then from ``cfg.compression``.  Single source of truth for the engine's
+    byte accounting and the EF-state plumbing."""
+    backend = cfg.consensus_backend
+    if backend is not None:
+        if getattr(backend, "compressed", False):
+            return backend.compressor
+        return None
+    if cfg.compression != "none" and cfg.consensus_mode != "none":
+        from repro.comm.compressors import make_compressor
+        return make_compressor(cfg.compression)
+    return None
+
+
+def wants_error_feedback(cfg: "DFLConfig") -> bool:
+    """Whether this config carries an EF residual in ``DFLState`` — must
+    agree between ``init_dfl_state`` and the built epoch step (the residual
+    is part of the carried pytree)."""
+    backend = cfg.consensus_backend
+    if backend is not None:
+        return bool(getattr(backend, "compressed", False)
+                    and backend.error_feedback)
+    return (cfg.compression != "none" and cfg.error_feedback
+            and cfg.consensus_mode != "none")
+
+
+# ---------------------------------------------------------------------------
 # the epoch step builder
 # ---------------------------------------------------------------------------
 
@@ -294,7 +350,9 @@ def build_dfl_epoch_step(
         backend = cns.make_backend(
             cfg.consensus_mode, a_np, topo.t_server,
             chebyshev_rounds=cfg.chebyshev_rounds,
-            gossip_flat_sharding=cfg.gossip_flat_sharding)
+            gossip_flat_sharding=cfg.gossip_flat_sharding,
+            compression=cfg.compression,
+            error_feedback=cfg.error_feedback)
     if backend is not None:
         if cfg.mixing != "symmetric" and not backend.supports_directed:
             raise ValueError(
@@ -305,10 +363,15 @@ def build_dfl_epoch_step(
                 f"'none')")
         if cfg.dynamic and not backend.supports_traced:
             raise ValueError(
-                f"consensus backend {backend.name!r} needs host-side "
-                f"spectral data of the mixing matrix and cannot consume a "
+                f"consensus backend {backend.name!r} cannot consume a "
                 f"traced per-epoch A_p; use 'gossip', 'gossip_blocked', "
-                f"'collapsed' or a shard_map backend")
+                f"'collapsed', 'chebyshev' or a shard_map backend")
+    # compression wire state: static facts of the compiled program (when
+    # False, nothing below touches the rng stream or the residual — the
+    # compression="none" program is bitwise the pre-compression one)
+    compressed = (backend is not None
+                  and getattr(backend, "compressed", False)
+                  and m > 1 and topo.t_server > 0)
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     # vmap over clients within a server, then over servers
@@ -354,24 +417,39 @@ def build_dfl_epoch_step(
             gnorm = jnp.zeros((), jnp.float32)
         return (params, opt_state, rng), (loss, gnorm)
 
-    def apply_consensus(server_tree, a_p=None, psum_weight=None):
+    def apply_consensus(server_tree, a_p=None, psum_weight=None,
+                        ef_residual=None, key=None, lam2=None):
         """Run the consensus period through the resolved ConsensusBackend.
         ``a_p``: optional traced per-epoch mixing matrix (dynamic mode);
         ``None`` selects the static topology's A held by the backend.
-        Returns ``(server_tree, psum_weight)`` — the weight is the terminal
-        push-sum weight under mixing='push_sum' and passes through unchanged
-        otherwise."""
+        ``ef_residual``/``key``: the error-feedback residual tree and the
+        stochastic-rounding key, threaded only under compressed consensus;
+        ``lam2``: the per-epoch spectral hint for spectral backends.
+        Returns ``(server_tree, psum_weight, ef_residual)`` — the weight is
+        the terminal push-sum weight under mixing='push_sum', the residual
+        the post-transmission EF state; both pass through unchanged when
+        their feature is off."""
         if m == 1 or topo.t_server == 0 or backend is None:
-            return server_tree, psum_weight
+            return server_tree, psum_weight, ef_residual
         if cfg.mixing == "push_sum":
             # each consensus period is a fresh ratio consensus: numerator =
             # this epoch's server aggregates, weight reset to 1 (the carried
             # DFLState.psum_weight is last period's terminal weight, kept as
             # a diagnostic — see init_push_sum for why it must not seed the
             # next period)
-            ps = backend.mix_push_sum(cns.init_push_sum(server_tree), a_p)
-            return ps.ratio(), ps.weight
-        return backend.mix(server_tree, a_p), psum_weight
+            ps0 = cns.init_push_sum(server_tree)
+            if compressed:
+                ps, ef_residual = backend.mix_push_sum_compressed(
+                    ps0, a_p, residual=ef_residual, key=key)
+            else:
+                ps = backend.mix_push_sum(ps0, a_p)
+            return ps.ratio(), ps.weight, ef_residual
+        if compressed:
+            mixed, ef_residual = backend.mix_compressed(
+                server_tree, a_p, residual=ef_residual, key=key, lam2=lam2)
+            return mixed, psum_weight, ef_residual
+        return backend.mix(server_tree, a_p, lam2=lam2), psum_weight, \
+            ef_residual
 
     def epoch_step(state: DFLState, batches: Any) -> Tuple[DFLState, DFLMetrics]:
         # ---- 1. local period: T_C client SGD iterations (Eq. 3) ----
@@ -392,24 +470,32 @@ def build_dfl_epoch_step(
         server = server_mean(params)
 
         # ---- 3. consensus period: T_S gossip rounds (Eq. 5/7) ----
-        server, psw = apply_consensus(server, psum_weight=state.psum_weight)
+        if compressed:
+            rng, ckey = jax.random.split(rng)
+        else:
+            ckey = None
+        server, psw, ef_res = apply_consensus(
+            server, psum_weight=state.psum_weight,
+            ef_residual=state.ef_residual, key=ckey)
         disagreement = (disagreement_norm(server) if cfg.metrics == "full"
                         else jnp.zeros((), jnp.float32))
 
         # ---- 4. broadcast w^i_p back to C_i ----
         params = broadcast_to_clients(server, n)
 
-        new_state = DFLState(params, opt_state, state.epoch + 1, rng, psw)
+        new_state = DFLState(params, opt_state, state.epoch + 1, rng, psw,
+                             ef_res)
         metrics = DFLMetrics(loss=losses, server_disagreement=disagreement,
                              client_drift=drift, grad_norm=gnorms[-1])
         return new_state, metrics
 
     def epoch_step_dynamic(state: DFLState, batches: Any,
                            sched: Any) -> Tuple[DFLState, DFLMetrics]:
-        """Dynamic variant: ``sched`` is an ``EpochSchedule(mask, mixing)``
-        of traced operands — one compiled program serves every participation
-        mask and mixing matrix of this shape."""
-        mask, a_p = sched
+        """Dynamic variant: ``sched`` is an ``EpochSchedule(mask, mixing[,
+        lam2])`` of traced operands — one compiled program serves every
+        participation mask and mixing matrix of this shape."""
+        mask, a_p = sched.mask, sched.mixing
+        lam2 = getattr(sched, "lam2", None)
         # ---- 1. local period (Eq. 3) — all clients traced; the mask is
         # applied afterwards, which is mathematically identical (clients are
         # independent during the local period) and keeps the scan dense.
@@ -432,15 +518,21 @@ def build_dfl_epoch_step(
         server = masked_server_mean(params, mask)
 
         # ---- 3. consensus over this epoch's graph A_p (Eq. 5/7) ----
-        server, psw = apply_consensus(server, a_p,
-                                      psum_weight=state.psum_weight)
+        if compressed:
+            rng, ckey = jax.random.split(rng)
+        else:
+            ckey = None
+        server, psw, ef_res = apply_consensus(
+            server, a_p, psum_weight=state.psum_weight,
+            ef_residual=state.ef_residual, key=ckey, lam2=lam2)
         disagreement = (disagreement_norm(server) if cfg.metrics == "full"
                         else jnp.zeros((), jnp.float32))
 
         # ---- 4. broadcast (every client, participant or not) ----
         params = broadcast_to_clients(server, n)
 
-        new_state = DFLState(params, opt_state, state.epoch + 1, rng, psw)
+        new_state = DFLState(params, opt_state, state.epoch + 1, rng, psw,
+                             ef_res)
         metrics = DFLMetrics(loss=losses, server_disagreement=disagreement,
                              client_drift=drift, grad_norm=gnorms[-1])
         return new_state, metrics
@@ -452,15 +544,22 @@ def init_dfl_state(cfg: DFLConfig, params: Any, optimizer: Optimizer,
                    rng: jax.Array) -> DFLState:
     """Replicate shared w_0 (Alg. 1 'Initialize') and build optimizer state.
     Under ``mixing='push_sum'`` the state additionally carries a unit
-    per-server push-sum weight."""
+    per-server push-sum weight; under compressed consensus with error
+    feedback, a zero per-server compression residual (leaves ``(M, *w)``)."""
     topo = cfg.topology
     client_params = replicate_to_clients(params, topo.num_servers,
                                          topo.clients_per_server)
     opt_state = optimizer.init(client_params)
     psw = (jnp.ones((topo.num_servers,), jnp.float32)
            if cfg.mixing == "push_sum" else None)
+    ef = None
+    if wants_error_feedback(cfg) and topo.num_servers > 1 \
+            and topo.t_server > 0:
+        ef = jax.tree.map(
+            lambda p: jnp.zeros((topo.num_servers,) + p.shape, p.dtype),
+            params)
     return DFLState(client_params, opt_state,
-                    jnp.zeros((), jnp.int32), rng, psw)
+                    jnp.zeros((), jnp.int32), rng, psw, ef)
 
 
 # ---------------------------------------------------------------------------

@@ -29,7 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm.accounting import BytesTracker
+from repro.comm.compressors import tree_wire_bytes_per_server
 from repro.core import dfl
+from repro.core import topology as tp
 from repro.core.schedule import (EpochSchedule, FaultSchedule,
                                  ParticipationSchedule, SigmaTracker,
                                  TopologySchedule)
@@ -79,6 +82,19 @@ class DynamicFederationEngine:
         self._initial_m: int = self.topo.num_servers
         self._steps: Dict[int, Callable] = {}
         self._tracker = self._fresh_tracker()
+        # compressed-gossip wire accounting (None when the wire is exact):
+        # one ledger across the whole run — bytes accumulate through fault
+        # surgery, unlike the contraction trackers which reset with M
+        self._compressor = dfl.active_compressor(self.cfg)
+        self._bytes = (BytesTracker(self._compressor,
+                                    push_sum=self.cfg.mixing == "push_sum")
+                       if self._compressor is not None else None)
+        self._row_bytes: Dict[int, Tuple[int, int]] = {}  # M -> (bytes, elems)
+        # spectral backends (chebyshev) consume a host-side per-epoch
+        # |lambda_2(A_p)| alongside the traced matrix
+        backend = self.cfg.consensus_backend
+        self._needs_spectral = (self.cfg.consensus_mode == "chebyshev"
+                                or getattr(backend, "needs_spectral", False))
 
     def _fresh_tracker(self) -> SigmaTracker:
         mode = "push_sum" if self.cfg.mixing == "push_sum" else "average"
@@ -94,6 +110,33 @@ class DynamicFederationEngine:
             return state
         return state._replace(
             psum_weight=jnp.ones((self.topo.num_servers,), jnp.float32))
+
+    def _reset_ef_residual(self, state: dfl.DFLState) -> dfl.DFLState:
+        """Compression error-feedback residuals are per-server WIRE state of
+        the old federation (what each server still owes its peers): after
+        drop/rejoin surgery they reset to zero at the new M, mirroring the
+        push-sum weight reset — a rejoined server owes nothing, and a
+        dropped server's debt left with it."""
+        if not dfl.wants_error_feedback(self.cfg):
+            return state
+        ef = jax.tree.map(lambda x: jnp.zeros_like(x[:, 0]),
+                          state.client_params)
+        return state._replace(ef_residual=ef)
+
+    def _wire_row_bytes(self, state: dfl.DFLState) -> Tuple[int, int]:
+        """(compressed bytes, elements) of one server's message at the
+        current federation size — compressor metadata over the server-tree
+        shapes, cached per M."""
+        m = self.topo.num_servers
+        if m not in self._row_bytes:
+            server_abs = jax.eval_shape(
+                lambda t: jax.tree.map(lambda x: x[:, 0], t),
+                state.client_params)
+            self._row_bytes[m] = (
+                tree_wire_bytes_per_server(self._compressor, server_abs),
+                sum(int(np.prod(l.shape[1:]))
+                    for l in jax.tree.leaves(server_abs)))
+        return self._row_bytes[m]
 
     # -- compiled-step cache -------------------------------------------------
     def _step(self) -> Callable:
@@ -126,7 +169,7 @@ class DynamicFederationEngine:
             jax.tree.map(leaf, state.opt_state),
             state.epoch, state.rng)
         self._tracker = self._fresh_tracker()
-        return self._reset_psum_weight(state)
+        return self._reset_ef_residual(self._reset_psum_weight(state))
 
     def _rejoin(self, state: dfl.DFLState, server: Optional[int]) -> dfl.DFLState:
         """ORIGINAL server ``server`` re-enters with the survivor-mean
@@ -155,7 +198,7 @@ class DynamicFederationEngine:
             jax.tree.map(leaf, state.opt_state),
             state.epoch, state.rng)
         self._tracker = self._fresh_tracker()
-        return self._reset_psum_weight(state)
+        return self._reset_ef_residual(self._reset_psum_weight(state))
 
     def apply_faults(self, state: dfl.DFLState, epoch: int) -> dfl.DFLState:
         for ev in self.faults.at(epoch):
@@ -174,8 +217,14 @@ class DynamicFederationEngine:
         a_np = self.topology_schedule.mixing(self.topo, epoch)
         sigma_prod = self._tracker.update(a_np, self.topo.t_server)
         batches = batch_fn(epoch, tuple(self.alive))
+        lam2 = (jnp.float32(tp.lambda_2(a_np)) if self._needs_spectral
+                else None)
         sched = EpochSchedule(jnp.asarray(mask_np, jnp.float32),
-                              jnp.asarray(a_np, jnp.float32))
+                              jnp.asarray(a_np, jnp.float32), lam2)
+        if self._bytes is not None:
+            row_bytes, elems = self._wire_row_bytes(state)
+            self._bytes.update(a_np, self.topo.t_server,
+                               row_bytes=row_bytes, elems_per_row=elems)
         state, metrics = self._step()(state, batches, sched)
         # participant-weighted loss of the last local iteration
         last = np.asarray(metrics.loss[-1], np.float32)
@@ -192,6 +241,11 @@ class DynamicFederationEngine:
             # ratio-consensus conditioning: a terminal weight near 0 means
             # that server's num/w read-out amplified rounding error
             record["psum_min_weight"] = float(jnp.min(state.psum_weight))
+        if self._bytes is not None:
+            # this epoch's on-wire consensus traffic + the cumulative
+            # compression ratio vs f32 replicas over the same links
+            record["wire_mb"] = self._bytes.history[-1]["bytes"] / 1e6
+            record["wire_ratio"] = self._bytes.ratio()
         return state, record
 
     def run(self, state: dfl.DFLState, epochs: int,
@@ -238,8 +292,9 @@ def make_engine(topology: FLTopology, loss_fn: dfl.LossFn,
         state, history = engine.run(state, epochs=40, batch_fn=task["batch_fn"])
 
     ``history`` maps metric name -> per-epoch list (loss, disagreement,
-    drift, participation, num_servers, sigma_prod, and psum_min_weight
-    under ``mixing="push_sum"``)."""
+    drift, participation, num_servers, sigma_prod, psum_min_weight under
+    ``mixing="push_sum"``, and wire_mb / wire_ratio under compressed
+    consensus — ``DFLConfig.compression``)."""
     cfg = dfl.DFLConfig(topology=topology, consensus_mode=consensus_mode,
                         dynamic=True, **cfg_kw)
     return DynamicFederationEngine(

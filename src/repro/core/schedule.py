@@ -40,10 +40,16 @@ class EpochSchedule(NamedTuple):
 
     ``mask``:   (M, N) float32 0/1 participation mask.
     ``mixing``: (M, M) float32 doubly-stochastic mixing matrix A_p.
+    ``lam2``:   optional scalar |lambda_2(A_p)| — the host-side per-epoch
+                spectral estimate (``topology.lambda_2``) that spectral
+                consensus backends (``consensus.ChebyshevBackend``) consume
+                alongside the traced matrix; ``None`` for every other
+                backend (the engine only computes it when asked for).
     """
 
     mask: np.ndarray
     mixing: np.ndarray
+    lam2: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
@@ -140,16 +146,24 @@ class TopologySchedule:
                     strong connectivity when ``ensure_connected``), and the
                     emitted A_p is the ROW-stochastic
                     ``topology.out_degree_weights`` of the surviving
-                    digraph.  Only meaningful with a push-sum (or explicit
-                    row-stochastic-baseline) consensus path — see
-                    ``dfl.DFLConfig.mixing``.
+                    digraph.  With ``weaken > 0``, additionally the
+                    directed counterpart of ``straggler``: ``n_weak``
+                    uniformly-chosen surviving link DIRECTIONS keep only
+                    ``(1 - weaken)`` of their weight, the rest returning to
+                    the SENDER's self-loop
+                    (``topology.weaken_directed_links``) — one-sided slow
+                    links, not dead ones.  Only meaningful with a push-sum
+                    (or explicit row-stochastic-baseline) consensus path —
+                    see ``dfl.DFLConfig.mixing``.
 
     Under the first three kinds every emitted A_p is symmetric doubly
     stochastic (Eq. 6 without the fixed-support clause), so each epoch's
     gossip preserves the server mean; under ``asymmetric`` the A_p are only
     row stochastic and plain gossip is biased — push-sum's ratio read-out
-    restores the mean.  Contraction over a run is tracked by
-    ``SigmaTracker`` (mode="push_sum" for the asymmetric case).
+    restores the mean (rows still sum to 1 after per-direction weakening,
+    so the column-stochastic transpose keeps preserving sums and the ratio
+    stays unbiased).  Contraction over a run is tracked by ``SigmaTracker``
+    (mode="push_sum" for the asymmetric case).
     """
 
     kind: str = "static"
@@ -177,6 +191,17 @@ class TopologySchedule:
                 topo.adjacency(), self.drop_prob, rng,
                 ensure_strong=self.ensure_connected)
             a = tp.out_degree_weights(adj)
+            if self.weaken > 0.0 and self.n_weak:
+                # directed straggler: weaken individual link DIRECTIONS
+                di, dj = np.nonzero(adj)
+                off = di != dj
+                di, dj = di[off], dj[off]
+                if di.size:
+                    pick = rng.choice(di.size,
+                                      size=min(self.n_weak, di.size),
+                                      replace=False)
+                    a = tp.weaken_directed_links(
+                        a, list(zip(di[pick], dj[pick])), self.weaken)
             tp.check_row_stochastic(a, adj)
             return a
         if self.kind == "edge_drop":

@@ -432,6 +432,30 @@ def random_edge_drop(adj: np.ndarray, drop_prob: float,
     return out
 
 
+def weaken_directed_links(a: np.ndarray,
+                          links: Sequence[Tuple[int, int]],
+                          factor: float) -> np.ndarray:
+    """Directed-straggler degradation: scale each listed link DIRECTION
+    ``i -> j`` (entry ``a[i, j]`` of a row-stochastic mixing matrix) by
+    ``(1 - factor)``, returning the removed mass to the SENDER's self-loop
+    ``a[i, i]``.  Rows keep summing to 1, so the result is still a valid
+    push-sum operator (its column-stochastic transpose preserves sums and
+    the ratio read-out stays unbiased); columns change freely — that
+    one-sided asymmetry is exactly what this models and what plain gossip
+    cannot absorb.  The directed counterpart of ``weaken_links`` (which
+    rebalances BOTH endpoints to preserve symmetry)."""
+    if not 0.0 <= factor <= 1.0:
+        raise ValueError("weaken factor must be in [0, 1]")
+    out = np.asarray(a, np.float64).copy()
+    for i, j in links:
+        if i == j:
+            raise ValueError("cannot weaken a self-loop")
+        delta = factor * out[i, j]
+        out[i, j] -= delta
+        out[i, i] += delta
+    return out
+
+
 def weaken_links(a: np.ndarray, edges: Sequence[Tuple[int, int]],
                  factor: float) -> np.ndarray:
     """Straggler-degraded mixing: scale the weight of each listed edge by
@@ -453,10 +477,17 @@ def weaken_links(a: np.ndarray, edges: Sequence[Tuple[int, int]],
     return out
 
 
+def lambda_2(a: np.ndarray) -> float:
+    """|lambda_2(A)| of a symmetric doubly-stochastic A — the host-side
+    per-epoch spectral estimate spectral consensus backends (Chebyshev)
+    consume alongside a traced mixing matrix (``schedule.EpochSchedule``)."""
+    ev = np.sort(np.abs(np.linalg.eigvalsh(np.asarray(a, np.float64))))[::-1]
+    return float(ev[1]) if len(ev) > 1 else 0.0
+
+
 def spectral_gap(a: np.ndarray) -> float:
     """1 - |lambda_2(A)| for symmetric doubly-stochastic A."""
-    ev = np.sort(np.abs(np.linalg.eigvalsh(a)))[::-1]
-    return float(1.0 - (ev[1] if len(ev) > 1 else 0.0))
+    return 1.0 - lambda_2(a)
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,13 @@ grid steps; W streams through in (M, block_d) tiles.
 Grid: (D // block_d,).  VMEM per step: M*block_d*4 bytes in + out + M*M.
 block_d = 2048 with M = 16 -> 256 KB per buffer: far under VMEM, deep
 double-buffering.
+
+``quantized_consensus_mix_2d`` is the compressed-gossip variant: the wire
+round-trip of ``comm.compressors.StochasticQuantizer`` (per-chunk scales,
+stochastic rounding, dequantize) fused INTO the same single mixing pass —
+what a server computes when it applies the collapsed operator to the
+int8/int4 payloads it received, without ever materialising the quantized
+model in HBM.
 """
 from __future__ import annotations
 
@@ -55,3 +62,79 @@ def consensus_mix_2d(a_eff: jax.Array, w: jax.Array, *, block_d: int = 2048,
         out_shape=jax.ShapeDtypeStruct((m, d), w.dtype),
         interpret=interpret,
     )(a_eff, w)
+
+
+# ---------------------------------------------------------------------------
+# fused quantize -> mix -> dequantize (the compressed-gossip single-chip path)
+# ---------------------------------------------------------------------------
+
+
+def _quant_mix_kernel(a_ref, w_ref, u_ref, o_ref, *, block_d: int,
+                      chunk: int, qmax: float):
+    """One (M, block_d) tile: per-(row, chunk) absmax scales, stochastic-
+    rounded int codes, dequantize, then the A contraction — the wire
+    round-trip of ``comm.compressors.StochasticQuantizer`` fused into the
+    mixing pass so the quantized values never touch HBM."""
+    a = a_ref[...].astype(jnp.float32)                 # (M, M) resident
+    w = w_ref[...].astype(jnp.float32)                 # (M, block_d)
+    u = u_ref[...].astype(jnp.float32)                 # dither in [0, 1)
+    m = w.shape[0]
+    nc = block_d // chunk
+    wc = w.reshape(m, nc, chunk)
+    absmax = jnp.max(jnp.abs(wc), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.floor(wc / scale + u.reshape(m, nc, chunk)),
+                 -qmax, qmax)
+    deq = (q * scale).reshape(m, block_d)
+    o_ref[...] = jax.lax.dot_general(
+        a, deq, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def quantized_consensus_mix_2d(a_eff: jax.Array, w: jax.Array,
+                               dither: jax.Array, *, bits: int = 8,
+                               chunk: int = 256, block_d: int = 2048,
+                               interpret: bool = True) -> jax.Array:
+    """Fused quantize -> mix -> dequantize:  A_eff @ D(C(w))  in one pass.
+
+    ``w``: (M, D) flattened server models; ``a_eff``: the (collapsed)
+    mixing operator; ``dither``: (M, D) uniform [0, 1) stochastic-rounding
+    noise, generated OUTSIDE the kernel (``jax.random.uniform``) so the
+    same randomness can drive the jnp wire simulation — on a real TPU the
+    in-kernel ``pltpu.prng_random_bits`` path avoids the HBM read, but the
+    interpret-mode CPU backend this container runs has no TPU PRNG.
+
+    Bit-identical to ``StochasticQuantizer(bits, chunk).roundtrip`` followed
+    by ``consensus_mix_2d`` when ``chunk`` divides the chosen ``block_d``
+    (chunk boundaries then align across tiles), while touching W's HBM
+    bytes once instead of three times (quantize pass + mix read + write).
+    """
+    m, d = w.shape
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    block_d = max(chunk, min(block_d, -(-d // chunk) * chunk))
+    if block_d % chunk:
+        raise ValueError(f"chunk={chunk} must divide block_d={block_d}")
+    # pad to the tile grid up front: trailing zeros quantize to zero codes
+    # and contribute nothing to the contraction, so no in-kernel masking
+    nb = pl.cdiv(d, block_d)
+    pad = nb * block_d - d
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        dither = jnp.pad(dither, ((0, 0), (0, pad)))
+    qmax = float(2 ** (bits - 1) - 1)
+    kernel = functools.partial(_quant_mix_kernel, block_d=block_d,
+                               chunk=chunk, qmax=qmax)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),        # A resident
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, nb * block_d), w.dtype),
+        interpret=interpret,
+    )(a_eff, w, dither)
+    return out[:, :d]

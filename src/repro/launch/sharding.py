@@ -160,9 +160,20 @@ def fl_batch_spec(mesh: Mesh, batch_div_replica: bool,
 
 def fl_state_specs(state: Any, mesh: Mesh, *,
                    tp_axis: Optional[str] = "model") -> Any:
-    """Shardings for a DFLState pytree (params + opt + scalars)."""
-    return _tree_specs(state, ("server", "client"), mesh,
-                       tp_axis=tp_axis, fsdp_axis="replica")
+    """Shardings for a DFLState pytree (params + opt + scalars).
+
+    The compression error-feedback residual (``DFLState.ef_residual``) is
+    SERVER-level wire state — leaves ``(M, *w)`` with no client axis — so
+    it gets the ``('server',)`` lead of the server aggregates rather than
+    the client grid lead (which would scatter a weight dim over the
+    'client' mesh axis)."""
+    specs = _tree_specs(state, ("server", "client"), mesh,
+                        tp_axis=tp_axis, fsdp_axis="replica")
+    ef = getattr(state, "ef_residual", None)
+    if ef is not None and hasattr(specs, "_replace"):
+        specs = specs._replace(ef_residual=_tree_specs(
+            ef, ("server",), mesh, tp_axis=tp_axis, fsdp_axis="replica"))
+    return specs
 
 
 def fl_server_specs(server_tree: Any, mesh: Mesh, *,
@@ -176,16 +187,23 @@ def fl_server_specs(server_tree: Any, mesh: Mesh, *,
 
 def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
                          tp_axis: Optional[str] = "model",
-                         block: Optional[int] = None) -> Any:
+                         block: Optional[int] = None,
+                         compression: str = "none",
+                         error_feedback: bool = False,
+                         compression_flat_sharding=None) -> Any:
     """Mesh-aware consensus-backend construction (the production path).
 
     Builds a ``consensus.ShardMapBackend`` gossiping ``server_tree``-shaped
     aggregates over the mesh's 'server' axis with ``fl_server_specs``
     placement, seeded with the topology's static mixing matrix (a traced
-    per-epoch ``A_p`` still overrides it in dynamic mode).  Inject the
-    result via ``DFLConfig.consensus_backend``; selection between this,
-    'gossip_blocked' and plain 'gossip' is per deployment plan
-    (``launch.plans.DeploymentPlan.consensus_backend``)."""
+    per-epoch ``A_p`` still overrides it in dynamic mode).  A non-"none"
+    ``compression`` spec (``comm.compressors.make_compressor``) wraps the
+    result in a ``consensus.CompressedBackend`` — the same wrap
+    ``consensus.make_backend`` applies to the string-selected paths, done
+    here because the mesh-aware backend never goes through the registry.
+    Inject the result via ``DFLConfig.consensus_backend``; selection
+    between this, 'gossip_blocked' and plain 'gossip' is per deployment
+    plan (``launch.plans.DeploymentPlan.consensus_backend``)."""
     import numpy as np
 
     from repro.core import consensus as cns
@@ -194,7 +212,14 @@ def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
             else np.ones((1, 1)))
     specs = fl_server_specs(server_tree, mesh, tp_axis=tp_axis)
     kw = {} if block is None else {"block": block}
-    return cns.ShardMapBackend(mesh, a_np, topo.t_server, specs, **kw)
+    backend = cns.ShardMapBackend(mesh, a_np, topo.t_server, specs, **kw)
+    if compression != "none":
+        from repro.comm.compressors import make_compressor
+        backend = cns.CompressedBackend(
+            backend, make_compressor(compression),
+            error_feedback=error_feedback,
+            flat_sharding=compression_flat_sharding)
+    return backend
 
 
 def named(tree_specs: Any, mesh: Mesh) -> Any:

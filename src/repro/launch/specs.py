@@ -94,6 +94,14 @@ def build_train_lowering(arch_id: str, shape: InputShape, *,
                          seq_parallel: Optional[bool] = None) -> LoweringBundle:
     cfg = get_arch(arch_id)
     plan = plan or plan_for(arch_id)
+    if plan.compression != "none":
+        # the compression layer's stochastic-rounding dither is a full-
+        # model-sized in-graph random draw: non-partitionable threefry
+        # materialises it REPLICATED per device (measured +1.5 TB/device
+        # on mixtral train_4k).  Set where the requirement is created so
+        # every consumer of this lowering — not just the dryrun CLI —
+        # gets the shardable form.
+        jax.config.update("jax_threefry_partitionable", True)
     # consensus execution path: per-plan backend selection unless overridden
     consensus_mode = consensus_mode or plan.consensus_backend
     spec = plan.fl_spec(multi_pod)
@@ -159,18 +167,26 @@ def build_train_lowering(arch_id: str, shape: InputShape, *,
                         param_dtype=dtype, grad_microbatches=micro,
                         metrics="full" if cfg.param_count() < 5e9 else "light",
                         gossip_flat_sharding=NamedSharding(
-                            mesh, P("server", flat_axes)))
+                            mesh, P("server", flat_axes)),
+                        compression=plan.compression,
+                        error_feedback=plan.error_feedback)
     tp_axis = None if plan.batch_over_model else "model"
     if consensus_mode == "gossip_shardmap":
         # explicit blocked shard_map gossip (same math as "gossip"),
-        # injected as a mesh-aware ConsensusBackend
+        # injected as a mesh-aware ConsensusBackend — wrapped in the plan's
+        # compression layer at construction (the registry wrap in
+        # make_backend never sees mesh-aware backends)
         params_abs0 = _abstract(
             lambda: tf.init_params(jax.random.key(0), cfg, dtype))
         client_abs = _abstract(lambda: jax.tree.map(
             lambda p: jnp.zeros((m, n) + p.shape, p.dtype), params_abs0))
         server_abs = jax.eval_shape(server_mean, client_abs)
-        backend = shd.fl_consensus_backend(topo, mesh, server_abs,
-                                           tp_axis=tp_axis)
+        backend = shd.fl_consensus_backend(
+            topo, mesh, server_abs, tp_axis=tp_axis,
+            compression=plan.compression,
+            error_feedback=plan.error_feedback,
+            compression_flat_sharding=NamedSharding(
+                mesh, P("server", flat_axes)))
         dfl_cfg = dataclasses.replace(dfl_cfg, consensus_mode="gossip",
                                       consensus_backend=backend)
     step = build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer)

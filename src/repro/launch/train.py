@@ -33,8 +33,10 @@ CONSENSUS_BACKENDS = ("auto", "einsum", "blocked", "shard_map")
 
 
 def resolve_consensus_backend(backend: str, consensus_mode: str,
-                              topo: FLTopology,
-                              params) -> Tuple[str, Optional[object]]:
+                              topo: FLTopology, params, *,
+                              compression: str = "none",
+                              error_feedback: bool = False,
+                              ) -> Tuple[str, Optional[object]]:
     """Map the ``--consensus-backend`` CLI flag to the DFLConfig pair
     ``(consensus_mode, consensus_backend)``.
 
@@ -43,7 +45,11 @@ def resolve_consensus_backend(backend: str, consensus_mode: str,
     'gossip_blocked' path; ``shard_map`` builds the explicit-collective
     ``consensus.ShardMapBackend`` over a ('server',)-axis mesh — that
     needs at least M devices (on CPU set
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=M``)."""
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=M``).
+    ``compression``/``error_feedback`` only matter for the mesh-aware
+    shard_map case (the wrap happens at construction there); the string
+    paths are wrapped later by ``dfl.build_dfl_epoch_step`` from
+    ``DFLConfig.compression``."""
     if backend not in CONSENSUS_BACKENDS:
         raise ValueError(f"unknown consensus backend {backend!r}; choose "
                          f"one of {CONSENSUS_BACKENDS}")
@@ -73,7 +79,9 @@ def resolve_consensus_backend(backend: str, consensus_mode: str,
         lambda p: jax.tree.map(
             lambda x: jnp.zeros((m,) + x.shape, x.dtype), p), params)
     return "gossip", shd.fl_consensus_backend(topo, mesh, server_abs,
-                                              tp_axis=None)
+                                              tp_axis=None,
+                                              compression=compression,
+                                              error_feedback=error_feedback)
 
 
 def _setup_lm(arch_id, smoke, servers, clients, t_client, t_server, graph,
@@ -106,6 +114,7 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
           gamma: float = 0.05, graph: str = "ring",
           consensus_mode: str = "gossip", mixing: str = "symmetric",
           consensus_backend: str = "auto",
+          compression: str = "none", error_feedback: bool = False,
           ckpt_dir: Optional[str] = None, seed: int = 0,
           log_every: int = 1, attn_impl: str = "reference") -> dict:
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
@@ -113,15 +122,19 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
         seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
     params = tf.init_params(jax.random.key(seed), cfg)
     consensus_mode, backend = resolve_consensus_backend(
-        consensus_backend, consensus_mode, topo, params)
+        consensus_backend, consensus_mode, topo, params,
+        compression=compression, error_feedback=error_feedback)
     dfl_cfg = DFLConfig(topology=topo, consensus_mode=consensus_mode,
-                        mixing=mixing, consensus_backend=backend)
+                        mixing=mixing, consensus_backend=backend,
+                        compression=compression,
+                        error_feedback=error_feedback)
     step = jax.jit(build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer),
                    donate_argnums=(0,))
 
     state = init_dfl_state(dfl_cfg, params, optimizer, jax.random.key(seed + 1))
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
     history = {"loss": [], "disagreement": [], "drift": []}
+    tracker = _make_bytes_tracker(dfl_cfg, params)
     t0 = time.time()
     for epoch in range(epochs):
         batches = pipe.epoch_batches(epoch)
@@ -132,14 +145,54 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
         history["loss"].append(loss)
         history["disagreement"].append(dis)
         history["drift"].append(drift)
+        wire = ""
+        if tracker is not None:
+            mb = tracker.update() / 1e6
+            history.setdefault("wire_mb", []).append(mb)
+            wire = f"wire={mb:.2f}MB(x{tracker.tracker.ratio():.2f})  "
         if epoch % log_every == 0:
             print(f"epoch {epoch:4d}  loss={loss:.4f}  "
                   f"server_disagreement={dis:.3e}  client_drift={drift:.3e}  "
-                  f"({time.time() - t0:.1f}s)")
+                  f"{wire}({time.time() - t0:.1f}s)")
         if ckpt is not None:
             ckpt.save(epoch, state.client_params,
                       meta={"arch": cfg.name, "epoch": epoch})
     return {"state": state, "history": history, "topology": topo, "cfg": cfg}
+
+
+class _StaticWireLedger:
+    """Static-trainer wire ledger: a ``comm.accounting.BytesTracker`` bound
+    to the fixed topology and model shapes (the dynamic engine carries its
+    own per-M version)."""
+
+    def __init__(self, dfl_cfg, params, compressor):
+        from repro.comm.accounting import BytesTracker
+        from repro.comm.compressors import (tree_message_elems,
+                                            tree_wire_bytes_per_server)
+        topo = dfl_cfg.topology
+        server_abs = jax.eval_shape(
+            lambda p: jax.tree.map(
+                lambda x: jnp.zeros((topo.num_servers,) + x.shape, x.dtype),
+                p), params)
+        self._row = tree_wire_bytes_per_server(compressor, server_abs)
+        self._elems = tree_message_elems(server_abs)
+        self._a = (topo.mixing_matrix() if topo.num_servers > 1
+                   else np.ones((1, 1)))
+        self._t_s = topo.t_server
+        self.tracker = BytesTracker(compressor,
+                                    push_sum=dfl_cfg.mixing == "push_sum")
+
+    def update(self) -> float:
+        return self.tracker.update(self._a, self._t_s, row_bytes=self._row,
+                                   elems_per_row=self._elems)
+
+
+def _make_bytes_tracker(dfl_cfg, params) -> Optional[_StaticWireLedger]:
+    from repro.core.dfl import active_compressor
+    compressor = active_compressor(dfl_cfg)
+    if compressor is None:
+        return None
+    return _StaticWireLedger(dfl_cfg, params, compressor)
 
 
 def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
@@ -148,6 +201,7 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                   gamma: float = 0.05, graph: str = "ring",
                   consensus_mode: str = "gossip", mixing: str = "symmetric",
                   consensus_backend: str = "auto",
+                  compression: str = "none", error_feedback: bool = False,
                   participation_rate: float = 1.0,
                   participation_kind: str = "bernoulli",
                   edge_drop_prob: float = 0.0,
@@ -168,7 +222,8 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
         seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
     params = tf.init_params(jax.random.key(seed), cfg)
     consensus_mode, backend = resolve_consensus_backend(
-        consensus_backend, consensus_mode, topo, params)
+        consensus_backend, consensus_mode, topo, params,
+        compression=compression, error_feedback=error_feedback)
 
     if participation_rate >= 1.0:
         part = ParticipationSchedule()                     # full
@@ -179,9 +234,16 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
         part = ParticipationSchedule(
             kind=participation_kind,
             k=max(1, round(participation_rate * clients)), seed=seed)
-    if asymmetric_drop_prob > 0.0:
+    directed_sched = (asymmetric_drop_prob > 0.0
+                      or (straggler_weaken > 0.0 and mixing != "symmetric"))
+    if directed_sched:
+        # --straggler-weaken composes with the directed schedule: weaken
+        # individual link DIRECTIONS (topology.weaken_directed_links)
+        # instead of symmetric edges; with --mixing push_sum and no drop
+        # prob this is the pure directed-straggler scenario.
         tsched = TopologySchedule(kind="asymmetric",
                                   drop_prob=asymmetric_drop_prob,
+                                  weaken=straggler_weaken,
                                   seed=seed + 1)
     elif edge_drop_prob > 0.0:
         tsched = TopologySchedule(kind="edge_drop", drop_prob=edge_drop_prob,
@@ -194,6 +256,8 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
     engine = make_engine(topo, loss_fn, optimizer,
                          consensus_mode=consensus_mode, mixing=mixing,
                          consensus_backend=backend,
+                         compression=compression,
+                         error_feedback=error_feedback,
                          participation=part, topology_schedule=tsched,
                          faults=FaultSchedule.parse(faults))
 
@@ -215,12 +279,15 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                       meta={"arch": cfg.name, "epoch": epoch,
                             "alive": list(engine.alive)})
         if epoch % log_every == 0:
+            wire = (f"wire={rec['wire_mb']:.2f}MB"
+                    f"(x{rec['wire_ratio']:.2f})  "
+                    if "wire_mb" in rec else "")
             print(f"epoch {epoch:4d}  loss={rec['loss']:.4f}  "
                   f"M={int(rec['num_servers'])}  "
                   f"part={rec['participation']:.2f}  "
                   f"disagreement={rec['disagreement']:.3e}  "
                   f"sigma_prod={rec['sigma_prod']:.3e}  "
-                  f"({time.time() - t0:.1f}s)")
+                  f"{wire}({time.time() - t0:.1f}s)")
     return {"state": state, "history": history, "engine": engine, "cfg": cfg}
 
 
@@ -257,6 +324,14 @@ def build_parser() -> argparse.ArgumentParser:
                         "symmetric doubly-stochastic gossip (the paper), "
                         "naive row-stochastic gossip (directed, biased), or "
                         "push-sum ratio consensus (directed, unbiased)")
+    p.add_argument("--compression", default="none",
+                   help="lossy inter-server message compression "
+                        "(repro.comm): none | int8[:chunk] | int4[:chunk] "
+                        "| top_k:RATIO | random_k:RATIO, e.g. top_k:0.05")
+    p.add_argument("--error-feedback", action="store_true",
+                   help="carry each server's compression residual and fold "
+                        "it into the next period's message (removes the "
+                        "bias of top-k/clipping at zero extra wire cost)")
     p.add_argument("--ckpt-dir", default=None)
     dyn = p.add_argument_group(
         "dynamic federation (any of these switches to the scenario engine)")
@@ -269,11 +344,15 @@ def build_parser() -> argparse.ArgumentParser:
                      help="per-epoch probability that each server link fails")
     dyn.add_argument("--straggler-weaken", type=float, default=0.0,
                      help="weight fraction removed from one random link "
-                          "per epoch (slow links)")
+                          "per epoch (slow links); with --mixing "
+                          "push_sum/row_stochastic or alongside "
+                          "--asymmetric-drop-prob it weakens individual "
+                          "link DIRECTIONS instead (directed stragglers)")
     dyn.add_argument("--asymmetric-drop-prob", type=float, default=0.0,
                      help="per-epoch probability that each link DIRECTION "
                           "fails independently (directed degradation; "
-                          "combine with --mixing push_sum)")
+                          "combine with --mixing push_sum, and optionally "
+                          "--straggler-weaken for per-direction weakening)")
     dyn.add_argument("--faults", default="",
                      help="server fault schedule, e.g. 'drop:5:1,rejoin:9:1'")
     return p
@@ -287,7 +366,8 @@ def main() -> None:
               per_client_batch=args.batch, gamma=args.gamma,
               graph=args.graph, consensus_mode=args.consensus_mode,
               consensus_backend=args.consensus_backend,
-              mixing=args.mixing, ckpt_dir=args.ckpt_dir)
+              mixing=args.mixing, compression=args.compression,
+              error_feedback=args.error_feedback, ckpt_dir=args.ckpt_dir)
     dynamic = (args.participation_rate < 1.0 or args.edge_drop_prob > 0.0
                or args.straggler_weaken > 0.0
                or args.asymmetric_drop_prob > 0.0 or bool(args.faults))

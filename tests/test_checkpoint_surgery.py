@@ -1,0 +1,94 @@
+"""Checkpointer.restore_dropped round-tripped through the dynamic engine's
+drop surgery: a checkpoint taken at M servers, restored onto the surviving
+M-1 topology, and trained onward must agree with the uninterrupted run in
+which the engine itself executed the drop — the disaster-recovery path and
+the live-surgery path are the same transformation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.core import (FaultEvent, FaultSchedule, FLTopology, init_dfl_state,
+                        make_engine)
+from repro.core.dfl import DFLState
+from repro.data import RegressionSpec, make_regression_task
+from repro.optim import sgd
+from repro.optim.optimizers import SGDState
+
+
+def test_restore_dropped_continues_like_engine_surgery(tmp_path):
+    m, n = 4, 2
+    drop_epoch, dropped, total = 3, 1, 6
+    topo = FLTopology(num_servers=m, clients_per_server=n, t_client=3,
+                      t_server=5, graph_kind="ring")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.5),
+                                seed=0)
+    opt = sgd(1e-3)
+
+    # R1: uninterrupted — the ENGINE drops the server mid-run
+    eng1 = make_engine(topo, task["loss_fn"], opt,
+                       faults=FaultSchedule((FaultEvent(drop_epoch, "drop",
+                                                        dropped),)))
+    s1 = init_dfl_state(eng1.cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+    for e in range(total):
+        s1, _ = eng1.run_epoch(s1, e, task["batch_fn"])
+    survivors = list(eng1.alive)
+    assert survivors == [0, 2, 3]
+
+    # R2: identical run up to the drop epoch, then CHECKPOINT at M servers
+    eng2 = make_engine(topo, task["loss_fn"], opt)
+    s2 = init_dfl_state(eng2.cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+    for e in range(drop_epoch):
+        s2, _ = eng2.run_epoch(s2, e, task["batch_fn"])
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(drop_epoch, {"params": s2.client_params,
+                           "opt_count": s2.opt_state.count})
+
+    # ...restore at M-1 via restore_dropped: the failed server's row goes,
+    # survivors re-index densely, the topology is the induced subgraph
+    keep = np.array([i for i in range(m) if i != dropped])
+
+    def narrow(x):
+        return x[keep] if hasattr(x, "ndim") and x.ndim >= 1 \
+            and x.shape[0] == m else x
+
+    template = {"params": jax.tree.map(narrow, s2.client_params),
+                "opt_count": s2.opt_state.count}
+    restored, new_topo = ckpt.restore_dropped(template, dropped, topo)
+    assert new_topo.num_servers == m - 1
+    np.testing.assert_array_equal(new_topo.adjacency(),
+                                  eng1.topo.adjacency())
+
+    # ...and continue training on a FRESH engine over the restored state.
+    # Data shards follow ORIGINAL server identity, so the continuation
+    # engine's dense row indices map back through the survivor list.
+    eng3 = make_engine(new_topo, task["loss_fn"], opt)
+
+    def batch_fn(epoch, alive):
+        return task["batch_fn"](epoch, tuple(survivors[i] for i in alive))
+
+    s3 = DFLState(restored["params"], SGDState(restored["opt_count"]),
+                  s2.epoch, s2.rng)
+    for e in range(drop_epoch, total):
+        s3, _ = eng3.run_epoch(s3, e, batch_fn)
+
+    np.testing.assert_allclose(np.asarray(s3.client_params),
+                               np.asarray(s1.client_params),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_restore_dropped_rejects_nothing_but_drops_row(tmp_path):
+    """Unit shape check: the dropped row really is the named ORIGINAL row
+    (not just any row) — restored survivor rows equal the original ones."""
+    m, n = 3, 2
+    topo = FLTopology(num_servers=m, clients_per_server=n, t_client=2,
+                      t_server=2, graph_kind="complete")
+    tree = {"w": jnp.arange(m * n * 2, dtype=jnp.float32).reshape(m, n, 2)}
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(0, tree)
+    template = {"w": jnp.zeros((m - 1, n, 2))}
+    restored, new_topo = ckpt.restore_dropped(template, 1, topo)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"])[np.array([0, 2])])
+    assert new_topo.num_servers == m - 1

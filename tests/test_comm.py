@@ -1,0 +1,483 @@
+"""The compressed-gossip communication subsystem (repro.comm): compressor
+round-trip properties, metadata-vs-analytic byte cross-checks, error
+feedback, the CompressedBackend wrapper over every consensus backend, the
+DFL epoch-step integration (exact degeneration when compression is off,
+EF residual threading, surgery reset), and the engine's wire accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import accounting as acc
+from repro.comm import compressors as cp
+from repro.comm import error_feedback as ef
+from repro.core import (DFLConfig, EpochSchedule, FaultEvent, FaultSchedule,
+                        FLTopology, TopologySchedule, build_dfl_epoch_step,
+                        init_dfl_state, make_engine)
+from repro.core import consensus as cns
+from repro.core import topology as tp
+from repro.data import RegressionSpec, make_regression_task
+from repro.optim import sgd
+
+M, T_S = 5, 7
+
+
+def _rows(key, d=100, m=M, scale=3.0):
+    return jax.random.normal(key, (m, d)) * scale
+
+
+# ---------------------------------------------------------------------------
+# compressors: round-trip properties
+# ---------------------------------------------------------------------------
+
+
+def test_identity_roundtrip_exact(rng_key):
+    x = _rows(rng_key)
+    np.testing.assert_array_equal(
+        np.asarray(cp.IdentityCompressor().roundtrip(x)), np.asarray(x))
+
+
+@pytest.mark.parametrize("spec", ["int8", "int4", "int8:32", "int4:16"])
+def test_quantizer_error_bounded_by_chunk_scale(spec, rng_key):
+    """|x - D(C(x))| <= one quantization step of the element's chunk."""
+    q = cp.make_compressor(spec)
+    x = _rows(rng_key)
+    y = q.roundtrip(x, jax.random.fold_in(rng_key, 1))
+    step = np.asarray(q._per_elem(q._scales(np.asarray(x)), x.shape[1]))
+    assert (np.abs(np.asarray(y - x)) <= step + 1e-6).all()
+
+
+def test_quantizer_stochastic_rounding_unbiased(rng_key):
+    """E[D(C(x))] = x over rounding keys (the EF-friendly property)."""
+    q = cp.StochasticQuantizer(bits=8)
+    x = _rows(rng_key, d=64)
+    ys = jnp.stack([q.roundtrip(x, jax.random.key(i)) for i in range(300)])
+    step = float(np.asarray(q._per_elem(q._scales(np.asarray(x)), 64)).max())
+    assert float(jnp.abs(ys.mean(0) - x).max()) < 0.2 * step
+
+
+def test_top_k_keeps_largest(rng_key):
+    c = cp.TopKCompressor(ratio=0.1)
+    x = _rows(rng_key)
+    y = np.asarray(c.roundtrip(x))
+    k = c.k_for(x.shape[1])
+    for i in range(x.shape[0]):
+        kept = np.nonzero(y[i])[0]
+        assert len(kept) == k
+        thresh = np.sort(np.abs(np.asarray(x[i])))[-k]
+        assert (np.abs(np.asarray(x[i])[kept]) >= thresh - 1e-6).all()
+        np.testing.assert_allclose(y[i][kept], np.asarray(x[i])[kept])
+
+
+def test_random_k_shared_coordinates(rng_key):
+    """One coordinate set per call, shared by every server (that is what
+    makes the indices free on the wire)."""
+    c = cp.RandomKCompressor(ratio=0.1)
+    x = _rows(rng_key)
+    comp = c.compress(x, rng_key)
+    assert comp.idx.shape == (c.k_for(x.shape[1]),)
+    y = np.asarray(c.decompress(comp, x.shape[1]))
+    mask = y != 0
+    assert (mask.all(axis=0) | (~mask).any(axis=0)).all()
+    with pytest.raises(ValueError, match="shared rng key"):
+        c.compress(x)
+
+
+def test_make_compressor_grammar():
+    assert cp.make_compressor("int4:64").chunk == 64
+    assert cp.make_compressor("top_k:0.25").ratio == 0.25
+    assert isinstance(cp.make_compressor("random_k:0.5"),
+                      cp.RandomKCompressor)
+    for bad in ("none", "", "zstd", "top_k", "int3"):
+        with pytest.raises(ValueError):
+            cp.make_compressor(bad)
+    with pytest.raises(ValueError, match="ratio"):
+        cp.TopKCompressor(ratio=0.0)
+    with pytest.raises(ValueError, match="bits"):
+        cp.StochasticQuantizer(bits=2)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: metadata vs analytic cross-check + the tracker
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", ["identity", "int8", "int4", "int8:32",
+                                  "top_k:0.05", "random_k:0.1"])
+def test_wire_bytes_metadata_matches_analytic(spec):
+    """Compressor.wire_bytes_per_row derives the count from the actual
+    compressed payload (eval_shape); accounting.analytic_row_bytes is the
+    independent closed form — they must agree everywhere."""
+    c = cp.make_compressor(spec)
+    for d in (1, 2, 7, 32, 256, 257, 1000, 4096):
+        assert c.wire_bytes_per_row(d) == acc.analytic_row_bytes(c, d), \
+            (spec, d)
+
+
+def test_wire_bytes_per_leaf_nd_matches_analytic():
+    """Shape-preserving quantizers chunk per leaf ROW (last axis), so the
+    ND byte count differs from the flat-row one — both metadata and the
+    closed form must agree on that."""
+    q = cp.make_compressor("int8:32")
+    for shape in ((5, 3, 100), (5, 7, 4, 16), (5, 64), (5, 2, 1)):
+        assert q.wire_bytes_per_leaf(shape) == acc.analytic_leaf_bytes(
+            q, shape), shape
+    # flatten-based compressors reduce to the flat row either way
+    t = cp.make_compressor("top_k:0.1")
+    assert t.wire_bytes_per_leaf((5, 3, 100)) == acc.analytic_leaf_bytes(
+        t, (5, 3, 100)) == acc.analytic_row_bytes(t, 300)
+
+
+def test_quantizer_nd_roundtrip_matches_per_row(rng_key):
+    """The natural-shape (no-flatten) quantizer path: chunking an (M, r, L)
+    leaf equals quantizing each (M*r, L) row batch — the layout pjit
+    shards locally."""
+    q = cp.StochasticQuantizer(bits=8, chunk=16)
+    x = jax.random.normal(rng_key, (4, 3, 50)) * 2
+    y_nd = q.roundtrip(x)                      # round-to-nearest: no key
+    y_2d = q.roundtrip(x.reshape(12, 50)).reshape(4, 3, 50)
+    np.testing.assert_array_equal(np.asarray(y_nd), np.asarray(y_2d))
+
+
+def test_bytes_tracker_counts_live_links():
+    c = cp.make_compressor("int8")
+    tracker = acc.BytesTracker(c)
+    a = tp.metropolis_weights(tp.ring_graph(4))          # 8 directed links
+    row = c.wire_bytes_per_row(100)
+    got = tracker.update(a, T_S, row_bytes=row, elems_per_row=100)
+    assert got == 8 * T_S * row
+    assert tracker.per_link.sum() == got
+    assert tracker.per_link[0, 2] == 0                   # non-edge: silent
+    assert tracker.baseline_bytes == 8 * T_S * 400
+    assert tracker.ratio() == pytest.approx(400 / row)
+    # push-sum ships one extra f32 weight scalar per message
+    ps = acc.BytesTracker(c, push_sum=True)
+    got_ps = ps.update(a, T_S, row_bytes=row, elems_per_row=100)
+    assert got_ps == 8 * T_S * (row + 4)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+
+def test_ef_identity_residual_stays_zero(rng_key):
+    tree = {"w": _rows(rng_key), "b": _rows(jax.random.fold_in(rng_key, 1),
+                                            d=7)}
+    res = ef.init_ef_residual(tree)
+    msg, new_res = ef.ef_roundtrip(cp.IdentityCompressor(), tree, res,
+                                   rng_key)
+    for leaf in jax.tree.leaves(new_res):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+    np.testing.assert_array_equal(np.asarray(msg["w"]), np.asarray(tree["w"]))
+
+
+def test_ef_running_mean_of_messages_tracks_signal(rng_key):
+    """The EF property: for a CONSTANT signal under a biased compressor
+    (top-k), the time-average of the transmitted messages converges to the
+    signal — without EF it stays stuck at the top-k support."""
+    c = cp.TopKCompressor(ratio=0.2)
+    tree = {"w": _rows(rng_key, d=50)}
+    res = ef.init_ef_residual(tree)
+    total = jnp.zeros_like(tree["w"])
+    rounds = 40
+    for i in range(rounds):
+        msg, res = ef.ef_roundtrip(c, tree, res,
+                                   jax.random.fold_in(rng_key, i))
+        total = total + msg["w"]
+    avg_err = float(jnp.abs(total / rounds - tree["w"]).max())
+    no_ef_err = float(jnp.abs(c.roundtrip(tree["w"]) - tree["w"]).max())
+    assert avg_err < 0.2 * no_ef_err
+
+
+# ---------------------------------------------------------------------------
+# CompressedBackend: wrapper semantics over every inner backend
+# ---------------------------------------------------------------------------
+
+
+def _tree(m, key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (m, 4, 3)),
+            "b": jax.random.normal(k2, (m, 7))}
+
+
+def test_identity_compressed_backend_is_exact(rng_key):
+    """CompressedBackend[identity] == the inner backend, bit for bit, for
+    mix and mix_push_sum alike — the wrapper machinery itself is lossless."""
+    a_np = tp.metropolis_weights(tp.ring_graph(M))
+    tree = _tree(M, rng_key)
+    for mode in ("gossip", "gossip_blocked", "collapsed", "chebyshev"):
+        inner = cns.make_backend(mode, a_np, T_S)
+        wrapped = cns.CompressedBackend(inner, cp.IdentityCompressor(),
+                                        error_feedback=True)
+        out = wrapped.mix(tree)
+        ref = inner.mix(tree)
+        for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    a_dir = tp.out_degree_weights(tp.directed_ring(M))
+    inner = cns.make_backend("gossip", a_dir, T_S)
+    wrapped = cns.CompressedBackend(inner, cp.IdentityCompressor())
+    out = wrapped.mix_push_sum(cns.init_push_sum(tree))
+    ref = inner.mix_push_sum(cns.init_push_sum(tree))
+    np.testing.assert_array_equal(np.asarray(out.weight),
+                                  np.asarray(ref.weight))
+    for l1, l2 in zip(jax.tree.leaves(out.values),
+                      jax.tree.leaves(ref.values)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_compressed_backend_mixes_decompressed_messages(rng_key):
+    """mix == inner.mix(roundtrip(tree)) with the same key — the wrapper
+    adds nothing beyond the wire simulation."""
+    a_np = tp.metropolis_weights(tp.ring_graph(M))
+    tree = _tree(M, rng_key)
+    q = cp.StochasticQuantizer(bits=8, chunk=8)
+    inner = cns.make_backend("gossip", a_np, T_S)
+    wrapped = cns.CompressedBackend(inner, q, error_feedback=False)
+    key = jax.random.fold_in(rng_key, 3)
+    out, res = wrapped.mix_compressed(tree, key=key)
+    assert res is None
+    ref = inner.mix(cp.roundtrip_tree(q, tree, key))
+    for l1, l2 in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_compressed_backend_delegates_flags():
+    a_np = tp.metropolis_weights(tp.ring_graph(M))
+    w = cns.CompressedBackend(cns.make_backend("chebyshev", a_np, T_S),
+                              cp.make_compressor("int8"))
+    assert w.needs_spectral and not w.supports_directed
+    with pytest.raises(ValueError, match="ratio-consensus"):
+        w.mix_push_sum(cns.init_push_sum({"w": jnp.ones((M, 2))}))
+
+
+# ---------------------------------------------------------------------------
+# DFL epoch-step integration
+# ---------------------------------------------------------------------------
+
+
+def _setup(m=4, n=2, t_c=3, t_s=6):
+    topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                      t_server=t_s, graph_kind="ring")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.5),
+                                seed=0)
+    return topo, task
+
+
+@pytest.mark.parametrize("dynamic", [False, True])
+def test_compression_none_is_bitwise_default_path(dynamic):
+    """compression='none' builds NO wrapper: the compiled program, its rng
+    stream, and every carried array are bitwise those of the default
+    config (the pre-compression path)."""
+    topo, task = _setup()
+    opt = sgd(1e-3)
+    states = {}
+    for label, extra in (("default", {}),
+                         ("explicit_none", {"compression": "none",
+                                            "error_feedback": True})):
+        cfg = DFLConfig(topology=topo, dynamic=dynamic, **extra)
+        step = jax.jit(build_dfl_epoch_step(cfg, task["loss_fn"], opt))
+        state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+        assert state.ef_residual is None
+        for e in range(2):
+            if dynamic:
+                sched = EpochSchedule(
+                    jnp.ones((topo.num_servers, topo.clients_per_server),
+                             jnp.float32),
+                    jnp.asarray(topo.mixing_matrix(), jnp.float32))
+                state, _ = step(state, task["batches"], sched)
+            else:
+                state, _ = step(state, task["batches"])
+        states[label] = state
+    np.testing.assert_array_equal(
+        np.asarray(states["default"].client_params),
+        np.asarray(states["explicit_none"].client_params))
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(states["default"].rng)),
+        np.asarray(jax.random.key_data(states["explicit_none"].rng)))
+
+
+def test_identity_compression_epoch_step_is_exact():
+    """The fully-threaded wrapper path (rng split, EF residual carried in
+    DFLState) with the identity compressor reproduces the uncompressed
+    epoch exactly — the degeneration guarantee at the integration level."""
+    topo, task = _setup()
+    opt = sgd(1e-3)
+    cfg0 = DFLConfig(topology=topo)
+    cfg1 = DFLConfig(topology=topo, compression="identity",
+                     error_feedback=True)
+    step0 = jax.jit(build_dfl_epoch_step(cfg0, task["loss_fn"], opt))
+    step1 = jax.jit(build_dfl_epoch_step(cfg1, task["loss_fn"], opt))
+    s0 = init_dfl_state(cfg0, jnp.zeros((2,)), opt, jax.random.key(0))
+    s1 = init_dfl_state(cfg1, jnp.zeros((2,)), opt, jax.random.key(0))
+    assert s1.ef_residual is not None
+    for _ in range(2):
+        s0, _ = step0(s0, task["batches"])
+        s1, _ = step1(s1, task["batches"])
+    # identical params (the rng STREAMS differ: the compressed program
+    # splits a rounding key — so compare params, not rng)
+    np.testing.assert_array_equal(np.asarray(s0.client_params),
+                                  np.asarray(s1.client_params))
+    for leaf in jax.tree.leaves(s1.ef_residual):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+@pytest.mark.parametrize("mode", ["gossip", "gossip_blocked", "collapsed"])
+def test_int8_ef_epoch_step_converges_near_uncompressed(mode):
+    """int8 + EF across every traced backend: finite, close to the exact
+    path after a few epochs, and the residual is live (non-zero)."""
+    topo, task = _setup(t_s=8)
+    opt = sgd(1e-3)
+    cfg_ref = DFLConfig(topology=topo, consensus_mode=mode)
+    cfg_cmp = DFLConfig(topology=topo, consensus_mode=mode,
+                        compression="int8:16", error_feedback=True)
+    step_ref = jax.jit(build_dfl_epoch_step(cfg_ref, task["loss_fn"], opt))
+    step_cmp = jax.jit(build_dfl_epoch_step(cfg_cmp, task["loss_fn"], opt))
+    s_ref = init_dfl_state(cfg_ref, jnp.zeros((2,)), opt, jax.random.key(0))
+    s_cmp = init_dfl_state(cfg_cmp, jnp.zeros((2,)), opt, jax.random.key(0))
+    for _ in range(4):
+        s_ref, _ = step_ref(s_ref, task["batches"])
+        s_cmp, m_cmp = step_cmp(s_cmp, task["batches"])
+    ref = np.asarray(s_ref.client_params)
+    out = np.asarray(s_cmp.client_params)
+    assert np.isfinite(out).all()
+    scale = np.abs(ref).max()
+    assert np.abs(out - ref).max() < 0.05 * scale, (mode,
+                                                    np.abs(out - ref).max())
+    assert any(float(jnp.abs(l).max()) > 0
+               for l in jax.tree.leaves(s_cmp.ef_residual))
+
+
+def test_push_sum_compressed_weight_untouched():
+    """Push-sum under compression: the numerator rides the wire simulation,
+    the weight recursion is exact — invariants hold and the ratio stays
+    finite."""
+    topo, task = _setup(t_s=8)
+    opt = sgd(1e-3)
+    cfg = DFLConfig(topology=topo, mixing="push_sum", compression="int8",
+                    error_feedback=True, dynamic=True)
+    step = jax.jit(build_dfl_epoch_step(cfg, task["loss_fn"], opt))
+    state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+    mats = [tp.out_degree_weights(tp.random_direction_drop(
+        topo.adjacency(), 0.3, np.random.default_rng(e), ensure_strong=True))
+        for e in range(3)]
+    mask = jnp.ones((topo.num_servers, topo.clients_per_server), jnp.float32)
+    for a_np in mats:
+        state, _ = step(state, task["batches"],
+                        EpochSchedule(mask, jnp.asarray(a_np, jnp.float32)))
+        w = np.asarray(state.psum_weight)
+        assert (w > 0).all()
+        np.testing.assert_allclose(w.sum(), topo.num_servers, rtol=1e-5)
+    assert np.isfinite(np.asarray(state.client_params)).all()
+
+
+# ---------------------------------------------------------------------------
+# engine integration: wire accounting + EF surgery reset
+# ---------------------------------------------------------------------------
+
+
+def test_engine_reports_wire_bytes_and_resets_ef_on_surgery():
+    topo, task = _setup()
+    engine = make_engine(
+        topo, task["loss_fn"], sgd(1e-3), compression="int8",
+        error_feedback=True,
+        faults=FaultSchedule((FaultEvent(1, "drop", 2),
+                              FaultEvent(3, "rejoin", 2))))
+    state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(1e-3),
+                           jax.random.key(0))
+    rows = {}
+    for epoch in range(4):
+        state, rec = engine.run_epoch(state, epoch, task["batch_fn"])
+        m_live = engine.topo.num_servers
+        assert jax.tree.leaves(state.ef_residual)[0].shape[0] == m_live
+        # expected bytes: live directed links x T_S x metadata row bytes
+        a = engine.topology_schedule.mixing(engine.topo, epoch)
+        links = int(((a != 0) & ~np.eye(m_live, dtype=bool)).sum())
+        row = engine._compressor.wire_bytes_per_row(2)
+        assert rec["wire_mb"] * 1e6 == links * engine.topo.t_server * row
+        assert rec["wire_ratio"] > 1.0
+        rows[epoch] = rec["wire_mb"]
+    assert rows[1] < rows[0]           # M=3: fewer live links than M=4
+    # surgery zeroes the residual (per-server wire debt of a dead topology)
+    dirty = state._replace(ef_residual=jax.tree.map(
+        lambda x: x + 1.0, state.ef_residual))
+    fresh = engine.apply_faults(dirty, 1)
+    for leaf in jax.tree.leaves(fresh.ef_residual):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+def test_engine_no_compression_has_no_wire_metrics():
+    topo, task = _setup()
+    engine = make_engine(topo, task["loss_fn"], sgd(1e-3))
+    state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(1e-3),
+                           jax.random.key(0))
+    _, rec = engine.run_epoch(state, 0, task["batch_fn"])
+    assert "wire_mb" not in rec and "wire_ratio" not in rec
+
+
+def test_engine_compressed_shard_map_rejected_with_faults():
+    """The mesh-bound flag must survive the compression wrap (the guard
+    that keeps shard_map out of fault scenarios sees through it)."""
+    topo, task = _setup(m=2)
+
+    class FakeShardMap(cns.ConsensusBackend):
+        name = "shard_map"
+        mesh_bound = True
+
+        def _mix(self, tree, a):
+            return tree
+
+    wrapped = cns.CompressedBackend(
+        FakeShardMap(topo.mixing_matrix(), topo.t_server),
+        cp.make_compressor("int8"))
+    assert wrapped.mesh_bound
+    with pytest.raises(ValueError, match="mesh-bound"):
+        make_engine(topo, task["loss_fn"], sgd(1e-3),
+                    consensus_backend=wrapped,
+                    faults=FaultSchedule((FaultEvent(1, "drop", 1),)))
+
+
+# ---------------------------------------------------------------------------
+# CLI / config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_cli_compression_flags():
+    from repro.launch.train import build_parser
+    args = build_parser().parse_args(
+        ["--compression", "top_k:0.05", "--error-feedback"])
+    assert args.compression == "top_k:0.05" and args.error_feedback
+    args = build_parser().parse_args([])
+    assert args.compression == "none" and not args.error_feedback
+
+
+def test_plan_compression_defaults():
+    from repro.launch.plans import plan_for
+    assert plan_for("mixtral_8x22b").compression == "int8"
+    assert plan_for("mixtral_8x22b").error_feedback
+    assert plan_for("smollm_360m").compression == "none"
+
+
+def test_active_compressor_resolution():
+    from repro.core.dfl import active_compressor, wants_error_feedback
+    topo = FLTopology(num_servers=3, clients_per_server=2, t_client=2,
+                      t_server=2)
+    cfg = DFLConfig(topology=topo)
+    assert active_compressor(cfg) is None and not wants_error_feedback(cfg)
+    cfg = DFLConfig(topology=topo, compression="int4", error_feedback=True)
+    assert active_compressor(cfg).bits == 4 and wants_error_feedback(cfg)
+    # injected compressed backend wins over the (unset) config string
+    backend = cns.make_backend("gossip", topo.mixing_matrix(), 2,
+                               compression="top_k:0.1", error_feedback=True)
+    cfg = DFLConfig(topology=topo, consensus_backend=backend)
+    assert isinstance(active_compressor(cfg), cp.TopKCompressor)
+    assert wants_error_feedback(cfg)
+    # an injected UNcompressed backend: config string does not re-wrap
+    plain = cns.make_backend("gossip", topo.mixing_matrix(), 2)
+    cfg = dataclasses.replace(cfg, consensus_backend=plain,
+                              compression="int8")
+    assert active_compressor(cfg) is None

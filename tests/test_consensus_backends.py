@@ -50,6 +50,10 @@ def _backends():
         "gossip_blocked": cns.make_backend("gossip_blocked", a_np, T_S,
                                            block=5),
         "collapsed": cns.make_backend("collapsed", a_np, T_S),
+        # identity compression: the comm wrapper must be invisible in math
+        "compressed_identity": cns.make_backend(
+            "gossip", a_np, T_S, compression="identity",
+            error_feedback=True),
     }
 
 
@@ -135,7 +139,10 @@ def test_make_backend_registry():
     for mode in cns.BACKEND_MODES:
         backend = cns.make_backend(mode, a_np, T_S)
         assert backend.name == mode
-    assert not cns.make_backend("chebyshev", a_np, T_S).supports_traced
+        assert not backend.compressed
+    # chebyshev now consumes a traced A_p (+ per-epoch lam2 estimate)
+    cheb = cns.make_backend("chebyshev", a_np, T_S)
+    assert cheb.supports_traced and cheb.needs_spectral
     assert not cns.make_backend("exact_mean", a_np, T_S).supports_directed
     with pytest.raises(ValueError, match="unknown consensus mode"):
         cns.make_backend("bogus", a_np, T_S)
@@ -145,8 +152,17 @@ def test_make_backend_registry():
     with pytest.raises(ValueError, match="ratio-consensus"):
         cns.make_backend("exact_mean", a_np, T_S).mix_push_sum(
             cns.init_push_sum({"w": jnp.ones((M, 2))}))
-    with pytest.raises(ValueError, match="chebyshev"):
-        cns.make_backend("chebyshev", None, T_S)
+    # a matrix-less chebyshev is traced-only: static mix has no operator
+    with pytest.raises(ValueError, match="static mixing matrix"):
+        cns.make_backend("chebyshev", None, T_S).mix({"w": jnp.ones((M, 2))})
+    # compression wrapping through the registry
+    wrapped = cns.make_backend("gossip", a_np, T_S, compression="int8",
+                               error_feedback=True)
+    assert wrapped.compressed and wrapped.error_feedback
+    assert wrapped.name == "compressed[gossip+int8]"
+    assert wrapped.supports_traced and wrapped.supports_directed
+    with pytest.raises(ValueError, match="already-compressed"):
+        cns.CompressedBackend(wrapped, wrapped.compressor)
 
 
 # ---------------------------------------------------------------------------

@@ -89,6 +89,68 @@ def test_random_direction_drop_repairs_to_strong_connectivity():
         dbase)
 
 
+def test_weaken_directed_links_row_stochastic_preserved():
+    """Directed straggler: weakening a single DIRECTION keeps rows summing
+    to 1 (mass returns to the SENDER's self-loop), leaves the reverse
+    direction untouched, and rejects self-loops / bad factors."""
+    adj = _skewed_digraph()
+    a = tp.out_degree_weights(adj)
+    out = tp.weaken_directed_links(a, [(0, 1)], 0.8)
+    np.testing.assert_allclose(out.sum(1), 1.0)
+    np.testing.assert_allclose(out[0, 1], 0.2 * a[0, 1])
+    np.testing.assert_allclose(out[0, 0], a[0, 0] + 0.8 * a[0, 1])
+    np.testing.assert_allclose(out[1], a[1])      # reverse side untouched
+    tp.check_row_stochastic(out, adj)
+    with pytest.raises(ValueError, match="self-loop"):
+        tp.weaken_directed_links(a, [(2, 2)], 0.5)
+    with pytest.raises(ValueError, match="factor"):
+        tp.weaken_directed_links(a, [(0, 1)], 1.5)
+
+
+def test_asymmetric_schedule_weaken_emits_row_stochastic():
+    """TopologySchedule(kind='asymmetric', weaken=...) — the directed
+    counterpart of the straggler schedule: emitted matrices stay valid
+    row-stochastic push-sum operators and genuinely differ from the
+    unweakened ones."""
+    topo = FLTopology(num_servers=5, clients_per_server=2, t_client=2,
+                      t_server=4, graph_kind="ring", mixing="out_degree")
+    plain = TopologySchedule(kind="asymmetric", drop_prob=0.3, seed=3)
+    weak = TopologySchedule(kind="asymmetric", drop_prob=0.3, weaken=0.9,
+                            n_weak=2, seed=3)
+    changed = 0
+    for epoch in range(6):
+        a_w = weak.mixing(topo, epoch)
+        tp.check_row_stochastic(a_w, atol=1e-9)
+        changed += not np.allclose(a_w, plain.mixing(topo, epoch))
+    assert changed >= 4
+
+
+def test_push_sum_unbiased_under_directed_weakening(rng_key):
+    """Push-sum's unbiasedness survives per-direction weakening: mixing a
+    tree with weakened row-stochastic matrices for many rounds drives every
+    server's ratio read-out to the exact uniform initial mean (the weakened
+    transpose is still column stochastic, so sums are preserved)."""
+    topo = FLTopology(num_servers=5, clients_per_server=2, t_client=2,
+                      t_server=6, graph_kind="ring", mixing="out_degree")
+    sched = TopologySchedule(kind="asymmetric", drop_prob=0.4, weaken=0.8,
+                             n_weak=3, seed=9)
+    tree = _tree(5, rng_key)
+    want = {k: np.asarray(v).mean(axis=0) for k, v in tree.items()}
+    state = cns.init_push_sum(tree)
+    for epoch in range(30):
+        a = jnp.asarray(sched.mixing(topo, epoch), jnp.float32)
+        state = cns.gossip_push_sum(a, state, topo.t_server)
+        w = np.asarray(state.weight)
+        assert (w > 0).all()
+        np.testing.assert_allclose(w.sum(), 5.0, rtol=1e-5)
+    ratio = state.ratio()
+    for k in tree:
+        got = np.asarray(ratio[k])
+        for i in range(5):
+            np.testing.assert_allclose(got[i], want[k], rtol=2e-4,
+                                       atol=2e-4)
+
+
 def test_out_degree_weights_row_stochastic_not_doubly():
     adj = _skewed_digraph()
     a = tp.out_degree_weights(adj)

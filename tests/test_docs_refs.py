@@ -20,7 +20,7 @@ DOC_FILES = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
 
 TOKEN = re.compile(r"`([A-Za-z_]\w*(?:\.[A-Za-z_]\w*)+)`")
 PACKAGES = {"repro", "core", "kernels", "launch", "models", "configs",
-            "data", "checkpoint", "optim"}
+            "data", "checkpoint", "optim", "comm"}
 
 
 def _has_attr(obj, attr: str) -> bool:

@@ -360,26 +360,53 @@ def test_engine_rejects_bad_fault_events():
         engine3._rejoin(state3, 5)
 
 
-def test_dynamic_mode_rejects_chebyshev():
-    topo = FLTopology(num_servers=3, clients_per_server=2, t_client=2,
-                      t_server=2)
-    cfg = DFLConfig(topology=topo, dynamic=True, consensus_mode="chebyshev")
-    with pytest.raises(ValueError, match="chebyshev"):
-        build_dfl_epoch_step(cfg, lambda w, b, r: (jnp.zeros(()), {}),
-                             sgd(1e-3))
+def test_dynamic_chebyshev_consumes_traced_a_p():
+    """Chebyshev now rides the dynamic engine: the per-epoch spectral
+    estimate arrives as a traced operand (``EpochSchedule.lam2``, computed
+    host-side by the engine via ``topology.lambda_2``), so the semi-
+    iterative recursion serves time-varying graphs through ONE compiled
+    program — the formerly-prohibited combination."""
+    topo = FLTopology(num_servers=4, clients_per_server=2, t_client=3,
+                      t_server=9, graph_kind="ring")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.5),
+                                seed=0)
+    engine = make_engine(topo, task["loss_fn"], sgd(1e-3),
+                         consensus_mode="chebyshev",
+                         topology_schedule=TopologySchedule(
+                             kind="edge_drop", drop_prob=0.3, seed=5))
+    assert engine._needs_spectral
+    state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(1e-3),
+                           jax.random.key(0))
+    state, hist = engine.run(state, 4, task["batch_fn"])
+    assert np.isfinite(hist["loss"]).all()
+    # the accelerated rounds still contract server disagreement
+    assert hist["disagreement"][-1] < 5e-2
 
 
-def test_dynamic_mode_rejects_non_traced_backend_instance():
-    """An injected backend that cannot consume a traced per-epoch A_p
-    (chebyshev needs host-side spectral data) is rejected up front."""
-    topo = FLTopology(num_servers=3, clients_per_server=2, t_client=2,
-                      t_server=2)
-    backend = cns.make_backend("chebyshev", topo.mixing_matrix(),
-                               topo.t_server)
-    cfg = DFLConfig(topology=topo, dynamic=True, consensus_backend=backend)
-    with pytest.raises(ValueError, match="chebyshev"):
-        build_dfl_epoch_step(cfg, lambda w, b, r: (jnp.zeros(()), {}),
-                             sgd(1e-3))
+def test_chebyshev_backend_traced_matches_reference():
+    """ChebyshevBackend.mix with a TRACED (A_p, lam2) pair equals the
+    host-side gossip_chebyshev recursion on the same concrete matrix, for
+    per-epoch matrices the backend was NOT built with."""
+    m, t_s = 5, 9
+    base = tp.metropolis_weights(tp.ring_graph(m))
+    backend = cns.make_backend("chebyshev", base, t_s)
+    assert backend.supports_traced and backend.needs_spectral
+    tree = {"w": jax.random.normal(jax.random.key(1), (m, 6))}
+    mixed_jit = jax.jit(backend.mix)
+    for a_np in (base, tp.metropolis_weights(tp.complete_graph(m)),
+                 tp.metropolis_weights(tp.line_graph(m))):
+        lam2 = tp.lambda_2(a_np)
+        a = jnp.asarray(a_np, jnp.float32)
+        out = mixed_jit(tree, a, jnp.float32(lam2))
+        ref = cns.gossip_chebyshev(a, tree, backend.rounds, lam2)
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(ref["w"]),
+                                   rtol=2e-5, atol=2e-5)
+        # no lam2 operand: the in-graph eigendecomposition fallback
+        out_fb = jax.jit(lambda t, ap: backend.mix(t, ap))(tree, a)
+        np.testing.assert_allclose(np.asarray(out_fb["w"]),
+                                   np.asarray(ref["w"]),
+                                   rtol=2e-4, atol=2e-4)
 
 
 def test_regression_task_batch_fn_validates_ids():

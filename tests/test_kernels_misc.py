@@ -4,10 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.comm.compressors import StochasticQuantizer
 from repro.core import topology as tp
 from repro.core.consensus import collapse_mixing
 from repro.kernels import consensus_mix_pytree, ops
-from repro.kernels.consensus_mix import consensus_mix_2d
+from repro.kernels.consensus_mix import (consensus_mix_2d,
+                                         quantized_consensus_mix_2d)
 from repro.kernels.ref import consensus_mix_ref, rmsnorm_ref
 
 KEY = jax.random.key(11)
@@ -24,6 +26,37 @@ def test_consensus_mix_2d(m, d, block):
     ref = consensus_mix_ref(a, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,d,bits,chunk,block", [
+    (5, 1024, 8, 128, 512),     # multi-tile, multi-chunk per tile
+    (4, 1000, 8, 256, 512),     # ragged tail
+    (3, 130, 4, 64, 128),       # int4
+    (6, 37, 8, 256, 2048),      # single partial chunk
+])
+def test_quantized_consensus_mix_matches_compressor_oracle(m, d, bits,
+                                                           chunk, block):
+    """The fused quantize->mix->dequantize kernel equals the composition of
+    the comm-subsystem wire round-trip (same dither) and the dense mix."""
+    a = jnp.asarray(collapse_mixing(
+        tp.metropolis_weights(tp.ring_graph(m)), 7), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(KEY, d), (m, d)) * 3
+    u = jax.random.uniform(jax.random.fold_in(KEY, d + 1), (m, d))
+    out = quantized_consensus_mix_2d(a, w, u, bits=bits, chunk=chunk,
+                                     block_d=block)
+    q = StochasticQuantizer(bits=bits, chunk=chunk)
+    ref = a @ q.decompress(q.compress(w, dither=u), d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_quantized_consensus_mix_validates():
+    a = jnp.eye(2)
+    w = jnp.ones((2, 8))
+    with pytest.raises(ValueError, match="bits"):
+        quantized_consensus_mix_2d(a, w, w, bits=3)
+    with pytest.raises(ValueError, match="divide"):
+        quantized_consensus_mix_2d(a, w, w, chunk=3, block_d=8)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
