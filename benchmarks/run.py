@@ -24,21 +24,28 @@ theory quantities the paper derives and our beyond-paper claims):
   directed_federation   symmetric vs naive row-stochastic (biased) vs
                         push-sum (unbiased) gossip under directed /
                         asymmetrically-degraded links
-  consensus_backends    einsum vs blocked vs shard_map consensus execution
-                        on the DYNAMIC engine (traced per-epoch A_p):
-                        peak-RSS + epoch throughput per backend, one clean
-                        subprocess each, plus cross-backend agreement
-  compressed_consensus  the repro.comm layer: compressor x backend sweep
-                        recording bytes-on-wire (BytesTracker) vs consensus
-                        error vs wall-clock; checks int8+EF reaches the
-                        fig-3 tolerance at >= 3.5x fewer bytes and that the
-                        metadata byte counts match the analytic forms
+  consensus_backends    einsum vs blocked vs shard_map vs shard_map_wire
+                        (physical int8 wire) consensus execution on the
+                        DYNAMIC engine (traced per-epoch A_p): peak-RSS +
+                        epoch throughput per backend, one clean subprocess
+                        each, cross-backend agreement, and the physical-
+                        wire HLO cross-check (all-gather operands are s8
+                        codes + f32 scales matching the byte ledger)
+  compressed_consensus  the repro.comm layer: compressor x backend x wire
+                        sweep recording bytes-on-wire (BytesTracker) vs
+                        consensus error vs wall-clock; checks int8+EF
+                        reaches the fig-3 tolerance at >= 3.5x fewer bytes
+                        on BOTH the simulated and the physical wire, and
+                        that the metadata byte counts match the analytic
+                        forms
   kernel_micro          Pallas-kernel (interpret) vs jnp-oracle parity +
                         CPU wall time (correctness harness, not TPU perf)
   lm_epoch_throughput   DFL epoch wall time on a smoke LM (CPU reference)
 
 Each prints `name,metric,value` CSV rows and writes
-experiments/bench_results.csv.
+experiments/bench_results.csv; the consensus benches additionally dump
+experiments/BENCH_consensus.json (the machine-readable perf trajectory
+tracked across PRs).
 """
 import argparse
 import os
@@ -379,7 +386,7 @@ def bench_consensus_backends():
     child = r'''
 import os, sys, json, time, resource
 backend = sys.argv[1]
-if backend == "shard_map":
+if backend.startswith("shard_map"):
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
                                + os.environ.get("XLA_FLAGS", ""))
 import jax, jax.numpy as jnp, numpy as np
@@ -402,35 +409,62 @@ def batch_fn(epoch, alive):
 kw = {}
 if backend == "gossip_blocked":
     kw["consensus_mode"] = "gossip_blocked"
-elif backend == "shard_map":
+elif backend.startswith("shard_map"):
     from repro.launch import sharding as shd
     mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(m), ("server",))
     server_abs = jax.eval_shape(lambda: jnp.zeros((m, d), jnp.float32))
+    ckw = ({"compression": "int8", "error_feedback": True,
+            "wire": "physical"} if backend == "shard_map_wire" else {})
     kw["consensus_backend"] = shd.fl_consensus_backend(
-        topo, mesh, server_abs, tp_axis=None)
+        topo, mesh, server_abs, tp_axis=None, **ckw)
 engine = make_engine(topo, loss_fn, sgd(1e-3),
                      topology_schedule=TopologySchedule(
                          kind="edge_drop", drop_prob=0.3, seed=7), **kw)
 params = jax.random.normal(jax.random.key(0), (d,), jnp.float32)
 state = init_dfl_state(engine.cfg, params, sgd(1e-3), jax.random.key(1))
-state, _ = engine.run_epoch(state, 0, batch_fn)      # compile outside timing
+state, rec = engine.run_epoch(state, 0, batch_fn)    # compile outside timing
+wire_mb = rec.get("wire_mb", 0.0)
 t0 = time.time()
 for epoch in range(1, epochs):
-    state, _ = engine.run_epoch(state, epoch, batch_fn)
+    state, rec = engine.run_epoch(state, epoch, batch_fn)
+    wire_mb += rec.get("wire_mb", 0.0)
 wall = time.time() - t0
-servers = np.asarray(state.client_params[:, 0], np.float64)
-print(json.dumps({
+out = {
     "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024,
     "epochs_per_s": (epochs - 1) / wall,
-    "checksum": [float(servers.sum()), float(np.abs(servers).max())],
-    "fingerprint": servers[:, ::100_000].tolist(),
-}))
+}
+servers = np.asarray(state.client_params[:, 0], np.float64)
+out["checksum"] = [float(servers.sum()), float(np.abs(servers).max())]
+out["fingerprint"] = servers[:, ::100_000].tolist()
+if backend == "shard_map_wire":
+    # physical-wire cross-check: the compiled all-gather operands must be
+    # the codec's byte layout (s8 codes + f32 scales), and the per-round
+    # bytes one server ships must equal what the BytesTracker ledger
+    # charges per link message
+    from repro.comm.accounting import (hlo_collective_bytes,
+                                       physical_leaf_bytes)
+    cb = kw["consensus_backend"]
+    runner = cb.inner.wire_runner(cb.compressor, stochastic=True)
+    tree = {"w": jnp.zeros((m, d), jnp.float32)}
+    hlo = jax.jit(runner).lower(
+        jnp.zeros((m, m), jnp.float32), tree, jax.random.key(0)
+    ).compile().as_text()
+    cols = hlo_collective_bytes(hlo)
+    gathers = [c for c in cols if c["op"] == "all-gather"]
+    shipped = sum(c["bytes"] // m for c in gathers)      # one round, 1 block
+    expect = physical_leaf_bytes(cb.compressor, (m, d), cb.inner.block)
+    out["wire_hlo_dtypes"] = sorted({c["dtype"] for c in gathers})
+    out["wire_hlo_round_bytes"] = shipped
+    out["wire_hlo_matches_ledger"] = bool(shipped == expect)
+    out["wire_mb"] = wire_mb
+print(json.dumps(out))
 '''
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
     results = {}
     epochs, d = S(5, 3), S(1_500_000, 100_000)
-    for backend in ("gossip", "gossip_blocked", "shard_map"):
+    for backend in ("gossip", "gossip_blocked", "shard_map",
+                    "shard_map_wire"):
         r = subprocess.run([sys.executable, "-c", child, backend,
                             str(epochs), str(d)],
                            capture_output=True, text=True, timeout=900,
@@ -445,6 +479,16 @@ print(json.dumps({
                round(results[backend]["peak_rss_mb"], 1))
         record("consensus_backends", f"{backend}_epochs_per_s",
                round(results[backend]["epochs_per_s"], 3))
+    if "shard_map_wire" in results:
+        sw = results["shard_map_wire"]
+        record("consensus_backends", "shard_map_wire_hlo_dtypes",
+               "+".join(sw["wire_hlo_dtypes"]))
+        record("consensus_backends", "shard_map_wire_hlo_round_bytes",
+               sw["wire_hlo_round_bytes"])
+        record("consensus_backends", "shard_map_wire_bytes_match_hlo",
+               sw["wire_hlo_matches_ledger"])
+        record("consensus_backends", "shard_map_wire_total_wire_mb",
+               round(sw["wire_mb"], 3))
     if "gossip" in results:
         ref_fp = np.asarray(results["gossip"]["fingerprint"])
         ref_ck = np.asarray(results["gossip"]["checksum"])
@@ -513,28 +557,32 @@ def bench_compressed_consensus():
     record("compressed_consensus", "bytes_metadata_matches_analytic", ok)
 
     sweep = {
-        "none": ("none", False),
-        "int8": ("int8", False),
-        "int8_ef": ("int8", True),
-        "int4_ef": ("int4", True),
-        "top_k10_ef": ("top_k:0.10", True),
+        "none": ("none", False, "simulated"),
+        "int8": ("int8", False, "simulated"),
+        "int8_ef": ("int8", True, "simulated"),
+        "int4_ef": ("int4", True, "simulated"),
+        "top_k10_ef": ("top_k:0.10", True, "simulated"),
+        # the physical wire: codes through the collectives, re-quantized
+        # at every hop — must still reach the fig-3 tolerance
+        "int8_ef_phys": ("int8", True, "physical"),
+        "int4_ef_phys": ("int4", True, "physical"),
     }
     from repro.core import consensus as cns
 
     a_np = topo.mixing_matrix()
     stats = {}
-    for label, (spec, use_ef) in sweep.items():
+    for label, (spec, use_ef, wire) in sweep.items():
         for mode in ("gossip", "gossip_blocked"):
             if mode == "gossip_blocked":
                 # inject a right-sized blocked backend: the default 4 MiB
                 # block would pad this 32-d model 100k-fold per round
                 backend = cns.make_backend(
                     "gossip_blocked", a_np, t_s, block=256,
-                    compression=spec, error_feedback=use_ef)
+                    compression=spec, error_feedback=use_ef, wire=wire)
                 kw = {"consensus_backend": backend}
             else:
                 kw = {"consensus_mode": mode, "compression": spec,
-                      "error_feedback": use_ef}
+                      "error_feedback": use_ef, "wire": wire}
             engine = make_engine(topo, task["loss_fn"], sgd(gamma), **kw)
             state = init_dfl_state(engine.cfg, jnp.zeros((d,)), sgd(gamma),
                                    jax.random.key(0))
@@ -561,6 +609,11 @@ def bench_compressed_consensus():
            bool(hero["dis"] < 1e-3 and hero["err"] < 0.05))
     record("compressed_consensus", "int8_ef_bytes_ratio_ge_3.5",
            bool(hero["ratio"] >= 3.5))
+    phys = stats["int8_ef_phys_gossip"]
+    record("compressed_consensus", "physical_int8_ef_reaches_fig3_tolerance",
+           bool(phys["dis"] < 1e-3 and phys["err"] < 0.05))
+    record("compressed_consensus", "physical_int8_ef_bytes_ratio",
+           round(phys["ratio"], 3))
 
 
 BENCHES = {
@@ -604,10 +657,58 @@ def main() -> None:
     # smoke numbers are for execution coverage only: never overwrite the
     # recorded full-size results with them
     out_name = "bench_results_smoke.csv" if SMOKE else "bench_results.csv"
-    with open(os.path.join(OUT, out_name), "w") as f:
+    path = os.path.join(OUT, out_name)
+    ran = {name for name, _, _ in RESULTS}
+    kept = []
+    if args.only and os.path.exists(path):
+        # a partial (--only) run refreshes ITS benches' rows and keeps the
+        # rest of the recorded results instead of clobbering them
+        with open(path) as f:
+            kept = [ln.rstrip("\n") for ln in f.readlines()[1:]
+                    if ln.split(",", 1)[0] not in ran]
+    with open(path, "w") as f:
         f.write("name,metric,value\n")
+        for ln in kept:
+            f.write(ln + "\n")
         for row in RESULTS:
             f.write(",".join(str(r) for r in row) + "\n")
+    write_bench_consensus_json()
+
+
+def write_bench_consensus_json() -> None:
+    """Machine-readable consensus-perf trajectory: whenever the
+    consensus_backends / compressed_consensus benchmarks ran, dump their
+    rows (per-backend wall-clock + peak RSS, simulated vs physical wire
+    bytes and ratios, the HLO cross-check booleans) to
+    experiments/BENCH_consensus.json so the numbers are diffable across
+    PRs — the CSV is for humans, this file is the datapoint."""
+    import json
+
+    tracked = ("consensus_backends", "compressed_consensus")
+    per_bench = {name: {m: v for n, m, v in RESULTS if n == name}
+                 for name in tracked}
+    per_bench = {k: v for k, v in per_bench.items() if v}
+    if not per_bench:
+        return
+    out_name = ("BENCH_consensus_smoke.json" if SMOKE
+                else "BENCH_consensus.json")
+    path = os.path.join(OUT, out_name)
+    if os.path.exists(path):
+        # a partial (--only) run refreshes ITS benches' sections and keeps
+        # the other tracked bench's recorded datapoint — same merge rule
+        # as the CSV; the trajectory file must survive partial re-runs
+        try:
+            with open(path) as f:
+                old = json.load(f).get("benchmarks", {})
+            for name in tracked:
+                per_bench.setdefault(name, old.get(name, {}))
+            per_bench = {k: v for k, v in per_bench.items() if v}
+        except (ValueError, OSError):
+            pass
+    payload = {"smoke": SMOKE, "benchmarks": per_bench}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 if __name__ == "__main__":

@@ -25,12 +25,16 @@ reports per-epoch wire bytes.  See docs/dynamic_federation.md §compression.
 from repro.comm.compressors import (Compressed, Compressor,
                                     IdentityCompressor, RandomKCompressor,
                                     StochasticQuantizer, TopKCompressor,
-                                    make_compressor, roundtrip_tree,
+                                    keyed_index_sample, make_compressor,
+                                    pack_int4, roundtrip_tree,
                                     tree_message_elems,
-                                    tree_wire_bytes_per_server)
+                                    tree_wire_bytes_per_server, unpack_int4,
+                                    wire_dither)
 from repro.comm.error_feedback import ef_roundtrip, init_ef_residual
 from repro.comm.accounting import (BytesTracker, analytic_leaf_bytes,
-                                   analytic_row_bytes,
+                                   analytic_row_bytes, hlo_collective_bytes,
+                                   physical_leaf_bytes,
+                                   tree_physical_wire_bytes_per_server,
                                    uncompressed_row_bytes)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

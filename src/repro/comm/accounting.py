@@ -18,9 +18,21 @@ headline compression ratio needs no second run.
 ``analytic_row_bytes`` is the INDEPENDENT closed-form count per compressor
 family; tests and the ``compressed_consensus`` benchmark cross-check it
 against the metadata-derived ``Compressor.wire_bytes_per_row``.
+
+Physical wire.  Under ``wire="physical"`` the collectives themselves move
+the quantized codes (``core.consensus.make_gossip_shard_map`` with a
+codec): each round gathers the PADDED per-block byte layout — ``nb`` blocks
+of ``block`` codes (int4 packed two per byte) plus one f32 scale per chunk
+of every block.  ``physical_leaf_bytes`` / ``tree_physical_wire_bytes_per_
+server`` count exactly that layout, so the ``BytesTracker`` ledger reports
+the bytes the collectives actually ship (cross-checked against compiled-HLO
+operand shapes by ``tests/test_wire.py`` via ``hlo_collective_bytes``).
+The padded tail costs at most one block minus one element over the
+metadata count of the simulated wire.
 """
 from __future__ import annotations
 
+import re
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -63,6 +75,83 @@ def analytic_leaf_bytes(compressor: cp.Compressor, shape) -> int:
         nc = rows * -(-length // compressor.chunk)
         return int(np.ceil(d * compressor.bits / 8)) + 4 * nc
     return analytic_row_bytes(compressor, d)
+
+
+def physical_leaf_bytes(quantizer: cp.StochasticQuantizer, shape,
+                        block: int) -> int:
+    """On-wire bytes of one server's PHYSICAL-wire message for one leaf per
+    round: the leaf's row is flattened and padded to ``nb`` blocks of
+    ``min(block, d)`` elements, and every round each block's codes + scales
+    cross the collective.  This is the padded layout the shard_map program
+    gathers, not the unpadded metadata count of the simulated wire.
+
+    Assumes UNSHARDED rows — true for every ledger-carrying path today
+    (the trainer's shard_map mesh is ``(server,)``-only, and the engine's
+    string backends flatten whole rows).  A tp/fsdp-sharded shard_map
+    program flattens each device's LOCAL shard instead, so its per-shard
+    chunk/pad boundaries give a slightly larger scale count than this
+    closed form; if the ledger ever meets such a mesh, derive the count
+    from the local shard shapes."""
+    if not isinstance(quantizer, cp.StochasticQuantizer):
+        raise ValueError(
+            f"the physical wire has a byte layout only for the int8/int4 "
+            f"quantizers, got {quantizer!r}")
+    d = int(np.prod(tuple(shape)[1:]))
+    blk = min(block, d)
+    nb = -(-d // blk)
+    code_bytes, scale_bytes = quantizer.wire_block_bytes(blk)
+    return nb * (code_bytes + scale_bytes)
+
+
+def tree_physical_wire_bytes_per_server(quantizer: cp.StochasticQuantizer,
+                                        tree, block: int) -> int:
+    """Physical-wire bytes of one server's full message per round: the
+    per-leaf padded-block layout summed over leaves (each leaf is flattened
+    and blocked independently, mirroring ``make_gossip_shard_map``)."""
+    import jax
+    return sum(physical_leaf_bytes(quantizer, l.shape, block)
+               for l in jax.tree.leaves(tree))
+
+
+# one compiled-HLO collective, sync or async-start form, e.g.
+#   %all-gather.3 = s8[4,256]{1,0} all-gather(s8[1,256]{1,0} %x), ...
+#   %ag = (s8[1,256], s8[4,256]) all-gather-start(s8[1,256] %x), ...
+# (the matching '-done' op is intentionally NOT matched — its result
+# aliases the start op's output buffer and would double-count)
+_HLO_COLLECTIVE = re.compile(
+    r"=\s+(\(?[^=]*?)\s*(all-gather|collective-permute)(-start)?\(")
+_HLO_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_HLO_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+              "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+              "f64": 8}
+
+
+def hlo_collective_bytes(hlo_text: str) -> List[Dict[str, object]]:
+    """Parse a compiled-HLO dump into its gather/permute collectives:
+    ``[{op, dtype, shape, bytes}, ...]`` with ``bytes`` the RESULT buffer
+    size (for an all-gather over M participants, each participant ships
+    ``bytes / M``).  Handles both the synchronous form and the async
+    ``-start`` rewrite (whose result is an (operand, result) tuple — the
+    LARGEST element is the gathered buffer).  Test/benchmark
+    instrumentation for the physical-wire claim: the dtypes and shapes
+    here are what actually crossed the interconnect, and must match the
+    codec's ``wire_block_bytes``."""
+    out: List[Dict[str, object]] = []
+    for m in _HLO_COLLECTIVE.finditer(hlo_text):
+        result_types, op = m.group(1), m.group(2)
+        best = None
+        for dtype, dims in _HLO_SHAPE.findall(result_types):
+            if dtype not in _HLO_BYTES:
+                continue
+            shape = tuple(int(x) for x in dims.split(",") if x)
+            elems = int(np.prod(shape)) if shape else 1
+            nbytes = elems * _HLO_BYTES[dtype]
+            if best is None or nbytes > best["bytes"]:
+                best = {"op": op, "dtype": dtype, "shape": shape,
+                        "bytes": nbytes}
+        if best is not None:
+            out.append(best)
+    return out
 
 
 class BytesTracker:

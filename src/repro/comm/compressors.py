@@ -33,15 +33,135 @@ Compressors:
 ``--compression`` spec grammar::
 
     none | int8[:CHUNK] | int4[:CHUNK] | top_k:RATIO | random_k:RATIO
+
+Wire codecs.  The quantizers double as SHARD-SHAPED wire codecs for the
+physical-wire gossip paths (``core.consensus.make_gossip_shard_map`` /
+``make_ring_gossip`` with ``codec=``): ``StochasticQuantizer.encode_block``
+turns one flattened block into the exact byte layout that crosses the
+collective — int8 codes (two int4 codes packed per byte via ``pack_int4``)
+plus per-chunk f32 scales — and ``decode_block`` inverts it.  Both are thin
+wrappers over the same ``compress``/``decompress`` math, so the in-graph
+wire simulation and the physical collective path share ONE numerics
+definition; under the shared dither convention (``wire_dither``) the two
+are bit-identical (asserted in ``tests/test_wire.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# int4 byte packing + the shared wire-dither convention
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack int4 codes (int8 array, values in [-8, 7]) two per byte along
+    the last axis: element ``2i`` in the low nibble, ``2i+1`` in the high
+    nibble.  An odd-length axis is padded with one zero code (the receiver
+    slices it off in ``unpack_int4``).  Exactly invertible, so routing
+    codes through ``pack_int4``/``unpack_int4`` never changes numerics —
+    it only halves the bytes the collective moves."""
+    if codes.shape[-1] % 2:
+        codes = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, 1)])
+    u = jax.lax.bitcast_convert_type(codes, jnp.uint8)
+    lo = u[..., 0::2] & 0x0F
+    hi = (u[..., 1::2] & 0x0F) << 4
+    return jax.lax.bitcast_convert_type(lo | hi, jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, length: int) -> jax.Array:
+    """Inverse of ``pack_int4``: (..., ceil(length/2)) bytes -> (..., length)
+    sign-extended int8 codes."""
+    u = jax.lax.bitcast_convert_type(packed, jnp.uint8)
+    lo = (u & 0x0F).astype(jnp.int8)
+    hi = ((u >> 4) & 0x0F).astype(jnp.int8)
+    # sign-extend the 4-bit values: v in [0, 15] -> (v ^ 8) - 8 in [-8, 7]
+    both = jnp.stack([lo, hi], axis=-1)
+    both = ((both ^ 8) - 8).astype(jnp.int8)
+    flat = both.reshape(both.shape[:-2] + (-1,))
+    return flat[..., :length]
+
+
+def wire_dither(key: jax.Array, shape: Tuple[int, ...], *, leaf, rnd,
+                server, block) -> jax.Array:
+    """THE stochastic-rounding dither of the wire paths: uniform [0, 1)
+    noise keyed by ``(leaf index, gossip round, server row, block index)``.
+
+    Every wire execution — the in-graph simulation
+    (``core.consensus.gossip_scan_wire``), the physical shard_map /
+    ring collectives, and the error-feedback residual update — derives its
+    dither from this one convention, which is what makes them bit-identical
+    under a shared key: the same (leaf, round, server, block) cell always
+    rounds with the same noise, no matter which execution produced it.
+    All four coordinates may be traced (the shard_map paths fold in
+    ``lax.axis_index`` and loop counters)."""
+    k = jax.random.fold_in(key, leaf)
+    k = jax.random.fold_in(k, rnd)
+    k = jax.random.fold_in(k, server)
+    k = jax.random.fold_in(k, block)
+    return jax.random.uniform(k, shape)
+
+
+# ---------------------------------------------------------------------------
+# counter-based O(k) index sampling (random-k at LM scale)
+# ---------------------------------------------------------------------------
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """murmur3-style avalanche on uint32 (the Feistel round function)."""
+    x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+def keyed_index_sample(key: jax.Array, d: int, k: int) -> jax.Array:
+    """``k`` DISTINCT uniform indices in ``[0, d)`` in O(k) work: encrypt
+    the counters ``0..k-1`` with a keyed 4-round Feistel bijection over the
+    smallest even-bit power-of-two domain ``>= d`` and cycle-walk any value
+    that lands outside ``[0, d)`` back through the cipher.
+
+    This replaces the ``jax.random.permutation`` sampler, whose O(D log D)
+    sort (and O(D) memory) is fine at benchmark scale but prohibitive at LM
+    scale — the bijection gives the same guarantees random-k needs (distinct
+    indices, per-coordinate uniformity over keys, identical on every server
+    given the shared key) at O(k).  Cycle-walking terminates because the
+    cipher is a bijection: the walk traverses a cycle that must re-enter
+    ``[0, d)`` (expected < 4 steps; the domain is < 4d).
+
+    ``d`` is capped at ``2^31 - 1``: the indices gather with int32 (the
+    width jnp indexing uses without x64), and past that the wrap would
+    silently alias coordinates — and past ``2^32`` the uint32 cipher stops
+    being a bijection.  That is also the per-axis size ceiling of the
+    arrays these coordinates index, so the cap costs nothing in practice;
+    lifting it means moving the Feistel (and the gather) to 64-bit."""
+    if not 0 < k <= d:
+        raise ValueError(f"need 0 < k <= d, got k={k}, d={d}")
+    if d > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"keyed_index_sample is 32-bit (uint32 cipher, int32 gather "
+            f"indices): d={d} exceeds 2^31 - 1 and would silently alias "
+            f"coordinates")
+    half = max(1, -(-max(d - 1, 1).bit_length() // 2))    # ceil(bits/2)
+    mask = jnp.uint32((1 << half) - 1)
+    round_keys = jax.random.bits(key, (4,), dtype=jnp.uint32)
+
+    def feistel(x):
+        left, right = x >> half, x & mask
+        for rk in round_keys:
+            left, right = right, left ^ (_mix32(right ^ rk) & mask)
+        return (left << half) | right
+
+    def walk(x):
+        return jax.lax.while_loop(lambda v: v >= d, lambda v: feistel(v), x)
+
+    idx = jax.vmap(walk)(feistel(jnp.arange(k, dtype=jnp.uint32)))
+    return idx.astype(jnp.int32)
 
 
 class Compressed(NamedTuple):
@@ -217,6 +337,43 @@ class StochasticQuantizer(Compressor):
         scale = self._per_elem(comp.scale, d)
         return comp.data[..., :d].astype(jnp.float32) * scale
 
+    # -- shard-shaped wire codec (the physical-wire gossip byte layout) ------
+    def encode_block(self, x: jax.Array, dither) -> Tuple[jax.Array,
+                                                          jax.Array]:
+        """Encode a block (last axis = the flattened slice a device ships)
+        into its ON-WIRE representation: ``(codes, scales)`` where ``codes``
+        is int8 — for ``bits=4``, two codes packed per byte
+        (``pack_int4``) — and ``scales`` one f32 per chunk.  A thin wrapper
+        over ``compress``, so the wire format and the in-graph simulation
+        are ONE numerics definition: under the same dither,
+        ``decode_block(*encode_block(x, u))`` is bitwise
+        ``decompress(compress(x, dither=u))``.
+
+        Zero padding is scale-neutral by construction: ``|0|`` never raises
+        a chunk's absmax, an all-pad chunk gets scale 1, and a pad element
+        quantizes to code ``floor(0 + u) = 0`` for every dither ``u < 1`` —
+        so zero-padded tails decode to exact zeros and cannot perturb the
+        real data's quantization grid (asserted in ``tests/test_wire.py``).
+        """
+        comp = self.compress(x, dither=dither)
+        codes = pack_int4(comp.data) if self.bits == 4 else comp.data
+        return codes, comp.scale
+
+    def decode_block(self, codes: jax.Array, scales: jax.Array,
+                     length: int) -> jax.Array:
+        """Invert ``encode_block``: unpack (int4) and dequantize to f32."""
+        q = unpack_int4(codes, length) if self.bits == 4 else codes
+        return self.decompress(Compressed(data=q, scale=scales), length)
+
+    def wire_block_bytes(self, length: int) -> Tuple[int, int]:
+        """(code bytes, scale bytes) of one encoded ``length``-element
+        block — the exact operand sizes of the physical-wire collective,
+        cross-checked against compiled-HLO shapes in ``tests/test_wire.py``.
+        """
+        nc = -(-length // self.chunk)
+        code_bytes = -(-length // 2) if self.bits == 4 else length
+        return code_bytes, 4 * nc
+
 
 @dataclasses.dataclass(frozen=True)
 class TopKCompressor(Compressor):
@@ -257,7 +414,12 @@ class RandomKCompressor(Compressor):
     regenerate the indices from the seed and only the values cross the wire.
     Biased per call (no d/k rescale — error feedback absorbs it, and the
     unscaled form keeps values bounded, which quantizer-style downstream
-    stages prefer)."""
+    stages prefer).
+
+    Coordinates come from the counter-based ``keyed_index_sample`` —
+    O(k) work and memory (a keyed Feistel bijection over the counters)
+    instead of the O(D log D) full ``jax.random.permutation`` sort, which
+    is what makes seed-regeneration viable at LM scale on the receivers."""
 
     ratio: float = 0.05
 
@@ -277,8 +439,8 @@ class RandomKCompressor(Compressor):
             raise ValueError("random_k needs the shared rng key (the "
                              "coordinate set IS the seed)")
         d = x.shape[1]
-        idx = jax.random.permutation(key, d)[: self.k_for(d)]
-        return Compressed(data=x[:, idx], idx=idx.astype(jnp.int32))
+        idx = keyed_index_sample(key, d, self.k_for(d))
+        return Compressed(data=x[:, idx], idx=idx)
 
     def decompress(self, comp, d):
         m = comp.data.shape[0]

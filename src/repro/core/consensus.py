@@ -48,6 +48,23 @@ the launcher (``launch.sharding.fl_consensus_backend``) and injected via
 sparsification) of each server's outgoing message plus optional error
 feedback — so every execution strategy composes with every compressor; the
 host-side byte ledger is ``comm.accounting.BytesTracker``.
+
+**Physical wire.**  ``CompressedBackend(wire="physical")`` makes the
+compressed format the format that actually crosses the interconnect:
+every gossip round quantizes the local block to int8 / packed-int4 codes +
+per-chunk scales *before* the collective, gathers the code buffer, and
+dequantizes-and-mixes after — ``make_gossip_shard_map`` /
+``make_ring_gossip`` with ``codec=`` are the collective programs,
+``gossip_scan_wire`` the in-graph reference twin (bit-identical under the
+shared dither convention ``comm.compressors.wire_dither``).  The wire
+model changes with it: the simulated wire quantizes ONCE per period
+(payload flooding — gossip is linear in the payloads), the physical wire
+encodes at every hop.  What each hop encodes is the DELTA against the
+receivers' shared decoded reference (innovation coding, the recursion in
+``gossip_scan_wire``): the delta's magnitude contracts with consensus, so
+per-hop quantization noise vanishes where the tolerance bites — raw-state
+re-quantization instead floors the disagreement at the int8 grid (
+measured ~1e-2 on the fig-3 task, 10x outside the paper's tolerance).
 """
 from __future__ import annotations
 
@@ -188,6 +205,170 @@ def gossip_scan_blocked(a: jax.Array, tree: Any, t_server: int,
         new_leaves.append(flat[:, off:off + size].reshape(leaf.shape))
         off += size
     return jax.tree.unflatten(treedef, new_leaves)
+
+
+# ---------------------------------------------------------------------------
+# quantized-wire gossip: the per-round physical wire model, in-graph
+# ---------------------------------------------------------------------------
+
+DEFAULT_GOSSIP_BLOCK = 4_194_304
+
+
+def _wire_mix_rows(a32: jax.Array, g: jax.Array) -> jax.Array:
+    """``out[i] = sum_j a32[i, j] * g[j]`` accumulated LEFT TO RIGHT in f32
+    — the exact multiply-add order of the shard_map round body (one term
+    per server, f32 accumulator), so the in-graph wire simulation is
+    bit-identical to the physical collective path, not merely allclose."""
+    m = g.shape[0]
+    ones = (1,) * (g.ndim - 1)
+    acc = a32[:, 0].reshape((-1,) + ones) * g[0]
+    for j in range(1, m):
+        acc = acc + a32[:, j].reshape((-1,) + ones) * g[j]
+    return acc
+
+
+def _wire_dither_rows(codec, key, m: int, nb: int, blk: int, *, leaf,
+                      rnd, block_ids=None):
+    """(m, nb, blk) dither for one round of one leaf under the shared
+    convention, or the deterministic 0.5 when no key is given."""
+    del codec
+    if key is None:
+        return 0.5
+    blocks = jnp.arange(nb) if block_ids is None else block_ids
+    return jax.vmap(lambda s: jax.vmap(
+        lambda b: _compressors.wire_dither(
+            key, (blk,), leaf=leaf, rnd=rnd, server=s, block=b))(
+                blocks))(jnp.arange(m))
+
+
+def gossip_scan_wire(a: jax.Array, tree: Any, t_server: int, codec,
+                     key: Optional[jax.Array] = None, *,
+                     block: int = DEFAULT_GOSSIP_BLOCK,
+                     block_major: bool = False) -> Any:
+    """Per-round quantized-WIRE gossip, in-graph: the reference numerics of
+    the physical collective paths.  Every round, every server encodes the
+    DELTA between its iterate and the receivers' shared decoded estimate of
+    it (innovation coding) to wire codes (``codec.encode_block`` — int8 /
+    packed int4 + per-chunk scales) with the shared dither convention
+    (``comm.compressors.wire_dither``); every receiver accumulates the
+    decoded deltas into its reference copy of every sender and mixes those
+    references:
+
+        delta_t = W_t - R_{t-1}          (encoded; crosses the wire)
+        R_t     = R_{t-1} + D(C(delta_t))
+        W_{t+1} = A · R_t                (R_0 = 0)
+
+    Why deltas and not the raw state: re-quantizing the full iterate at
+    every hop injects absmax-scaled noise 25x per period — measured on the
+    fig-3 task, stochastic rounding random-walks at a ~1e-2 disagreement
+    floor and round-to-nearest locks a dead-zone bias of ~3 grid steps
+    (err 0.12), both far outside the paper's tolerance.  The delta's
+    absmax CONTRACTS with consensus, so the per-hop quantization noise
+    vanishes exactly where the tolerance bites; round 0 (R_0 = 0) still
+    ships the full state, and that transmission is what period-level error
+    feedback tracks (``wire_roundtrip_tree``).  Same codes + scales per
+    round on the wire — the byte ledger is unchanged.
+
+    Bit-identical to ``make_gossip_shard_map``'s codec mode under the same
+    key and block size (asserted in ``tests/test_wire.py``): same
+    per-(leaf, round, server, block) dither, same chunk boundaries (every
+    block is encoded independently, so chunking never crosses a block),
+    and the same left-to-right f32 multiply-add order (``_wire_mix_rows``).
+    ``block_major=True`` streams (block-major, round-minor) like
+    ``gossip_scan_blocked`` — the identical operator bit for bit, since
+    blocks gossip and encode independently.
+
+    Zero padding of the ragged tail block is harmless by construction: a
+    zero element never raises its chunk's absmax and quantizes to code
+    ``floor(0 + u) = 0`` for every dither ``u < 1``, so pad deltas stay
+    exactly zero, references stay zero, and pads mix to zero (see
+    ``StochasticQuantizer.encode_block``)."""
+    if t_server == 0:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    m = leaves[0].shape[0]
+    a32 = a.astype(jnp.float32)
+    new_leaves = []
+    for li, leaf in enumerate(leaves):
+        dtype = leaf.dtype
+        flat = leaf.reshape(m, -1)
+        d = flat.shape[1]
+        blk = min(block, d)
+        nb = -(-d // blk)
+        if nb * blk != d:
+            flat = jnp.pad(flat, ((0, 0), (0, nb * blk - d)))
+        rows = flat.reshape(m, nb, blk)
+
+        def one_round(t, carry, li=li, blk=blk, nb=nb, dtype=dtype):
+            rows, ref = carry                        # (m, nb, blk) each
+            delta = rows.astype(jnp.float32) - ref
+            dither = _wire_dither_rows(codec, key, m, nb, blk, leaf=li,
+                                       rnd=t)
+            codes, scales = codec.encode_block(delta, dither)
+            ref = ref + codec.decode_block(codes, scales, blk)
+            return _wire_mix_rows(a32, ref).astype(dtype), ref
+
+        if block_major:
+            def per_block(_, xs, li=li, blk=blk, dtype=dtype):
+                rows_b, b = xs                       # (m, blk), block index
+
+                def rnd_fn(t, carry):
+                    w, ref = carry
+                    delta = w.astype(jnp.float32) - ref
+                    dither = _wire_dither_rows(
+                        codec, key, m, 1, blk, leaf=li, rnd=t,
+                        block_ids=b[None])
+                    codes, scales = codec.encode_block(
+                        delta[:, None, :], dither)
+                    ref = ref + codec.decode_block(codes, scales,
+                                                   blk)[:, 0]
+                    return _wire_mix_rows(a32, ref).astype(dtype), ref
+
+                out, _ = jax.lax.fori_loop(
+                    0, t_server, rnd_fn,
+                    (rows_b, jnp.zeros_like(rows_b, jnp.float32)))
+                return None, out
+
+            _, mixed = jax.lax.scan(
+                per_block, None, (jnp.moveaxis(rows, 1, 0), jnp.arange(nb)))
+            rows = jnp.moveaxis(mixed, 0, 1)
+        else:
+            rows, _ = jax.lax.fori_loop(
+                0, t_server, one_round,
+                (rows, jnp.zeros_like(rows, jnp.float32)))
+        flat = rows.reshape(m, nb * blk)[:, :d]
+        new_leaves.append(flat.reshape(leaf.shape))
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def wire_roundtrip_tree(codec, tree: Any, key: Optional[jax.Array] = None,
+                        *, block: int = DEFAULT_GOSSIP_BLOCK,
+                        rnd: int = 0) -> Any:
+    """One wire round-trip of a server tree in the PHYSICAL byte layout:
+    each leaf row flattened, zero-padded to ``block``-element blocks, and
+    encoded/decoded with the shared round-``rnd`` dither — exactly what
+    round ``rnd`` of the physical gossip ships of each server's OWN model.
+    This is the error-feedback hook of ``wire='physical'``: the residual is
+    the difference between a server's model and this round-0 transmission
+    of it (later rounds re-quantize mixed values whose stochastic-rounding
+    error is zero-mean and untracked)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    m = leaves[0].shape[0]
+    out = []
+    for li, leaf in enumerate(leaves):
+        flat = leaf.reshape(m, -1)
+        d = flat.shape[1]
+        blk = min(block, d)
+        nb = -(-d // blk)
+        if nb * blk != d:
+            flat = jnp.pad(flat, ((0, 0), (0, nb * blk - d)))
+        rows = flat.reshape(m, nb, blk).astype(jnp.float32)
+        dither = _wire_dither_rows(codec, key, m, nb, blk, leaf=li, rnd=rnd)
+        codes, scales = codec.encode_block(rows, dither)
+        y = codec.decode_block(codes, scales, blk)
+        out.append(y.reshape(m, nb * blk)[:, :d].reshape(leaf.shape)
+                   .astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
 
 
 # ---------------------------------------------------------------------------
@@ -404,7 +585,10 @@ def lambda2_traced(a: jax.Array) -> jax.Array:
 
 def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
                           axis_name: str = "server",
-                          block: int = 16_777_216) -> Callable:
+                          block: int = 16_777_216, codec=None,
+                          stochastic: bool = True,
+                          gather_codes: bool = True,
+                          with_shipped: bool = False) -> Callable:
     """T_S-round gossip as an explicit shard_map program, returned as
     ``run(operator, tree)`` with the ``(M, M)`` mixing ``operator`` a
     *traced operand* — one compiled program serves every per-epoch graph
@@ -426,13 +610,62 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
     ``leaf_specs``: PartitionSpec pytree of the server tree (leading
     'server' axis + intra-client weight axes) — used as in_specs and
     out_specs; the operator itself rides in replicated.
+
+    **Quantized wire mode** (``codec=`` a ``comm.compressors.
+    StochasticQuantizer``): the returned ``run(operator, tree, key)``
+    quantizes the local ``(block,)`` slice — delta-coded against the
+    receivers' shared decoded reference, see ``gossip_scan_wire`` for the
+    recursion and why innovations rather than raw state — to int8 /
+    packed-int4 codes + per-chunk f32 scales *before* the gather,
+    all-gathers the code and scale buffers — so the collective operand is
+    1/4 (int8) or 1/8 (int4) of the f32 wire, for real, asserted against
+    compiled HLO — and dequantizes, accumulates references, and mixes
+    after.  Every device carries the identical ``(M, block)`` f32
+    reference through the round loop (~(2M+2) x block x 4 bytes live per
+    block — the same order as the gather buffer itself).  Dither follows
+    the shared ``comm.compressors.wire_dither`` convention keyed by (leaf,
+    round, server, block), making this program bit-identical to the
+    in-graph ``gossip_scan_wire`` reference under the same key;
+    ``stochastic=False`` builds the deterministic round-to-nearest program
+    (no key needed).  ``gather_codes=False`` is the simulated twin for
+    parity tests: the same code values cross the wire at full f32 width —
+    4x the bytes, identical ops — asserted bitwise equal to the physical
+    program, proving the narrow wire changes encoding width only.
+    Zero-padded tail blocks are harmless: pad deltas quantize to zero
+    codes and never perturb real chunks' scales (see
+    ``StochasticQuantizer.encode_block``).
+
+    The dither's server coordinate is the device's LINEARIZED mesh
+    position (server-major), so when ``leaf_specs`` shard weight axes over
+    further mesh axes (tp / fsdp), the shards of one server row draw
+    DISTINCT rounding noise; on a pure ``(server,)`` mesh it reduces to
+    the server index — which is what keeps the program bit-identical to
+    ``gossip_scan_wire`` (whose rows are unsharded).  ``with_shipped=True``
+    makes ``run`` return ``(mixed tree, shipped tree)`` where ``shipped``
+    is each device's own round-0 decoded transmission — the error-feedback
+    hook: it is computed INSIDE the program, with the exact local-shard
+    block/chunk/dither layout that crossed the wire (an outside
+    ``wire_roundtrip_tree`` would only reproduce it for unsharded rows).
     """
     from jax.sharding import PartitionSpec as P
 
-    def body(a, tree):
+    if with_shipped and codec is None:
+        raise ValueError("with_shipped is the wire codec's error-feedback "
+                         "hook; it needs codec=")
+    other_axes = [ax for ax in mesh.axis_names if ax != axis_name]
+    n_other = int(np.prod([mesh.shape[ax] for ax in other_axes],
+                          dtype=np.int64)) if other_axes else 1
+
+    def body(a, kd, tree):
         m = a.shape[0]
         idx = jax.lax.axis_index(axis_name)
         row = a[idx].astype(jnp.float32)                 # (M,) my weights
+        key = (jax.random.wrap_key_data(kd)
+               if codec is not None and stochastic else None)
+        sub = 0
+        for ax in other_axes:
+            sub = sub * mesh.shape[ax] + jax.lax.axis_index(ax)
+        wire_server = idx * n_other + sub
         leaves, treedef = jax.tree.flatten(tree)
         dtype = leaves[0].dtype
         # Wire-format control: carry the gossip stream as u16 bit-patterns
@@ -458,41 +691,140 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
                 acc = acc + row[j] * g[j].astype(jnp.float32)
             return to_wire(acc.astype(dtype))
 
-        def gossip_leaf(flat):
-            """Blocked in-place gossip over one flattened (wire) leaf."""
+        def round_fn_wire(leaf_idx, b, blk, t, carry):
+            """One quantized-wire round, delta-coded: encode the innovation
+            of my slice against the receivers' shared decoded reference of
+            me, gather CODES (not floats), accumulate every row's decoded
+            delta into the reference matrix, mix the references.  All
+            devices carry the identical (M, blk) reference (same initial
+            zero, same decoded updates), so every consumer — including my
+            own next-round carry — works from one numerics definition
+            shared with the wire simulation; the delta's absmax contracts
+            with consensus, so per-hop quantization noise vanishes instead
+            of flooring (see ``gossip_scan_wire``)."""
+            w, ref = carry                       # (blk,) wire, (M, blk) f32
+            delta = from_wire(w).astype(jnp.float32) - ref[idx]
+            if key is not None:
+                dither = _compressors.wire_dither(
+                    key, (blk,), leaf=leaf_idx, rnd=t, server=wire_server,
+                    block=b)
+            else:
+                dither = 0.5
+            codes, scales = codec.encode_block(delta, dither)
+            if gather_codes:
+                g_codes = jax.lax.all_gather(codes, axis_name)
+            else:
+                # simulated twin: the same code VALUES cross the wire at
+                # full f32 width (the f32 -> int8 round-trip is exact on
+                # code integers), so the collective moves 4x the bytes but
+                # the decode still happens after the gather — keeping the
+                # multiply-add structure, and therefore the FMA
+                # contraction, identical to the physical program: the two
+                # are asserted BITWISE equal, proving the narrow wire
+                # changes encoding width only, never the numerics
+                g_codes = jax.lax.all_gather(
+                    codes.astype(jnp.float32), axis_name).astype(codes.dtype)
+            g_scales = jax.lax.all_gather(scales, axis_name)
+            ref = ref + codec.decode_block(g_codes, g_scales, blk)
+            acc = row[0] * ref[0]
+            for j in range(1, m):
+                acc = acc + row[j] * ref[j]
+            return to_wire(acc.astype(dtype)), ref
+
+        def gossip_leaf(leaf_idx, flat):
+            """Blocked in-place gossip over one flattened (wire) leaf;
+            returns ``(mixed, shipped)`` with ``shipped`` this device's own
+            round-0 decoded transmission (f32; zeros without a codec).
+
+            The ragged tail block is zero-padded; zeros survive both wire
+            formats exactly (they mix to zero, and quantize to zero codes
+            without touching any real chunk's absmax scale), so the pad is
+            sliced back off unchanged."""
             d = flat.size
             blk = min(block, d)
             nb = -(-d // blk)
             if nb * blk != d:
                 flat = jnp.pad(flat, (0, nb * blk - d))
+
+            def block_rounds(b, w):
+                if codec is None:
+                    return (jax.lax.fori_loop(0, t_server, round_fn, w),
+                            jnp.zeros((blk,), jnp.float32))
+                step = functools.partial(round_fn_wire, leaf_idx, b, blk)
+                ref0 = jnp.zeros((m, blk), jnp.float32)
+                if not with_shipped:
+                    w, _ = jax.lax.fori_loop(0, t_server, step, (w, ref0))
+                    return w, jnp.zeros((blk,), jnp.float32)
+                # round 0 unrolled: its post-round reference row IS what
+                # this device shipped of its own model (the EF hook) —
+                # only peeled when the caller wants it, so the plain
+                # program keeps a single gather site in the compiled HLO
+                w, ref = step(0, (w, ref0))
+                shipped = ref[idx]
+                w, _ = jax.lax.fori_loop(1, t_server, step, (w, ref))
+                return w, shipped
+
             if nb == 1:
-                return jax.lax.fori_loop(0, t_server, round_fn, flat)[:d]
+                w, shipped = block_rounds(0, flat)
+                return w[:d], shipped[:d]
 
-            def per_block(i, buf):
+            def per_block(i, carry):
+                buf, sbuf = carry
                 w = jax.lax.dynamic_slice(buf, (i * blk,), (blk,))
-                w = jax.lax.fori_loop(0, t_server, round_fn, w)
-                return jax.lax.dynamic_update_slice(buf, w, (i * blk,))
+                w, shipped = block_rounds(i, w)
+                return (jax.lax.dynamic_update_slice(buf, w, (i * blk,)),
+                        jax.lax.dynamic_update_slice(sbuf, shipped,
+                                                     (i * blk,)))
 
-            return jax.lax.fori_loop(0, nb, per_block, flat)[:d]
+            buf, sbuf = jax.lax.fori_loop(
+                0, nb, per_block,
+                (flat, jnp.zeros((nb * blk,), jnp.float32)))
+            return buf[:d], sbuf[:d]
 
         # Per-leaf loops CHAINED via optimization_barrier: leaves gossip
         # independently, so XLA would otherwise schedule their while-loops
         # concurrently and hold every leaf's wire buffers at once; the
         # token dependency forces one leaf in flight at a time.
-        new_leaves = []
+        new_leaves, shipped_leaves = [], []
         token = None
-        for leaf in leaves:
+        for leaf_idx, leaf in enumerate(leaves):
             wl = to_wire(leaf.astype(dtype)).reshape(-1)
             if token is not None:
                 wl, token = jax.lax.optimization_barrier((wl, token))
-            out = gossip_leaf(wl)
+            out, shipped = gossip_leaf(leaf_idx, wl)
             token = out[0]
             new_leaves.append(
                 from_wire(out).astype(leaf.dtype).reshape(leaf.shape))
-        return jax.tree.unflatten(treedef, new_leaves)
+            shipped_leaves.append(
+                shipped.astype(leaf.dtype).reshape(leaf.shape))
+        mixed = jax.tree.unflatten(treedef, new_leaves)
+        if not with_shipped:
+            return mixed
+        return mixed, jax.tree.unflatten(treedef, shipped_leaves)
 
-    return shard_map_compat(body, mesh, (P(None, None), leaf_specs),
-                            leaf_specs, check=False)
+    out_specs = ((leaf_specs, leaf_specs)
+                 if codec is not None and with_shipped else leaf_specs)
+    sm = shard_map_compat(body, mesh, (P(None, None), P(None), leaf_specs),
+                          out_specs, check=False)
+    if codec is None:
+        return lambda a, tree: sm(a, jnp.zeros((2,), jnp.uint32), tree)
+
+    def run(a, tree, key=None):
+        if stochastic:
+            if key is None:
+                raise ValueError(
+                    "this wire program was built stochastic=True and needs "
+                    "the rounding key; build with stochastic=False for "
+                    "deterministic round-to-nearest")
+            kd = jax.random.key_data(key)
+        else:
+            kd = jnp.zeros((2,), jnp.uint32)
+        if t_server == 0:       # nothing crosses the wire (or is shipped)
+            return ((tree, jax.tree.map(jnp.zeros_like, tree))
+                    if with_shipped else tree)
+        return sm(a, kd, tree)
+
+    return run
 
 
 # ---------------------------------------------------------------------------
@@ -515,15 +847,30 @@ def ring_gossip_step(w: jax.Array, *, axis_name: str, self_weight: float,
 
 
 def make_ring_gossip(mesh: jax.sharding.Mesh, axis_name: str, t_server: int,
-                     self_weight: float, neighbor_weight: float) -> Callable:
+                     self_weight: float, neighbor_weight: float, *,
+                     codec=None, stochastic: bool = True,
+                     gather_codes: bool = True) -> Callable:
     """Build a shard_map'd T_S-round ring gossip over ``axis_name``.
 
     The input pytree must have its leading (server) axis sharded over
     ``axis_name``; other axes pass through unchanged.
-    """
+
+    **Quantized wire mode** (``codec=`` a quantizer): the returned
+    ``run(tree, key)`` ppermutes int8 / packed-int4 CODES + per-chunk
+    scales instead of the float payload — each round encodes the local
+    shard's DELTA against the receivers' decoded reference once
+    (innovation coding, see ``gossip_scan_wire``) and ships the same code
+    buffer to both ring neighbours; every consumer (neighbours AND the
+    own-carry self term) accumulates the decoded delta into its reference
+    of the sender and mixes references — the same one-numerics-definition
+    as ``make_gossip_shard_map``'s wire mode.  Dither follows
+    ``comm.compressors.wire_dither`` with the local flattened shard as one
+    block (block index 0); ``gather_codes=False`` builds the simulated
+    twin (the same code values ppermuted at f32 width — bitwise identical)
+    for the parity tests."""
     from jax.sharding import PartitionSpec as P
 
-    def per_shard(tree):
+    def per_shard(kd, tree):
         def body(_, w):
             return jax.tree.map(
                 lambda x: ring_gossip_step(
@@ -532,12 +879,92 @@ def make_ring_gossip(mesh: jax.sharding.Mesh, axis_name: str, t_server: int,
                 w)
         return jax.lax.fori_loop(0, t_server, body, tree)
 
+    def per_shard_wire(kd, tree):
+        m = jax.lax.psum(1, axis_name)
+        idx = jax.lax.axis_index(axis_name)
+        key = jax.random.wrap_key_data(kd) if stochastic else None
+        fwd = [(i, (i + 1) % m) for i in range(m)]
+        bwd = [((i + 1) % m, i) for i in range(m)]
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = [l.shape for l in leaves]
+
+        def step(t, carry):
+            flats, refs = carry
+            new_flats, new_refs = [], []
+            for li, (flat, ref3) in enumerate(zip(flats, refs)):
+                # delta-coded wire (see gossip_scan_wire): each node keeps
+                # a decoded reference of itself and of both ring
+                # neighbours; only the innovation w - ref_self is encoded,
+                # so per-hop quantization noise contracts with consensus
+                r_self, r_left, r_right = ref3
+                length = flat.size
+                delta = flat.astype(jnp.float32) - r_self
+                if key is not None:
+                    dither = _compressors.wire_dither(
+                        key, (length,), leaf=li, rnd=t, server=idx, block=0)
+                else:
+                    dither = 0.5
+                codes, scales = codec.encode_block(delta, dither)
+                if gather_codes:
+                    wire_codes = codes
+                    unwire = lambda c: c          # noqa: E731
+                else:
+                    # simulated twin: the same code values at f32 width —
+                    # decode still happens after the ppermute, keeping the
+                    # FMA-contraction structure identical to the physical
+                    # program (see make_gossip_shard_map), hence bitwise
+                    wire_codes = codes.astype(jnp.float32)
+                    unwire = lambda c: c.astype(codes.dtype)  # noqa: E731
+                d_left = codec.decode_block(
+                    unwire(jax.lax.ppermute(wire_codes, axis_name,
+                                            perm=fwd)),
+                    jax.lax.ppermute(scales, axis_name, perm=fwd), length)
+                d_right = codec.decode_block(
+                    unwire(jax.lax.ppermute(wire_codes, axis_name,
+                                            perm=bwd)),
+                    jax.lax.ppermute(scales, axis_name, perm=bwd), length)
+                r_self = r_self + codec.decode_block(codes, scales, length)
+                r_left = r_left + d_left
+                r_right = r_right + d_right
+                # Contraction-stable mixing: accumulate one weighted term
+                # per add, exactly like the all-gather round body.  Every
+                # add then exposes the SAME candidate multiply in both wire
+                # programs, so LLVM's FMA contraction makes the same choice
+                # and gather_codes=True / False stay BITWISE identical —
+                # ``nw * (left + right)`` instead adds two raw dequant
+                # sums in physical mode (contractible) but materialized
+                # floats in simulated mode (not), and the two programs
+                # drift by one rounding.
+                acc = self_weight * r_self
+                acc = acc + neighbor_weight * r_left
+                acc = acc + neighbor_weight * r_right
+                new_flats.append(acc.astype(flat.dtype))
+                new_refs.append((r_self, r_left, r_right))
+            return new_flats, new_refs
+
+        flats = [l.reshape(-1) for l in leaves]
+        zeros = [tuple(jnp.zeros_like(f, jnp.float32) for _ in range(3))
+                 for f in flats]
+        flats, _ = jax.lax.fori_loop(0, t_server, step, (flats, zeros))
+        return jax.tree.unflatten(
+            treedef, [f.reshape(s) for f, s in zip(flats, shapes)])
+
     def spec_for(tree):
         return jax.tree.map(lambda x: P(axis_name, *([None] * (x.ndim - 1))), tree)
 
-    def run(tree):
+    def run(tree, key=None):
         specs = spec_for(tree)
-        return shard_map_compat(per_shard, mesh, (specs,), specs)(tree)
+        body = per_shard if codec is None else per_shard_wire
+        if codec is not None and stochastic:
+            if key is None:
+                raise ValueError(
+                    "this wire program was built stochastic=True and needs "
+                    "the rounding key")
+            kd = jax.random.key_data(key)
+        else:
+            kd = jnp.zeros((2,), jnp.uint32)
+        return shard_map_compat(body, mesh, (P(None), specs),
+                                specs)(kd, tree)
 
     return run
 
@@ -746,11 +1173,37 @@ class ShardMapBackend(ConsensusBackend):
     def __init__(self, mesh, a_static, t_server, leaf_specs, *,
                  axis_name: str = "server", block: int = 16_777_216):
         super().__init__(a_static, t_server)
+        self.mesh = mesh
+        self.leaf_specs = leaf_specs
+        self.axis_name = axis_name
+        self.block = block
         self._run = make_gossip_shard_map(mesh, t_server, leaf_specs,
                                           axis_name=axis_name, block=block)
+        self._wire_runners = {}
 
     def _mix(self, tree, a):
         return self._run(a, tree)
+
+    def wire_runner(self, codec, *, stochastic: bool = True,
+                    gather_codes: bool = True,
+                    with_shipped: bool = False) -> Callable:
+        """The physical-wire twin of this backend's program — same mesh,
+        specs and block, but the all-gather moves the codec's int8 /
+        packed-int4 codes instead of the float payload.
+        ``with_shipped=True`` additionally returns each device's round-0
+        decoded transmission (the error-feedback hook, computed inside the
+        program with the exact local-shard wire layout).  Built on demand
+        and cached per (codec, mode); ``CompressedBackend(wire='physical')``
+        is the caller."""
+        k = (codec, bool(stochastic), bool(gather_codes),
+             bool(with_shipped))
+        if k not in self._wire_runners:
+            self._wire_runners[k] = make_gossip_shard_map(
+                self.mesh, self.t_server, self.leaf_specs,
+                axis_name=self.axis_name, block=self.block, codec=codec,
+                stochastic=stochastic, gather_codes=gather_codes,
+                with_shipped=with_shipped)
+        return self._wire_runners[k]
 
 
 # ---------------------------------------------------------------------------
@@ -777,26 +1230,70 @@ class CompressedBackend(ConsensusBackend):
     weight rides uncompressed (one f32 scalar per message, counted by the
     tracker).  Capability flags delegate to the inner backend, so the
     wrapper composes with einsum / blocked / collapsed / chebyshev /
-    shard_map and both mixing modes."""
+    shard_map and both mixing modes.
+
+    ``wire`` selects where compression happens:
+
+    * ``"simulated"`` (default, the PR-4 wire model) — quantize ONCE per
+      period in-graph (payload flooding: gossip is linear in the payloads,
+      so one compressed payload per server forwarded T_S hops realises the
+      period) and let the inner backend's collectives move floats; bytes
+      are a host-side ledger.
+    * ``"physical"`` — the codes ARE what crosses the interconnect: every
+      round quantizes before the collective and dequantizes after
+      (``gossip_scan_wire`` for the pjit paths,
+      ``ShardMapBackend.wire_runner`` for explicit collectives), so each
+      hop re-quantizes like a real store-and-forward relay and every
+      collective operand is int8 / packed int4.  Only the quantizers
+      define a wire byte format, and only the literal T_S-round schedules
+      (gossip / gossip_blocked / shard_map) have a per-round wire.  Error
+      feedback tracks the round-0 transmission of each server's OWN model
+      (``wire_roundtrip_tree``) — later hops' stochastic-rounding error is
+      zero-mean and untracked."""
 
     compressed = True
 
     def __init__(self, inner: ConsensusBackend,
                  compressor: "_compressors.Compressor", *,
-                 error_feedback: bool = True, flat_sharding=None):
+                 error_feedback: bool = True, flat_sharding=None,
+                 wire: str = "simulated",
+                 wire_block: Optional[int] = None):
         if getattr(inner, "compressed", False):
             raise ValueError("refusing to wrap an already-compressed "
                              "backend: double compression double-counts "
                              "wire bytes and compounds loss")
+        if wire not in ("simulated", "physical"):
+            raise ValueError(f"wire must be 'simulated' or 'physical', "
+                             f"got {wire!r}")
+        if wire == "physical":
+            if not isinstance(compressor, _compressors.StochasticQuantizer):
+                raise ValueError(
+                    "wire='physical' ships quantized codes through the "
+                    "collectives; only the int8/int4 quantizers define a "
+                    "wire byte format — top_k/random_k/identity run "
+                    "wire='simulated'")
+            if inner.name not in ("gossip", "gossip_blocked", "shard_map"):
+                raise ValueError(
+                    f"wire='physical' re-quantizes at every gossip hop, so "
+                    f"it needs the literal T_S-round W <- A W schedule; "
+                    f"backend {inner.name!r} has no per-round wire — use "
+                    f"'gossip', 'gossip_blocked' or the shard_map backend")
         self.inner = inner
         self.compressor = compressor
         self.error_feedback = error_feedback
+        self.wire = wire
+        # the block partitioning of the physical byte layout: follow the
+        # inner backend's streaming block when it has one, so the EF
+        # residual and the byte ledger see the exact on-wire layout
+        self.wire_block = (getattr(inner, "block", None) or wire_block
+                           or DEFAULT_GOSSIP_BLOCK)
         # NamedSharding of the flattened (M, d) leaf views under pjit —
         # same constraint (and same reason) as gossip_scan_blocked's
         self.flat_sharding = flat_sharding
         self.a_static = inner.a_static
         self.t_server = inner.t_server
-        self.name = f"compressed[{inner.name}+{compressor.name}]"
+        self.name = f"compressed[{inner.name}+{compressor.name}" + (
+            "+wire" if wire == "physical" else "") + "]"
         self.supports_traced = inner.supports_traced
         self.supports_directed = inner.supports_directed
         self.mesh_bound = inner.mesh_bound
@@ -812,11 +1309,51 @@ class CompressedBackend(ConsensusBackend):
             self.compressor, tree, key,
             flat_sharding=self.flat_sharding), residual
 
+    def _mix_physical(self, tree: Any, a: jax.Array, *, residual, key):
+        """Run one physical-wire consensus period on a (possibly
+        transposed) operator: EF correction + round-0 residual update, then
+        the per-round quantized collectives.  Returns ``(mixed tree, new
+        residual)``.  The residual is ``corrected - (round-0 decoded
+        transmission)``: for the shard_map backend that transmission comes
+        back from INSIDE the collective program (``with_shipped`` — the
+        only layout-exact source when leaf specs shard weight axes); the
+        pjit paths recompute it with ``wire_roundtrip_tree``, whose
+        global-row layout is exactly what ``gossip_scan_wire`` encodes."""
+        codec = self.compressor
+        ef = residual is not None and self.error_feedback
+        if ef:
+            tree = jax.tree.map(lambda x, e: x + e.astype(x.dtype),
+                                tree, residual)
+        if isinstance(self.inner, ShardMapBackend):
+            run = self.inner.wire_runner(codec, stochastic=key is not None,
+                                         with_shipped=ef)
+            if ef:
+                out, shipped = run(a, tree, key)
+                residual = jax.tree.map(lambda c, q: c - q, tree, shipped)
+            else:
+                out = run(a, tree, key)
+            return out, residual
+        if ef:
+            shipped = wire_roundtrip_tree(codec, tree, key,
+                                          block=self.wire_block)
+            residual = jax.tree.map(lambda c, q: c - q, tree, shipped)
+        return gossip_scan_wire(
+            a, tree, self.inner.t_server, codec, key,
+            block=self.wire_block,
+            block_major=isinstance(self.inner, BlockedGossipBackend)), \
+            residual
+
     # -- the EF-threading entry points the epoch step calls ------------------
     def mix_compressed(self, tree: Any, a_p: Optional[jax.Array] = None, *,
                        residual: Optional[Any] = None,
                        key: Optional[jax.Array] = None, lam2=None):
-        """``(inner.mix of the wire-simulated tree, new EF residual)``."""
+        """``(inner.mix of the wire-simulated tree, new EF residual)`` —
+        or, under ``wire='physical'``, the per-round quantized-collective
+        period."""
+        if self.wire == "physical":
+            del lam2
+            return self._mix_physical(tree, self._resolve(a_p),
+                                      residual=residual, key=key)
         msg, new_res = self._wire(tree, residual, key)
         return self.inner.mix(msg, a_p, lam2=lam2), new_res
 
@@ -824,6 +1361,19 @@ class CompressedBackend(ConsensusBackend):
                                 a_p: Optional[jax.Array] = None, *,
                                 residual: Optional[Any] = None,
                                 key: Optional[jax.Array] = None):
+        if self.wire == "physical":
+            if not self.supports_directed:
+                raise ValueError(
+                    f"consensus backend {self.name!r} has no "
+                    f"ratio-consensus analogue")
+            # the numerator rides the quantized wire (operator = the
+            # column-stochastic transpose); the tiny (M,) weight recursion
+            # stays exact, one f32 scalar per message on the ledger
+            p = jnp.swapaxes(self._resolve(a_p), 0, 1)
+            values, new_res = self._mix_physical(state.values, p,
+                                                 residual=residual, key=key)
+            weight = self.inner._mix_weight(state.weight, p)
+            return PushSumState(values, weight), new_res
         msg, new_res = self._wire(state.values, residual, key)
         return self.inner.mix_push_sum(PushSumState(msg, state.weight),
                                        a_p), new_res
@@ -843,18 +1393,21 @@ BACKEND_MODES = ("gossip", "gossip_blocked", "collapsed", "chebyshev",
 def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
                  chebyshev_rounds: Optional[int] = None,
                  gossip_flat_sharding=None,
-                 block: int = 4_194_304,
+                 block: int = DEFAULT_GOSSIP_BLOCK,
                  compression: str = "none",
-                 error_feedback: bool = False) -> ConsensusBackend:
+                 error_feedback: bool = False,
+                 wire: str = "simulated") -> ConsensusBackend:
     """Map a ``DFLConfig.consensus_mode`` string to a ``ConsensusBackend``.
 
     ``compression`` other than ``"none"`` (a ``comm.compressors.
     make_compressor`` spec, e.g. ``"int8"`` / ``"top_k:0.05"``) wraps the
     resolved backend in a ``CompressedBackend``, optionally with error
-    feedback.  ``shard_map`` is absent on purpose: it needs a mesh and
-    per-leaf PartitionSpecs, so the launcher builds it directly
-    (``launch.sharding.fl_consensus_backend``, which applies the same
-    compression wrap)."""
+    feedback; ``wire`` selects the simulated (once-per-period, host byte
+    ledger) vs physical (codes through the collectives, per-round) wire —
+    see ``CompressedBackend``.  ``shard_map`` is absent on purpose: it
+    needs a mesh and per-leaf PartitionSpecs, so the launcher builds it
+    directly (``launch.sharding.fl_consensus_backend``, which applies the
+    same compression wrap)."""
     if mode == "gossip":
         backend = GossipBackend(a_static, t_server)
     elif mode == "gossip_blocked":
@@ -873,5 +1426,6 @@ def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
         backend = CompressedBackend(
             backend, _compressors.make_compressor(compression),
             error_feedback=error_feedback,
-            flat_sharding=gossip_flat_sharding)
+            flat_sharding=gossip_flat_sharding,
+            wire=wire, wire_block=block)
     return backend

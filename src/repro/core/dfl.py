@@ -164,6 +164,18 @@ class DFLConfig:
     # bias of top-k/clipping at zero extra wire cost.  Ignored when
     # compression == "none".
     error_feedback: bool = False
+    # Where the compression above happens (consensus.CompressedBackend):
+    #   "simulated"  quantize ONCE per period in-graph (payload flooding)
+    #                and let the collectives move floats — bytes are a
+    #                host-side ledger (the PR-4 wire model).
+    #   "physical"   the codes ARE the wire: every gossip round quantizes
+    #                before the collective (int8 / packed-int4 all-gathers
+    #                and ppermutes) and dequantizes after, so BytesTracker
+    #                reports bytes the collectives actually move.  Needs a
+    #                quantizer compressor and a per-round gossip schedule
+    #                (gossip / gossip_blocked / shard_map).
+    # Ignored when compression == "none".
+    wire: str = "simulated"
 
 
 # ---------------------------------------------------------------------------
@@ -311,6 +323,19 @@ def wants_error_feedback(cfg: "DFLConfig") -> bool:
             and cfg.consensus_mode != "none")
 
 
+def active_wire(cfg: "DFLConfig") -> Tuple[str, int]:
+    """``(wire mode, wire block)`` of the active compression layer —
+    resolved from an injected ``consensus.CompressedBackend`` first, then
+    from ``cfg.wire``.  The block is the physical byte-layout partitioning
+    (``consensus.DEFAULT_GOSSIP_BLOCK`` on the string paths): the engine's
+    byte ledger needs it to count the padded per-block codes + scales the
+    collectives actually gather under ``wire='physical'``."""
+    backend = cfg.consensus_backend
+    if backend is not None and getattr(backend, "compressed", False):
+        return backend.wire, backend.wire_block
+    return cfg.wire, cns.DEFAULT_GOSSIP_BLOCK
+
+
 # ---------------------------------------------------------------------------
 # the epoch step builder
 # ---------------------------------------------------------------------------
@@ -352,7 +377,8 @@ def build_dfl_epoch_step(
             chebyshev_rounds=cfg.chebyshev_rounds,
             gossip_flat_sharding=cfg.gossip_flat_sharding,
             compression=cfg.compression,
-            error_feedback=cfg.error_feedback)
+            error_feedback=cfg.error_feedback,
+            wire=cfg.wire)
     if backend is not None:
         if cfg.mixing != "symmetric" and not backend.supports_directed:
             raise ValueError(

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.accounting import BytesTracker
+from repro.comm.accounting import (BytesTracker,
+                                   tree_physical_wire_bytes_per_server)
 from repro.comm.compressors import tree_wire_bytes_per_server
 from repro.core import dfl
 from repro.core import topology as tp
@@ -125,15 +126,27 @@ class DynamicFederationEngine:
 
     def _wire_row_bytes(self, state: dfl.DFLState) -> Tuple[int, int]:
         """(compressed bytes, elements) of one server's message at the
-        current federation size — compressor metadata over the server-tree
-        shapes, cached per M."""
+        current federation size, cached per M.  Simulated wire: compressor
+        metadata over the server-tree shapes (unpadded payload flooding).
+        Physical wire: the padded per-block codes + scales the collectives
+        actually gather each round (``comm.accounting.
+        tree_physical_wire_bytes_per_server``) — the ledger then reports
+        bytes the interconnect really moved, cross-checked against
+        compiled-HLO operand shapes in ``tests/test_wire.py``."""
         m = self.topo.num_servers
         if m not in self._row_bytes:
             server_abs = jax.eval_shape(
                 lambda t: jax.tree.map(lambda x: x[:, 0], t),
                 state.client_params)
+            wire, wire_block = dfl.active_wire(self.cfg)
+            if wire == "physical":
+                row = tree_physical_wire_bytes_per_server(
+                    self._compressor, server_abs, wire_block)
+            else:
+                row = tree_wire_bytes_per_server(self._compressor,
+                                                 server_abs)
             self._row_bytes[m] = (
-                tree_wire_bytes_per_server(self._compressor, server_abs),
+                row,
                 sum(int(np.prod(l.shape[1:]))
                     for l in jax.tree.leaves(server_abs)))
         return self._row_bytes[m]

@@ -21,6 +21,16 @@ stochastic rounding, dequantize) fused INTO the same single mixing pass —
 what a server computes when it applies the collapsed operator to the
 int8/int4 payloads it received, without ever materialising the quantized
 model in HBM.
+
+``quantized_gossip_round_2d`` is the PHYSICAL-WIRE round kernel: one
+delta-coded gossip round of ``wire="physical"`` after the all-gather,
+fused gather-dequant-mix-requant — input is the gathered delta code/scale
+buffers + the shared f32 reference, output the updated reference, the
+mixed iterates, and the re-encoded innovation codes/scales for the NEXT
+round's collective; the decoded deltas and pre-encode innovations live
+only in VMEM and never materialise in HBM.  Bit-identical to the jnp wire
+path (``decode_block`` → accumulate → mix → ``compress``) under shared
+dither, which stays the reference oracle (``tests/test_wire.py``).
 """
 from __future__ import annotations
 
@@ -138,3 +148,128 @@ def quantized_consensus_mix_2d(a_eff: jax.Array, w: jax.Array,
         interpret=interpret,
     )(a_eff, w, dither)
     return out[:, :d]
+
+
+# ---------------------------------------------------------------------------
+# fused gather-dequant-mix-requant: one PHYSICAL-WIRE gossip round
+# ---------------------------------------------------------------------------
+
+
+def _wire_round_kernel(a_ref, q_ref, s_ref, r_ref, u_ref, w_ref, or_ref,
+                       oq_ref, os_ref, *, block_d: int, chunk: int,
+                       qmax: float):
+    """One (M, block_d) tile of a delta-coded physical-wire gossip round:
+    dequantize the GATHERED delta codes, accumulate them into the shared
+    reference tile, mix the references, and re-encode the NEXT innovations
+    (mixed - new reference) with fresh absmax scales + dither — the
+    decoded-delta and mixed f32 tiles exist only in VMEM."""
+    a = a_ref[...].astype(jnp.float32)                 # (M, M) resident
+    q = q_ref[...].astype(jnp.float32)                 # (M, block_d) codes
+    s = s_ref[...]                                     # (M, nc) scales
+    ref = r_ref[...]                                   # (M, block_d) f32
+    u = u_ref[...].astype(jnp.float32)                 # dither in [0, 1)
+    m = q.shape[0]
+    nc = block_d // chunk
+    ref = ref + (q.reshape(m, nc, chunk) * s[..., None]).reshape(m, block_d)
+    # unrolled left-to-right mul-adds, NOT an MXU dot: the wire paths
+    # (consensus._wire_mix_rows / the shard_map round body) accumulate in
+    # exactly this order, and matching it is what makes the kernel
+    # bit-identical to them rather than ulp-close (M is tiny and the
+    # kernel memory-bound, so the MXU buys nothing here)
+    mixed = a[:, 0:1] * ref[0]
+    for j in range(1, m):
+        mixed = mixed + a[:, j:j + 1] * ref[j]
+    wc = (mixed - ref).reshape(m, nc, chunk)           # next innovations
+    absmax = jnp.max(jnp.abs(wc), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q2 = jnp.clip(jnp.floor(wc / scale + u.reshape(m, nc, chunk)),
+                  -qmax, qmax)
+    w_ref[...] = mixed
+    or_ref[...] = ref
+    oq_ref[...] = q2.reshape(m, block_d).astype(jnp.int8)
+    os_ref[...] = scale[..., 0]
+
+
+def quantized_gossip_round_2d(a: jax.Array, codes: jax.Array,
+                              scales: jax.Array, ref: jax.Array,
+                              dither: jax.Array, *, bits: int = 8,
+                              chunk: int = 256, block_d: int = 2048,
+                              interpret: bool = True):
+    """Fused gather-dequant-mix-requant: one delta-coded ``wire="physical"``
+    gossip round after the all-gather, in one HBM pass — the single-chip
+    half of ``core.consensus.make_gossip_shard_map``'s codec mode.
+
+    Implements the innovation recursion of
+    ``core.consensus.gossip_scan_wire``:
+
+        R'      = R + D(codes, scales)        (accumulate gathered deltas)
+        W'      = A · R'                      (mix the references)
+        delta'  = W' - R'                     (next innovations)
+        codes', scales' = C(delta'; dither)   (next round's wire)
+
+    ``codes``: (M, D) int8 delta codes as delivered by the all-gather
+    (int4 codes UNPACKED into int8 — ``comm.compressors.pack_int4`` is a
+    free view change at the collective boundary); ``scales``: (M, D/chunk)
+    per-chunk f32 scales; ``ref``: the (M, D) f32 shared reference state;
+    ``dither``: (M, D) uniform [0, 1) rounding noise for the re-encode,
+    generated outside for the same reason as ``quantized_consensus_mix_2d``.
+    Returns ``(mixed, ref', codes', scales')``.  The decoded deltas and
+    the pre-encode innovations never touch HBM: unfused, each round writes
+    + re-reads two (M, D) f32 intermediates — 4 extra HBM passes this
+    kernel keeps in VMEM (the reference itself is genuine algorithm state
+    and lives in HBM either way).
+
+    Bit-identical to the jnp oracle (``decode_block`` -> accumulate ->
+    ``consensus._wire_mix_rows`` -> ``compress(dither=u)``) when ``chunk``
+    divides ``block_d`` and ``D`` (chunk boundaries then align across
+    tiles) and both run under jit — the wire paths always do; an EAGER
+    oracle differs by one FMA-contraction ulp in the re-encode scales.
+    Asserted in ``tests/test_wire.py``."""
+    m, d = codes.shape
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    if d % chunk:
+        raise ValueError(f"chunk={chunk} must divide D={d} (pad the wire "
+                         f"buffer to the block grid first, as the gossip "
+                         f"paths do)")
+    block_d = max(chunk, min(block_d, d))
+    if block_d % chunk:
+        raise ValueError(f"chunk={chunk} must divide block_d={block_d}")
+    nb = pl.cdiv(d, block_d)
+    pad = nb * block_d - d
+    if pad:     # ragged tile grid: zero codes / unit scales are inert
+        codes = jnp.pad(codes, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // chunk)),
+                         constant_values=1.0)
+        ref = jnp.pad(ref, ((0, 0), (0, pad)))
+        dither = jnp.pad(dither, ((0, 0), (0, pad)))
+    qmax = float(2 ** (bits - 1) - 1)
+    nc_blk = block_d // chunk
+    kernel = functools.partial(_wire_round_kernel, block_d=block_d,
+                               chunk=chunk, qmax=qmax)
+    out_w, out_r, out_q, out_s = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),        # A resident
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, nc_blk), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, nc_blk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.float32),
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.float32),
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.int8),
+            jax.ShapeDtypeStruct((m, nb * nc_blk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, codes, scales, ref, dither)
+    return (out_w[:, :d], out_r[:, :d], out_q[:, :d],
+            out_s[:, :d // chunk])

@@ -76,6 +76,13 @@ class DeploymentPlan:
     # tolerance.  Small/mid archs keep the exact paper protocol.
     compression: str = "none"
     error_feedback: bool = False
+    # Where the compression happens (DFLConfig.wire).  The 140-400B archs
+    # run wire="physical": their consensus backend is gossip_shardmap, so
+    # the int8 codes + per-chunk scales are the literal all-gather
+    # operands — the 3.9x BytesTracker ratio becomes actual ICI traffic
+    # instead of a host-side ledger over bf16 collectives.  "simulated"
+    # everywhere the wire is exact anyway (compression="none").
+    wire: str = "simulated"
 
     def serve_dtype(self):
         return jnp.bfloat16          # deployment dtype for all archs
@@ -118,19 +125,22 @@ PLANS: Dict[str, DeploymentPlan] = {
                                     param_dtype="bfloat16",
                                     grad_microbatches=16, serve_fsdp=True,
                                     serve_seq_parallel=False,
-                                    compression="int8", error_feedback=True),
+                                    compression="int8", error_feedback=True,
+                                    wire="physical"),
     "deepseek_v2_236b": DeploymentPlan("deepseek_v2_236b", _BIG_SP, _BIG_MP,
                                        param_dtype="bfloat16",
                                        grad_microbatches=16, serve_fsdp=True,
                                        compression="int8",
-                                       error_feedback=True),
+                                       error_feedback=True,
+                                       wire="physical"),
     "jamba_1_5_large_398b": DeploymentPlan("jamba_1_5_large_398b", _BIG_SP,
                                            _BIG_MP, param_dtype="bfloat16",
                                            grad_microbatches=16, serve_fsdp=True,
                                            seq_parallel=False,
                                            serve_seq_parallel=False,
                                            compression="int8",
-                                           error_feedback=True),
+                                           error_feedback=True,
+                                           wire="physical"),
 }
 
 

@@ -190,6 +190,7 @@ def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
                          block: Optional[int] = None,
                          compression: str = "none",
                          error_feedback: bool = False,
+                         wire: str = "simulated",
                          compression_flat_sharding=None) -> Any:
     """Mesh-aware consensus-backend construction (the production path).
 
@@ -201,9 +202,12 @@ def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
     result in a ``consensus.CompressedBackend`` — the same wrap
     ``consensus.make_backend`` applies to the string-selected paths, done
     here because the mesh-aware backend never goes through the registry.
-    Inject the result via ``DFLConfig.consensus_backend``; selection
-    between this, 'gossip_blocked' and plain 'gossip' is per deployment
-    plan (``launch.plans.DeploymentPlan.consensus_backend``)."""
+    ``wire="physical"`` makes the wrapped shard_map program gather the
+    int8 / packed-int4 codes themselves (``ShardMapBackend.wire_runner``)
+    instead of simulating the quantization in-graph.  Inject the result via
+    ``DFLConfig.consensus_backend``; selection between this,
+    'gossip_blocked' and plain 'gossip' is per deployment plan
+    (``launch.plans.DeploymentPlan.consensus_backend``)."""
     import numpy as np
 
     from repro.core import consensus as cns
@@ -218,7 +222,8 @@ def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
         backend = cns.CompressedBackend(
             backend, make_compressor(compression),
             error_feedback=error_feedback,
-            flat_sharding=compression_flat_sharding)
+            flat_sharding=compression_flat_sharding,
+            wire=wire)
     return backend
 
 

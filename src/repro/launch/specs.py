@@ -169,7 +169,8 @@ def build_train_lowering(arch_id: str, shape: InputShape, *,
                         gossip_flat_sharding=NamedSharding(
                             mesh, P("server", flat_axes)),
                         compression=plan.compression,
-                        error_feedback=plan.error_feedback)
+                        error_feedback=plan.error_feedback,
+                        wire=plan.wire)
     tp_axis = None if plan.batch_over_model else "model"
     if consensus_mode == "gossip_shardmap":
         # explicit blocked shard_map gossip (same math as "gossip"),
@@ -185,6 +186,7 @@ def build_train_lowering(arch_id: str, shape: InputShape, *,
             topo, mesh, server_abs, tp_axis=tp_axis,
             compression=plan.compression,
             error_feedback=plan.error_feedback,
+            wire=plan.wire,
             compression_flat_sharding=NamedSharding(
                 mesh, P("server", flat_axes)))
         dfl_cfg = dataclasses.replace(dfl_cfg, consensus_mode="gossip",

@@ -36,6 +36,7 @@ def resolve_consensus_backend(backend: str, consensus_mode: str,
                               topo: FLTopology, params, *,
                               compression: str = "none",
                               error_feedback: bool = False,
+                              wire: str = "simulated",
                               ) -> Tuple[str, Optional[object]]:
     """Map the ``--consensus-backend`` CLI flag to the DFLConfig pair
     ``(consensus_mode, consensus_backend)``.
@@ -46,10 +47,10 @@ def resolve_consensus_backend(backend: str, consensus_mode: str,
     ``consensus.ShardMapBackend`` over a ('server',)-axis mesh — that
     needs at least M devices (on CPU set
     ``XLA_FLAGS=--xla_force_host_platform_device_count=M``).
-    ``compression``/``error_feedback`` only matter for the mesh-aware
-    shard_map case (the wrap happens at construction there); the string
-    paths are wrapped later by ``dfl.build_dfl_epoch_step`` from
-    ``DFLConfig.compression``."""
+    ``compression``/``error_feedback``/``wire`` only matter for the
+    mesh-aware shard_map case (the wrap happens at construction there); the
+    string paths are wrapped later by ``dfl.build_dfl_epoch_step`` from
+    ``DFLConfig.compression`` / ``DFLConfig.wire``."""
     if backend not in CONSENSUS_BACKENDS:
         raise ValueError(f"unknown consensus backend {backend!r}; choose "
                          f"one of {CONSENSUS_BACKENDS}")
@@ -81,7 +82,8 @@ def resolve_consensus_backend(backend: str, consensus_mode: str,
     return "gossip", shd.fl_consensus_backend(topo, mesh, server_abs,
                                               tp_axis=None,
                                               compression=compression,
-                                              error_feedback=error_feedback)
+                                              error_feedback=error_feedback,
+                                              wire=wire)
 
 
 def _setup_lm(arch_id, smoke, servers, clients, t_client, t_server, graph,
@@ -115,6 +117,7 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
           consensus_mode: str = "gossip", mixing: str = "symmetric",
           consensus_backend: str = "auto",
           compression: str = "none", error_feedback: bool = False,
+          wire: str = "simulated",
           ckpt_dir: Optional[str] = None, seed: int = 0,
           log_every: int = 1, attn_impl: str = "reference") -> dict:
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
@@ -123,11 +126,11 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
     params = tf.init_params(jax.random.key(seed), cfg)
     consensus_mode, backend = resolve_consensus_backend(
         consensus_backend, consensus_mode, topo, params,
-        compression=compression, error_feedback=error_feedback)
+        compression=compression, error_feedback=error_feedback, wire=wire)
     dfl_cfg = DFLConfig(topology=topo, consensus_mode=consensus_mode,
                         mixing=mixing, consensus_backend=backend,
                         compression=compression,
-                        error_feedback=error_feedback)
+                        error_feedback=error_feedback, wire=wire)
     step = jax.jit(build_dfl_epoch_step(dfl_cfg, loss_fn, optimizer),
                    donate_argnums=(0,))
 
@@ -145,15 +148,15 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
         history["loss"].append(loss)
         history["disagreement"].append(dis)
         history["drift"].append(drift)
-        wire = ""
+        wire_log = ""
         if tracker is not None:
             mb = tracker.update() / 1e6
             history.setdefault("wire_mb", []).append(mb)
-            wire = f"wire={mb:.2f}MB(x{tracker.tracker.ratio():.2f})  "
+            wire_log = f"wire={mb:.2f}MB(x{tracker.tracker.ratio():.2f})  "
         if epoch % log_every == 0:
             print(f"epoch {epoch:4d}  loss={loss:.4f}  "
                   f"server_disagreement={dis:.3e}  client_drift={drift:.3e}  "
-                  f"{wire}({time.time() - t0:.1f}s)")
+                  f"{wire_log}({time.time() - t0:.1f}s)")
         if ckpt is not None:
             ckpt.save(epoch, state.client_params,
                       meta={"arch": cfg.name, "epoch": epoch})
@@ -166,15 +169,24 @@ class _StaticWireLedger:
     own per-M version)."""
 
     def __init__(self, dfl_cfg, params, compressor):
-        from repro.comm.accounting import BytesTracker
+        from repro.comm.accounting import (
+            BytesTracker, tree_physical_wire_bytes_per_server)
         from repro.comm.compressors import (tree_message_elems,
                                             tree_wire_bytes_per_server)
+        from repro.core.dfl import active_wire
         topo = dfl_cfg.topology
         server_abs = jax.eval_shape(
             lambda p: jax.tree.map(
                 lambda x: jnp.zeros((topo.num_servers,) + x.shape, x.dtype),
                 p), params)
-        self._row = tree_wire_bytes_per_server(compressor, server_abs)
+        wire, wire_block = active_wire(dfl_cfg)
+        if wire == "physical":
+            # the ledger counts the padded per-block codes + scales the
+            # collectives actually gather, not the unpadded metadata form
+            self._row = tree_physical_wire_bytes_per_server(
+                compressor, server_abs, wire_block)
+        else:
+            self._row = tree_wire_bytes_per_server(compressor, server_abs)
         self._elems = tree_message_elems(server_abs)
         self._a = (topo.mixing_matrix() if topo.num_servers > 1
                    else np.ones((1, 1)))
@@ -202,6 +214,7 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                   consensus_mode: str = "gossip", mixing: str = "symmetric",
                   consensus_backend: str = "auto",
                   compression: str = "none", error_feedback: bool = False,
+                  wire: str = "simulated",
                   participation_rate: float = 1.0,
                   participation_kind: str = "bernoulli",
                   edge_drop_prob: float = 0.0,
@@ -223,7 +236,7 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
     params = tf.init_params(jax.random.key(seed), cfg)
     consensus_mode, backend = resolve_consensus_backend(
         consensus_backend, consensus_mode, topo, params,
-        compression=compression, error_feedback=error_feedback)
+        compression=compression, error_feedback=error_feedback, wire=wire)
 
     if participation_rate >= 1.0:
         part = ParticipationSchedule()                     # full
@@ -257,7 +270,7 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                          consensus_mode=consensus_mode, mixing=mixing,
                          consensus_backend=backend,
                          compression=compression,
-                         error_feedback=error_feedback,
+                         error_feedback=error_feedback, wire=wire,
                          participation=part, topology_schedule=tsched,
                          faults=FaultSchedule.parse(faults))
 
@@ -332,6 +345,15 @@ def build_parser() -> argparse.ArgumentParser:
                    help="carry each server's compression residual and fold "
                         "it into the next period's message (removes the "
                         "bias of top-k/clipping at zero extra wire cost)")
+    p.add_argument("--wire", default="simulated",
+                   choices=("simulated", "physical"),
+                   help="where --compression happens: 'simulated' "
+                        "quantizes once per period in-graph (host byte "
+                        "ledger, the collectives still move floats); "
+                        "'physical' ships int8/packed-int4 codes through "
+                        "the collectives themselves, re-quantizing every "
+                        "gossip hop (quantizers + gossip/gossip_blocked/"
+                        "shard_map backends only)")
     p.add_argument("--ckpt-dir", default=None)
     dyn = p.add_argument_group(
         "dynamic federation (any of these switches to the scenario engine)")
@@ -367,7 +389,8 @@ def main() -> None:
               graph=args.graph, consensus_mode=args.consensus_mode,
               consensus_backend=args.consensus_backend,
               mixing=args.mixing, compression=args.compression,
-              error_feedback=args.error_feedback, ckpt_dir=args.ckpt_dir)
+              error_feedback=args.error_feedback, wire=args.wire,
+              ckpt_dir=args.ckpt_dir)
     dynamic = (args.participation_rate < 1.0 or args.edge_drop_prob > 0.0
                or args.straggler_weaken > 0.0
                or args.asymmetric_drop_prob > 0.0 or bool(args.faults))
