@@ -25,12 +25,13 @@ theory quantities the paper derives and our beyond-paper claims):
                         push-sum (unbiased) gossip under directed /
                         asymmetrically-degraded links
   consensus_backends    einsum vs blocked vs shard_map vs shard_map_wire
-                        (physical int8 wire) consensus execution on the
-                        DYNAMIC engine (traced per-epoch A_p): peak-RSS +
-                        epoch throughput per backend, one clean subprocess
-                        each, cross-backend agreement, and the physical-
-                        wire HLO cross-check (all-gather operands are s8
-                        codes + f32 scales matching the byte ledger)
+                        (physical BUCKETED int8 wire; + an int4 variant)
+                        consensus execution on the DYNAMIC engine (traced
+                        per-epoch A_p): peak-RSS + epoch throughput per
+                        backend, one clean subprocess each, cross-backend
+                        agreement, and the physical-wire HLO cross-check
+                        (per round: ONE all-gather of s8 codes + one of
+                        f32 scales matching the bucketed byte ledger)
   compressed_consensus  the repro.comm layer: compressor x backend x wire
                         sweep recording bytes-on-wire (BytesTracker) vs
                         consensus error vs wall-clock; checks int8+EF
@@ -413,8 +414,11 @@ elif backend.startswith("shard_map"):
     from repro.launch import sharding as shd
     mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(m), ("server",))
     server_abs = jax.eval_shape(lambda: jnp.zeros((m, d), jnp.float32))
-    ckw = ({"compression": "int8", "error_feedback": True,
-            "wire": "physical"} if backend == "shard_map_wire" else {})
+    ckw = {}
+    if backend.startswith("shard_map_wire"):
+        ckw = {"compression": ("int4" if backend.endswith("int4")
+                               else "int8"),
+               "error_feedback": True, "wire": "physical"}
     kw["consensus_backend"] = shd.fl_consensus_backend(
         topo, mesh, server_abs, tp_axis=None, **ckw)
 engine = make_engine(topo, loss_fn, sgd(1e-3),
@@ -436,13 +440,14 @@ out = {
 servers = np.asarray(state.client_params[:, 0], np.float64)
 out["checksum"] = [float(servers.sum()), float(np.abs(servers).max())]
 out["fingerprint"] = servers[:, ::100_000].tolist()
-if backend == "shard_map_wire":
+if backend.startswith("shard_map_wire"):
     # physical-wire cross-check: the compiled all-gather operands must be
-    # the codec's byte layout (s8 codes + f32 scales), and the per-round
-    # bytes one server ships must equal what the BytesTracker ledger
-    # charges per link message
+    # the codec's BUCKETED byte layout (one s8 code buffer + one f32
+    # scale buffer per round for the whole tree), and the per-round bytes
+    # one server ships must equal what the BytesTracker ledger charges
+    # per link message
     from repro.comm.accounting import (hlo_collective_bytes,
-                                       physical_leaf_bytes)
+                                       tree_bucketed_wire_bytes_per_server)
     cb = kw["consensus_backend"]
     runner = cb.inner.wire_runner(cb.compressor, stochastic=True)
     tree = {"w": jnp.zeros((m, d), jnp.float32)}
@@ -451,43 +456,60 @@ if backend == "shard_map_wire":
     ).compile().as_text()
     cols = hlo_collective_bytes(hlo)
     gathers = [c for c in cols if c["op"] == "all-gather"]
-    shipped = sum(c["bytes"] // m for c in gathers)      # one round, 1 block
-    expect = physical_leaf_bytes(cb.compressor, (m, d), cb.inner.block)
+    shipped = sum(c["bytes"] // m for c in gathers)      # one round's pair
+    expect = tree_bucketed_wire_bytes_per_server(cb.compressor, tree,
+                                                 cb.inner.block)
+    out["wire_hlo_gather_sites"] = len(gathers)
     out["wire_hlo_dtypes"] = sorted({c["dtype"] for c in gathers})
     out["wire_hlo_round_bytes"] = shipped
     out["wire_hlo_matches_ledger"] = bool(shipped == expect)
     out["wire_mb"] = wire_mb
-print(json.dumps(out))
+# sentinel-prefixed result line: the parent parses by prefix, so stray
+# stdout from jax/engine logging can never masquerade as the datapoint
+print("BENCH_JSON " + json.dumps(out))
 '''
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
     results = {}
     epochs, d = S(5, 3), S(1_500_000, 100_000)
+    sentinel = "BENCH_JSON "
     for backend in ("gossip", "gossip_blocked", "shard_map",
-                    "shard_map_wire"):
+                    "shard_map_wire", "shard_map_wire_int4"):
         r = subprocess.run([sys.executable, "-c", child, backend,
                             str(epochs), str(d)],
                            capture_output=True, text=True, timeout=900,
                            env={**os.environ, "PYTHONPATH": src})
-        if r.returncode != 0:
+        # parse by sentinel prefix, never "the last stdout line": engine /
+        # jax logging can trail the datapoint, and a dead subprocess then
+        # records an error row instead of crashing the whole bench (the
+        # JSON writer merges key-level, so the other backends' fresh
+        # numbers still land and the dead one keeps its last datapoint)
+        line = next((ln for ln in reversed(r.stdout.splitlines())
+                     if ln.startswith(sentinel)), None)
+        if r.returncode != 0 or line is None:
+            err = (r.stderr.strip().splitlines()[-1][:120]
+                   if r.stderr.strip() else "no BENCH_JSON line")
             record("consensus_backends", f"{backend}_error",
-                   r.stderr.strip().splitlines()[-1][:120] if r.stderr
-                   else "failed")
+                   err.replace(",", ";"))
             continue
-        results[backend] = json.loads(r.stdout.strip().splitlines()[-1])
+        results[backend] = json.loads(line[len(sentinel):])
         record("consensus_backends", f"{backend}_peak_rss_mb",
                round(results[backend]["peak_rss_mb"], 1))
         record("consensus_backends", f"{backend}_epochs_per_s",
                round(results[backend]["epochs_per_s"], 3))
-    if "shard_map_wire" in results:
-        sw = results["shard_map_wire"]
-        record("consensus_backends", "shard_map_wire_hlo_dtypes",
+    for backend in ("shard_map_wire", "shard_map_wire_int4"):
+        if backend not in results:
+            continue
+        sw = results[backend]
+        record("consensus_backends", f"{backend}_hlo_gather_sites",
+               sw["wire_hlo_gather_sites"])
+        record("consensus_backends", f"{backend}_hlo_dtypes",
                "+".join(sw["wire_hlo_dtypes"]))
-        record("consensus_backends", "shard_map_wire_hlo_round_bytes",
+        record("consensus_backends", f"{backend}_hlo_round_bytes",
                sw["wire_hlo_round_bytes"])
-        record("consensus_backends", "shard_map_wire_bytes_match_hlo",
+        record("consensus_backends", f"{backend}_bytes_match_hlo",
                sw["wire_hlo_matches_ledger"])
-        record("consensus_backends", "shard_map_wire_total_wire_mb",
+        record("consensus_backends", f"{backend}_total_wire_mb",
                round(sw["wire_mb"], 3))
     if "gossip" in results:
         ref_fp = np.asarray(results["gossip"]["fingerprint"])
@@ -694,14 +716,20 @@ def write_bench_consensus_json() -> None:
                 else "BENCH_consensus.json")
     path = os.path.join(OUT, out_name)
     if os.path.exists(path):
-        # a partial (--only) run refreshes ITS benches' sections and keeps
-        # the other tracked bench's recorded datapoint — same merge rule
-        # as the CSV; the trajectory file must survive partial re-runs
+        # KEY-level merge with the recorded datapoint: a partial (--only)
+        # run refreshes its benches' metrics, and a bench whose subprocess
+        # died mid-run (only an _error row landed) keeps the surviving
+        # backends' fresh numbers WITHOUT dropping the dead backend's last
+        # good metrics — the trajectory file must never lose a datapoint
+        # to one crashed child
         try:
             with open(path) as f:
                 old = json.load(f).get("benchmarks", {})
             for name in tracked:
-                per_bench.setdefault(name, old.get(name, {}))
+                merged = dict(old.get(name, {}))
+                merged.update(per_bench.get(name, {}))
+                if merged:
+                    per_bench[name] = merged
             per_bench = {k: v for k, v in per_bench.items() if v}
         except (ValueError, OSError):
             pass

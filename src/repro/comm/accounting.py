@@ -20,15 +20,24 @@ family; tests and the ``compressed_consensus`` benchmark cross-check it
 against the metadata-derived ``Compressor.wire_bytes_per_row``.
 
 Physical wire.  Under ``wire="physical"`` the collectives themselves move
-the quantized codes (``core.consensus.make_gossip_shard_map`` with a
-codec): each round gathers the PADDED per-block byte layout — ``nb`` blocks
-of ``block`` codes (int4 packed two per byte) plus one f32 scale per chunk
-of every block.  ``physical_leaf_bytes`` / ``tree_physical_wire_bytes_per_
-server`` count exactly that layout, so the ``BytesTracker`` ledger reports
-the bytes the collectives actually ship (cross-checked against compiled-HLO
-operand shapes by ``tests/test_wire.py`` via ``hlo_collective_bytes``).
-The padded tail costs at most one block minus one element over the
-metadata count of the simulated wire.
+the quantized codes: since PR 6 the whole pytree is flattened into ONE
+padded code buffer + one scale buffer per server (``comm.compressors.
+bucket_block`` layout), so each gossip round is exactly one all-gather of
+s8 codes and one of f32 scales regardless of leaf count.
+``tree_bucketed_wire_bytes_per_server`` counts exactly that layout, so the
+``BytesTracker`` ledger reports the bytes the collectives actually ship
+(cross-checked against compiled-HLO operand shapes by
+``tests/test_wire.py`` via ``hlo_collective_bytes``).  The padded tail
+costs at most ``lcm(chunk, 2) - 1`` elements over the metadata count of
+the simulated wire.  ``physical_leaf_bytes`` /
+``tree_physical_wire_bytes_per_server`` keep the PR-5 per-leaf blocked
+layout for the legacy in-graph reference (``core.consensus.
+gossip_scan_wire``).
+
+One physical-wire accounting subtlety: push-sum's ``(M,)`` weight never
+crosses a collective there — it mixes via the in-graph replicated matvec
+(``core.consensus.ConsensusBackend._mix_weight``) — so ``BytesTracker``
+adds its +4 B/message only on the simulated wire (``wire=`` ctor arg).
 """
 from __future__ import annotations
 
@@ -105,12 +114,38 @@ def physical_leaf_bytes(quantizer: cp.StochasticQuantizer, shape,
 
 def tree_physical_wire_bytes_per_server(quantizer: cp.StochasticQuantizer,
                                         tree, block: int) -> int:
-    """Physical-wire bytes of one server's full message per round: the
-    per-leaf padded-block layout summed over leaves (each leaf is flattened
-    and blocked independently, mirroring ``make_gossip_shard_map``)."""
+    """Physical-wire bytes of one server's full message per round in the
+    PR-5 per-leaf layout: each leaf flattened and blocked independently
+    (mirroring ``core.consensus.gossip_scan_wire``, the legacy in-graph
+    reference).  The shipping paths use the bucketed layout —
+    ``tree_bucketed_wire_bytes_per_server``."""
     import jax
     return sum(physical_leaf_bytes(quantizer, l.shape, block)
                for l in jax.tree.leaves(tree))
+
+
+def tree_bucketed_wire_bytes_per_server(quantizer: cp.StochasticQuantizer,
+                                        tree, block: int) -> int:
+    """On-wire bytes of one server's full message per round in the BUCKETED
+    physical layout (``comm.compressors.bucket_block``): the whole pytree
+    flattened into one zero-padded code buffer plus one scale buffer, so
+    each round's collective cost is ``nb`` blocks of ``blk`` codes (int4
+    packed two per byte) + one f32 scale per chunk — what ONE all-gather
+    of codes and one of scales actually move.  Successor of
+    ``tree_physical_wire_bytes_per_server``; same unsharded-rows assumption
+    as ``physical_leaf_bytes``.  Cross-checked against compiled-HLO operand
+    shapes (``hlo_collective_bytes``) in ``tests/test_wire.py`` and the
+    ``consensus_backends`` benchmark."""
+    if not isinstance(quantizer, cp.StochasticQuantizer):
+        raise ValueError(
+            f"the physical wire has a byte layout only for the int8/int4 "
+            f"quantizers, got {quantizer!r}")
+    import jax
+    d_tot = sum(int(np.prod(l.shape[1:]))
+                for l in jax.tree.leaves(tree))
+    blk, nb = cp.bucket_block(d_tot, block, quantizer.chunk)
+    code_bytes, scale_bytes = quantizer.wire_block_bytes(blk)
+    return nb * (code_bytes + scale_bytes)
 
 
 # one compiled-HLO collective, sync or async-start form, e.g.
@@ -166,9 +201,11 @@ class BytesTracker:
     compressed bytes for identical traffic."""
 
     def __init__(self, compressor: cp.Compressor, *, push_sum: bool = False,
+                 wire: str = "simulated",
                  baseline_bytes_per_elem: int = 4):
         self.compressor = compressor
         self.push_sum = push_sum
+        self.wire = wire
         self.baseline_bytes_per_elem = baseline_bytes_per_elem
         self.total_bytes = 0
         self.baseline_bytes = 0
@@ -176,8 +213,16 @@ class BytesTracker:
         self.history: List[Dict[str, float]] = []
 
     def _msg_bytes(self, row_bytes: int) -> int:
-        # push-sum ships the (num, w) pair: + one f32 weight scalar per msg
-        return row_bytes + (4 if self.push_sum else 0)
+        # push-sum ships the (num, w) pair: + one f32 weight scalar per
+        # msg — on the SIMULATED wire only.  Under wire="physical" the
+        # (M,) weight recursion is an in-graph replicated matvec
+        # (``core.consensus.ConsensusBackend._mix_weight``): no collective
+        # ever carries it, the padded code+scale layout is the whole
+        # message, and the HLO byte audit would catch a phantom +4
+        # (asserted in ``tests/test_wire.py``).
+        if self.push_sum and self.wire != "physical":
+            return row_bytes + 4
+        return row_bytes
 
     def epoch_link_bytes(self, a_np: np.ndarray, t_server: int,
                          row_bytes: int) -> np.ndarray:

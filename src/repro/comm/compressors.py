@@ -18,7 +18,7 @@ Compressors:
 
 * ``IdentityCompressor``            exact passthrough (accounting baseline).
 * ``StochasticQuantizer(bits, chunk)``  int8/int4 with per-chunk absmax
-      scales and UNBIASED stochastic rounding ``q = floor(x/s + u)``,
+      scales and UNBIASED stochastic rounding ``q = floor(x * (1/s) + u)``,
       ``u ~ U[0, 1)``: ``E[decompress] = x``, so quantization noise is
       zero-mean and error feedback only has to absorb its variance.  With
       no rng key the rounding degrades to deterministic round-to-nearest.
@@ -88,24 +88,59 @@ def unpack_int4(packed: jax.Array, length: int) -> jax.Array:
     return flat[..., :length]
 
 
+def bucket_block(d_tot: int, block: int, chunk: int) -> Tuple[int, int]:
+    """``(blk, nb)`` of the BUCKETED physical-wire layout: the whole server
+    pytree flattened to ``d_tot`` elements and cut into ``nb`` equal blocks
+    of ``blk`` elements (zero-padded tail).  ``blk`` is ``min(block,
+    d_tot)`` rounded UP to a multiple of ``lcm(chunk, 2)``, so (a) chunk
+    boundaries never cross a block — every block encodes independently —
+    and (b) a block's packed-int4 codes are a whole number of bytes, making
+    per-block views of the packed code buffer free slices.  Shared by the
+    bucketed gossip programs (``core.consensus.gossip_scan_wire_bucketed``
+    / ``make_gossip_shard_map``'s codec mode) and the byte ledger
+    (``comm.accounting.tree_bucketed_wire_bytes_per_server``), which must
+    agree on the padded layout for the HLO byte audit to close."""
+    d_tot = max(int(d_tot), 1)
+    unit = chunk if chunk % 2 == 0 else 2 * chunk
+    blk = -(-min(block, d_tot) // unit) * unit
+    return blk, -(-d_tot // blk)
+
+
 def wire_dither(key: jax.Array, shape: Tuple[int, ...], *, leaf, rnd,
                 server, block) -> jax.Array:
     """THE stochastic-rounding dither of the wire paths: uniform [0, 1)
     noise keyed by ``(leaf index, gossip round, server row, block index)``.
 
     Every wire execution — the in-graph simulation
-    (``core.consensus.gossip_scan_wire``), the physical shard_map /
-    ring collectives, and the error-feedback residual update — derives its
-    dither from this one convention, which is what makes them bit-identical
-    under a shared key: the same (leaf, round, server, block) cell always
-    rounds with the same noise, no matter which execution produced it.
-    All four coordinates may be traced (the shard_map paths fold in
-    ``lax.axis_index`` and loop counters)."""
+    (``core.consensus.gossip_scan_wire_bucketed`` and the legacy per-leaf
+    form), the physical shard_map / ring collectives, and the
+    error-feedback residual update — derives its dither from this one
+    convention, which is what makes them bit-identical under a shared
+    key: the same (leaf, round, server, block) cell always rounds with
+    the same noise, no matter which execution produced it.  All four
+    coordinates may be traced (the shard_map paths fold in
+    ``lax.axis_index`` and loop counters).
+
+    The per-element noise is a keyed counter hash (``_mix32`` murmur
+    avalanche over the element counters, same idiom as
+    ``keyed_index_sample``), NOT a threefry ``jax.random.uniform``: the
+    dither is regenerated every gossip round on every device over the
+    whole bucket, and at benchmark scale the ~20-round threefry was the
+    single largest per-round compute on the wire path (~35% of the
+    consensus period) — the 24-bit-resolution hash has the avalanche
+    quality stochastic rounding needs at a fraction of the ALU work.
+    The four scalar ``fold_in``s stay threefry: they are O(1) and define
+    the coordinate keying."""
     k = jax.random.fold_in(key, leaf)
     k = jax.random.fold_in(k, rnd)
     k = jax.random.fold_in(k, server)
     k = jax.random.fold_in(k, block)
-    return jax.random.uniform(k, shape)
+    kd = jax.random.key_data(k).astype(jnp.uint32)
+    n = int(np.prod(shape, dtype=np.int64))
+    ctr = jax.lax.iota(jnp.uint32, n)
+    x = _mix32((ctr ^ kd[-1]) * jnp.uint32(0x9E3779B9) ^ kd[0])
+    return ((x >> jnp.uint32(8)).astype(jnp.float32)
+            * jnp.float32(2.0 ** -24)).reshape(shape)
 
 
 # ---------------------------------------------------------------------------
@@ -266,9 +301,13 @@ class StochasticQuantizer(Compressor):
 
     The LAST axis of the input is split into ``chunk``-element chunks (the
     last may be partial); chunk c gets scale ``s_c = absmax_c / qmax``
-    (``qmax = 2^{bits-1}-1``) and codes ``q = clip(floor(x/s_c + u), -qmax,
-    qmax)`` with dither ``u ~ U[0, 1)`` — unbiased stochastic rounding
-    (round-to-nearest when no key is given).  On the wire: UNPADDED codes
+    (``qmax = 2^{bits-1}-1``) and codes ``q = clip(floor(x * (1/s_c) + u),
+    -qmax, qmax)`` with dither ``u ~ U[0, 1)`` — unbiased stochastic
+    rounding (round-to-nearest when no key is given).  The grid step is
+    applied as a multiply by the per-chunk reciprocal ``1/s_c`` (division
+    was the hottest per-element op of the physical-wire round); ``s_c``
+    itself stays the on-wire scale, and every encoder — in-graph,
+    shard_map, Pallas — derives the same reciprocal bitwise.  On the wire: UNPADDED codes
     + one f32 scale per chunk; int4 codes are carried in int8 arrays in
     memory but counted at 4 bits.
 
@@ -314,7 +353,15 @@ class StochasticQuantizer(Compressor):
             x32 = jnp.pad(x32, [(0, 0)] * (x32.ndim - 1) + [(0, pad)])
         chunked = x32.reshape(x32.shape[:-1] + (nc, self.chunk))
         absmax = jnp.max(jnp.abs(chunked), axis=-1)
-        return jnp.where(absmax > 0, absmax / self.qmax, 1.0)
+        # multiply by the reciprocal CONSTANT, never divide: XLA's
+        # simplifier rewrites float division by a constant into a
+        # reciprocal multiply in SOME programs and not in others, which
+        # skews the scale by 1 ulp between two compilations of this same
+        # formula (observed between a shard_map wire program and the
+        # in-graph oracle it must match bitwise).  An explicit literal
+        # leaves the compiler nothing to rewrite; the Pallas consensus
+        # kernels use the same form.
+        return jnp.where(absmax > 0, absmax * (1.0 / self.qmax), 1.0)
 
     def _per_elem(self, scale: jax.Array, d: int) -> jax.Array:
         """Broadcast (..., nc) chunk scales back onto the d real last-axis
@@ -329,8 +376,30 @@ class StochasticQuantizer(Compressor):
         if dither is None:
             dither = (jax.random.uniform(key, x32.shape)
                       if key is not None else 0.5)
-        q = jnp.clip(jnp.floor(x32 / self._per_elem(scale, d) + dither),
-                     -self.qmax, self.qmax).astype(jnp.int8)
+        # Quantize by MULTIPLYING with the reciprocal of the on-wire scale
+        # (``inv`` is per-chunk, so the two tiny divisions are amortised
+        # over ``chunk`` elements): per-element division was the single
+        # hottest op of the physical-wire round on a host backend.  The
+        # reciprocal is computed from the canonical wire scale — every
+        # encoder (in-graph, shard_map, Pallas kernels) derives the same
+        # ``1/s_c`` bitwise, which is what keeps their codes identical.
+        inv = 1.0 / scale
+        if d % self.chunk == 0:
+            # chunk-multiple fast path (every bucketed-wire block, by
+            # ``bucket_block`` construction): scale in the (..., nc,
+            # chunk) layout so the chunk reciprocal broadcasts, instead
+            # of materialising a full-width per-element scale vector.
+            # Same multiply/add/floor operands element for element, so
+            # the codes are bitwise identical to the general path.
+            x3 = x32.reshape(x32.shape[:-1] + (-1, self.chunk))
+            u3 = (dither if jnp.ndim(dither) == 0
+                  else jnp.reshape(dither, x3.shape))
+            q = (jnp.clip(jnp.floor(x3 * inv[..., None] + u3),
+                          -self.qmax, self.qmax)
+                 .astype(jnp.int8).reshape(x32.shape))
+        else:
+            q = jnp.clip(jnp.floor(x32 * self._per_elem(inv, d) + dither),
+                         -self.qmax, self.qmax).astype(jnp.int8)
         return Compressed(data=q, scale=scale)
 
     def decompress(self, comp, d):
@@ -364,6 +433,25 @@ class StochasticQuantizer(Compressor):
         """Invert ``encode_block``: unpack (int4) and dequantize to f32."""
         q = unpack_int4(codes, length) if self.bits == 4 else codes
         return self.decompress(Compressed(data=q, scale=scales), length)
+
+    def code_chunks(self, codes: jax.Array, length: int) -> jax.Array:
+        """Unpacked integer codes as f32 in per-chunk layout ``(..., nc,
+        chunk)`` — the fused-decode surface of the bucketed wire.  Gossip
+        consumers fold the per-chunk scales (and the mixing-row weight)
+        into one broadcast factor per chunk, so dequantize never
+        materialises a full-width per-element scale vector:
+        ``(code_chunks(c, d) * scales[..., None]).reshape(..., d)`` is
+        bitwise ``decode_block(c, scales, d)`` — the same scale-times-code
+        products in the same order, only the broadcast shape differs.
+        Requires ``length`` to be a chunk multiple (bucket blocks are, by
+        ``bucket_block`` construction)."""
+        if length % self.chunk:
+            raise ValueError(
+                f"code_chunks needs a chunk-multiple length, got {length} "
+                f"with chunk={self.chunk}")
+        q = unpack_int4(codes, length) if self.bits == 4 else codes
+        return q.astype(jnp.float32).reshape(
+            q.shape[:-1] + (length // self.chunk, self.chunk))
 
     def wire_block_bytes(self, length: int) -> Tuple[int, int]:
         """(code bytes, scale bytes) of one encoded ``length``-element

@@ -269,11 +269,15 @@ def gossip_scan_wire(a: jax.Array, tree: Any, t_server: int, codec,
     feedback tracks (``wire_roundtrip_tree``).  Same codes + scales per
     round on the wire — the byte ledger is unchanged.
 
-    Bit-identical to ``make_gossip_shard_map``'s codec mode under the same
-    key and block size (asserted in ``tests/test_wire.py``): same
-    per-(leaf, round, server, block) dither, same chunk boundaries (every
-    block is encoded independently, so chunking never crosses a block),
-    and the same left-to-right f32 multiply-add order (``_wire_mix_rows``).
+    LEGACY per-leaf layout (PR 5): every leaf is blocked and encoded
+    independently, with per-(leaf, round, server, block) dither, so a
+    realistic pytree pays two collectives per block per leaf per round.
+    The shipping paths moved to the BUCKETED layout
+    (``gossip_scan_wire_bucketed`` — one flattened code buffer for the
+    whole tree, one collective pair per round); this function stays as the
+    per-leaf reference oracle of ``kernels.consensus_mix.
+    quantized_gossip_round_2d`` and the layout the per-leaf byte counter
+    (``comm.accounting.physical_leaf_bytes``) describes.
     ``block_major=True`` streams (block-major, round-minor) like
     ``gossip_scan_blocked`` — the identical operator bit for bit, since
     blocks gossip and encode independently.
@@ -341,17 +345,152 @@ def gossip_scan_wire(a: jax.Array, tree: Any, t_server: int, codec,
     return jax.tree.unflatten(treedef, new_leaves)
 
 
+def _bucket_flat(leaves) -> jax.Array:
+    """(m, d_tot) bucket view of a server tree's leaves, every leaf cast to
+    the FIRST leaf's dtype (the bucket's single wire dtype) and flattened
+    row-wise in leaf order."""
+    m = leaves[0].shape[0]
+    dtype = leaves[0].dtype
+    return jnp.concatenate(
+        [leaf.astype(dtype).reshape(m, -1) for leaf in leaves], axis=1)
+
+
+def _bucket_split(flat: jax.Array, leaves, treedef) -> Any:
+    """Invert ``_bucket_flat``: slice the (m, >=d_tot) bucket back into the
+    original leaf shapes/dtypes (any pad tail is dropped)."""
+    out, off = [], 0
+    for leaf in leaves:
+        size = int(np.prod(leaf.shape[1:], dtype=np.int64))
+        out.append(flat[:, off:off + size].reshape(leaf.shape)
+                   .astype(leaf.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def _bucket_dither_rows(codec, key, m: int, d_pad: int, *, rnd):
+    """(m, d_pad) dither for one round of the BUCKETED wire — one
+    ``wire_dither`` draw per server over the whole padded bucket (leaf and
+    block coordinates pinned to 0: the bucket is one logical block of one
+    logical leaf), or the deterministic 0.5 without a key."""
+    del codec
+    if key is None:
+        return 0.5
+    return jax.vmap(lambda s: _compressors.wire_dither(
+        key, (d_pad,), leaf=0, rnd=rnd, server=s, block=0))(jnp.arange(m))
+
+
+def gossip_scan_wire_bucketed(a: jax.Array, tree: Any, t_server: int,
+                              codec, key: Optional[jax.Array] = None, *,
+                              block: int = DEFAULT_GOSSIP_BLOCK) -> Any:
+    """BUCKETED quantized-wire gossip, in-graph: the reference numerics of
+    the physical collective paths since PR 6.  Same innovation recursion as
+    ``gossip_scan_wire`` (delta-coded against the receivers' shared decoded
+    reference — see there for why deltas and not raw state), but the whole
+    pytree is flattened into ONE zero-padded code buffer per server
+    (``comm.compressors.bucket_block`` layout), so every round ships
+    exactly one code buffer + one scale buffer per server — what the
+    shard_map program realises as one s8 all-gather + one f32 all-gather.
+
+    The ``(M, d)`` reference matrix of the per-leaf form is factored into a
+    per-server band: server ``i`` carries only its OWN reference row
+    ``r_i`` and a running accumulator ``acc_i`` of the mixed references,
+    using ``R_t = R_{t-1} + Δ_t`` to fold the mix incrementally::
+
+        delta_t = W_t - r_(t-1)                (encoded; crosses the wire)
+        r_t     = r_(t-1) + D(C(delta_t))_i    (own decoded innovation)
+        acc_t   = acc_(t-1) + sum_j a[i,j] * D(C(delta_t))_j
+        W_(t+1) = acc_t                        (acc_0-pre = 0, r_0-pre = 0)
+
+    which telescopes to ``acc_t = (A · R_t)_i`` exactly — same fixed point,
+    same contraction, but the per-device live state drops from ``(M+1)``
+    rows to 3 (iterate, own reference, accumulator): the 926→~600 MB RSS
+    fix of the shard_map wire.  The sum over ``j`` accumulates LEFT TO
+    RIGHT in f32, one term per server, matching the shard_map round body
+    term for term, so this simulation is bit-identical to the physical
+    program under a shared key (asserted for int8 AND packed int4 in
+    ``tests/test_wire.py``).  Mixed-dtype trees ride the wire in the FIRST
+    leaf's dtype (one bucket, one wire dtype) and are cast back on exit.
+
+    Zero padding of the bucket tail is harmless for the same reason as in
+    ``gossip_scan_wire``: pad deltas quantize to zero codes and never
+    perturb a real chunk's absmax scale (pads occupy whole chunks — the
+    bucket block is a chunk multiple)."""
+    if t_server == 0:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    m = leaves[0].shape[0]
+    dtype = leaves[0].dtype
+    flat = _bucket_flat(leaves)
+    d_tot = flat.shape[1]
+    blk, nb = _compressors.bucket_block(d_tot, block, codec.chunk)
+    d_pad = nb * blk
+    if d_pad != d_tot:
+        flat = jnp.pad(flat, ((0, 0), (0, d_pad - d_tot)))
+    a32 = a.astype(jnp.float32)
+
+    def one_round(t, carry):
+        w, ref, acc = carry        # (m, d_pad): wire dtype, f32, f32
+        delta = w.astype(jnp.float32) - ref
+        dither = _bucket_dither_rows(codec, key, m, d_pad, rnd=t)
+        codes, scales = codec.encode_block(delta, dither)
+        # fused dequantize-and-mix, folded exactly like the shard_map
+        # round body: per-chunk scales (and the mixing weight) broadcast
+        # onto raw f32 codes, one server term at a time — the same
+        # scale-times-code and weight-times-scale products in the same
+        # order, which is what keeps the simulation bit-identical to the
+        # physical program
+        c3 = codec.code_chunks(codes, d_pad)       # (m, nc, chunk)
+        ref = ref + (c3 * scales[..., None]).reshape(m, d_pad)
+        ws = a32[:, :, None] * scales              # (m, m, nc): ws[i, j]
+        acc3 = acc.reshape(m, -1, codec.chunk)
+        for j in range(m):
+            acc3 = acc3 + ws[:, j, :, None] * c3[j]
+        acc = acc3.reshape(m, d_pad)
+        return acc.astype(dtype), ref, acc
+
+    zeros = jnp.zeros((m, d_pad), jnp.float32)
+    out, _, _ = jax.lax.fori_loop(0, t_server, one_round,
+                                  (flat, zeros, zeros))
+    return _bucket_split(out, leaves, treedef)
+
+
+def bucketed_roundtrip_tree(codec, tree: Any,
+                            key: Optional[jax.Array] = None, *,
+                            block: int = DEFAULT_GOSSIP_BLOCK,
+                            rnd: int = 0) -> Any:
+    """One wire round-trip of a server tree in the BUCKETED physical byte
+    layout: the whole pytree flattened (first leaf's dtype), zero-padded to
+    the ``comm.compressors.bucket_block`` grid, and encoded/decoded with
+    the shared round-``rnd`` bucket dither — exactly what round ``rnd`` of
+    the bucketed physical gossip ships of each server's OWN model.  The
+    error-feedback hook of the bucketed wire (successor of the per-leaf
+    ``wire_roundtrip_tree``): bucket chunk boundaries cross leaf
+    boundaries, so the per-leaf round-trip no longer reproduces the
+    transmission."""
+    leaves, treedef = jax.tree.flatten(tree)
+    m = leaves[0].shape[0]
+    flat = _bucket_flat(leaves).astype(jnp.float32)
+    d_tot = flat.shape[1]
+    blk, nb = _compressors.bucket_block(d_tot, block, codec.chunk)
+    d_pad = nb * blk
+    if d_pad != d_tot:
+        flat = jnp.pad(flat, ((0, 0), (0, d_pad - d_tot)))
+    dither = _bucket_dither_rows(codec, key, m, d_pad, rnd=rnd)
+    codes, scales = codec.encode_block(flat, dither)
+    y = codec.decode_block(codes, scales, d_pad)
+    return _bucket_split(y, leaves, treedef)
+
+
 def wire_roundtrip_tree(codec, tree: Any, key: Optional[jax.Array] = None,
                         *, block: int = DEFAULT_GOSSIP_BLOCK,
                         rnd: int = 0) -> Any:
-    """One wire round-trip of a server tree in the PHYSICAL byte layout:
-    each leaf row flattened, zero-padded to ``block``-element blocks, and
-    encoded/decoded with the shared round-``rnd`` dither — exactly what
-    round ``rnd`` of the physical gossip ships of each server's OWN model.
-    This is the error-feedback hook of ``wire='physical'``: the residual is
-    the difference between a server's model and this round-0 transmission
-    of it (later rounds re-quantize mixed values whose stochastic-rounding
-    error is zero-mean and untracked)."""
+    """One wire round-trip of a server tree in the LEGACY per-leaf physical
+    byte layout: each leaf row flattened, zero-padded to ``block``-element
+    blocks, and encoded/decoded with the shared round-``rnd`` dither —
+    exactly what round ``rnd`` of the per-leaf physical gossip
+    (``gossip_scan_wire``) ships of each server's OWN model.  The shipping
+    paths use ``bucketed_roundtrip_tree`` since PR 6; this stays the
+    round-0 oracle of the per-leaf reference."""
     leaves, treedef = jax.tree.flatten(tree)
     m = leaves[0].shape[0]
     out = []
@@ -613,39 +752,42 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
 
     **Quantized wire mode** (``codec=`` a ``comm.compressors.
     StochasticQuantizer``): the returned ``run(operator, tree, key)``
-    quantizes the local ``(block,)`` slice — delta-coded against the
-    receivers' shared decoded reference, see ``gossip_scan_wire`` for the
-    recursion and why innovations rather than raw state — to int8 /
-    packed-int4 codes + per-chunk f32 scales *before* the gather,
-    all-gathers the code and scale buffers — so the collective operand is
-    1/4 (int8) or 1/8 (int4) of the f32 wire, for real, asserted against
-    compiled HLO — and dequantizes, accumulates references, and mixes
-    after.  Every device carries the identical ``(M, block)`` f32
-    reference through the round loop (~(2M+2) x block x 4 bytes live per
-    block — the same order as the gather buffer itself).  Dither follows
-    the shared ``comm.compressors.wire_dither`` convention keyed by (leaf,
-    round, server, block), making this program bit-identical to the
-    in-graph ``gossip_scan_wire`` reference under the same key;
-    ``stochastic=False`` builds the deterministic round-to-nearest program
-    (no key needed).  ``gather_codes=False`` is the simulated twin for
-    parity tests: the same code values cross the wire at full f32 width —
-    4x the bytes, identical ops — asserted bitwise equal to the physical
-    program, proving the narrow wire changes encoding width only.
-    Zero-padded tail blocks are harmless: pad deltas quantize to zero
-    codes and never perturb real chunks' scales (see
-    ``StochasticQuantizer.encode_block``).
+    flattens the device's ENTIRE local tree into one zero-padded bucket
+    (``comm.compressors.bucket_block`` layout) and delta-codes it against
+    the receivers' shared decoded reference — see
+    ``gossip_scan_wire_bucketed`` for the recursion and why innovations
+    rather than raw state — to int8 / packed-int4 codes + per-chunk f32
+    scales *before* the gather.  Each round is then exactly ONE all-gather
+    of s8 codes plus one of f32 scales no matter how many leaves the
+    pytree has (two collective sites in the compiled HLO, guarded by a
+    regression test), and the collective operand is 1/4 (int8) or 1/8
+    (int4) of the f32 wire, for real, asserted against compiled HLO.  The
+    per-leaf form's ``(M, block)`` resident reference matrix is factored
+    into a per-device band — iterate, OWN reference row, and mixed-
+    reference accumulator, ~3 bucket-sized vectors live — which is the
+    926→~600 MB RSS fix at benchmark scale.  Dither follows the shared
+    ``comm.compressors.wire_dither`` convention with the bucket's (leaf,
+    block) coordinates pinned to 0 and the server coordinate the device's
+    LINEARIZED mesh position (server-major): when ``leaf_specs`` shard
+    weight axes over further mesh axes (tp / fsdp), the shards of one
+    server row draw DISTINCT rounding noise; on a pure ``(server,)`` mesh
+    it reduces to the server index — which is what keeps the program
+    bit-identical to ``gossip_scan_wire_bucketed`` (whose rows are
+    unsharded) under the same key.  ``stochastic=False`` builds the
+    deterministic round-to-nearest program (no key needed).
+    ``gather_codes=False`` is the simulated twin for parity tests: the
+    same code values cross the wire at full f32 width — 4x the bytes,
+    identical ops — asserted bitwise equal to the physical program,
+    proving the narrow wire changes encoding width only.  Zero-padded
+    bucket tails are harmless: pad deltas quantize to zero codes and never
+    perturb real chunks' scales (see ``StochasticQuantizer.encode_block``).
 
-    The dither's server coordinate is the device's LINEARIZED mesh
-    position (server-major), so when ``leaf_specs`` shard weight axes over
-    further mesh axes (tp / fsdp), the shards of one server row draw
-    DISTINCT rounding noise; on a pure ``(server,)`` mesh it reduces to
-    the server index — which is what keeps the program bit-identical to
-    ``gossip_scan_wire`` (whose rows are unsharded).  ``with_shipped=True``
-    makes ``run`` return ``(mixed tree, shipped tree)`` where ``shipped``
-    is each device's own round-0 decoded transmission — the error-feedback
-    hook: it is computed INSIDE the program, with the exact local-shard
-    block/chunk/dither layout that crossed the wire (an outside
-    ``wire_roundtrip_tree`` would only reproduce it for unsharded rows).
+    ``with_shipped=True`` makes ``run`` return ``(mixed tree, shipped
+    tree)`` where ``shipped`` is each device's own round-0 decoded
+    transmission — the error-feedback hook: it is computed INSIDE the
+    program, with the exact local-shard bucket/chunk/dither layout that
+    crossed the wire (an outside ``bucketed_roundtrip_tree`` would only
+    reproduce it for unsharded rows).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -683,6 +825,117 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
             return (jax.lax.bitcast_convert_type(x, jnp.bfloat16)
                     if wire else x)
 
+        if codec is not None:
+            # BUCKETED wire path: the device's whole local tree is ONE
+            # zero-padded code buffer, so each round is exactly one s8
+            # all-gather + one f32 all-gather no matter how many leaves
+            # the pytree has — and the carry is 3 bucket-sized vectors
+            # (iterate, own reference row, mixed-reference accumulator)
+            # instead of the per-leaf form's (M, blk) reference matrix;
+            # see ``gossip_scan_wire_bucketed`` for the telescoped
+            # recursion and why acc_t == (A · R_t)_i exactly.
+            flat = jnp.concatenate(
+                [to_wire(leaf.astype(dtype)).reshape(-1)
+                 for leaf in leaves])
+            d_tot = flat.size
+            blk, nb = _compressors.bucket_block(d_tot, block, codec.chunk)
+            d_pad = nb * blk
+            if d_pad != d_tot:
+                flat = jnp.pad(flat, (0, d_pad - d_tot))
+
+            def encode_round(t, delta):
+                """Round-``t`` bucket encode under the shared dither
+                convention — ONE definition used by both the loop body and
+                the out-of-loop ``shipped`` pre-pass, so the pre-pass is
+                elementwise-identical to what round 0 puts on the wire."""
+                if key is not None:
+                    dither = _compressors.wire_dither(
+                        key, (d_pad,), leaf=0, rnd=t, server=wire_server,
+                        block=0)
+                else:
+                    dither = 0.5
+                return codec.encode_block(delta, dither)
+
+            def round_fn_wire(t, carry):
+                """One bucketed quantized-wire round, delta-coded: encode
+                the innovation of my bucket against the receivers' shared
+                decoded reference of me, gather CODES (not floats), fold
+                every row's decoded delta into my own reference row and
+                the mixed-reference accumulator.  The delta's absmax
+                contracts with consensus, so per-hop quantization noise
+                vanishes instead of flooring (see ``gossip_scan_wire``)."""
+                w, ref, acc = carry            # (d_pad,) each
+                delta = from_wire(w).astype(jnp.float32) - ref
+                codes, scales = encode_round(t, delta)
+                if gather_codes:
+                    g_codes = jax.lax.all_gather(codes, axis_name)
+                else:
+                    # simulated twin: the same code VALUES cross the wire
+                    # at full f32 width (the f32 -> int8 round-trip is
+                    # exact on code integers), so the collective moves 4x
+                    # the bytes but the decode still happens after the
+                    # gather — keeping the multiply-add structure, and
+                    # therefore the FMA contraction, identical to the
+                    # physical program: the two are asserted BITWISE
+                    # equal, proving the narrow wire changes encoding
+                    # width only, never the numerics
+                    g_codes = jax.lax.all_gather(
+                        codes.astype(jnp.float32),
+                        axis_name).astype(codes.dtype)
+                g_scales = jax.lax.all_gather(scales, axis_name)
+                # Fused dequantize-and-mix: fold the per-chunk scales and
+                # the mixing-row weight into ONE broadcast factor per
+                # chunk, so the round never materialises the (M, d_pad)
+                # dequantized matrix or a per-element scale vector — on a
+                # memory-bound host this halves the decode-side passes.
+                # Term order stays one server at a time, left to right,
+                # matching ``gossip_scan_wire_bucketed`` product for
+                # product (the oracle folds identically).
+                c3 = codec.code_chunks(g_codes, d_pad)   # (M, nc, chunk)
+                ref = ref + (c3[idx] * g_scales[idx][:, None]
+                             ).reshape(d_pad)
+                ws = row[:, None] * g_scales             # (M, nc) folded
+                acc3 = acc.reshape(-1, codec.chunk)
+                for j in range(m):
+                    acc3 = acc3 + ws[j][:, None] * c3[j]
+                acc = acc3.reshape(d_pad)
+                return to_wire(acc.astype(dtype)), ref, acc
+
+            zeros = jnp.zeros((d_pad,), jnp.float32)
+            if with_shipped:
+                # what this device shipped of its own model (the EF hook)
+                # is its round-0 decoded transmission: ref_1 = dec_0[own].
+                # Recompute it in a pre-pass OUTSIDE the loop — the same
+                # ``encode_round(0, flat - 0)`` expression the loop body
+                # evaluates, decoded locally (own row only, no gather) —
+                # instead of carrying a 4th bucket vector + a per-round
+                # select through the fori_loop: the loop body stays THE
+                # SAME program as the plain runner (bitwise-identical
+                # mixed output, single gather pair in the compiled HLO)
+                # and the pre-pass costs one encode instead of t_server
+                # bucket-sized selects.
+                codes0, scales0 = encode_round(
+                    0, from_wire(flat).astype(jnp.float32) - zeros)
+                shipped = codec.decode_block(codes0, scales0, d_pad)
+            else:
+                shipped = zeros
+            w, _, _ = jax.lax.fori_loop(
+                0, t_server, round_fn_wire, (flat, zeros, zeros))
+            out = from_wire(w)
+            new_leaves, shipped_leaves, off = [], [], 0
+            for leaf in leaves:
+                size = leaf.size
+                new_leaves.append(out[off:off + size].astype(leaf.dtype)
+                                  .reshape(leaf.shape))
+                shipped_leaves.append(
+                    shipped[off:off + size].astype(leaf.dtype)
+                    .reshape(leaf.shape))
+                off += size
+            mixed = jax.tree.unflatten(treedef, new_leaves)
+            if not with_shipped:
+                return mixed
+            return mixed, jax.tree.unflatten(treedef, shipped_leaves)
+
         def round_fn(_i, w):
             g = from_wire(jax.lax.all_gather(w, axis_name))      # (M, blk)
             # unrolled mul-adds (M is tiny); f32 accumulate per block
@@ -691,116 +944,42 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
                 acc = acc + row[j] * g[j].astype(jnp.float32)
             return to_wire(acc.astype(dtype))
 
-        def round_fn_wire(leaf_idx, b, blk, t, carry):
-            """One quantized-wire round, delta-coded: encode the innovation
-            of my slice against the receivers' shared decoded reference of
-            me, gather CODES (not floats), accumulate every row's decoded
-            delta into the reference matrix, mix the references.  All
-            devices carry the identical (M, blk) reference (same initial
-            zero, same decoded updates), so every consumer — including my
-            own next-round carry — works from one numerics definition
-            shared with the wire simulation; the delta's absmax contracts
-            with consensus, so per-hop quantization noise vanishes instead
-            of flooring (see ``gossip_scan_wire``)."""
-            w, ref = carry                       # (blk,) wire, (M, blk) f32
-            delta = from_wire(w).astype(jnp.float32) - ref[idx]
-            if key is not None:
-                dither = _compressors.wire_dither(
-                    key, (blk,), leaf=leaf_idx, rnd=t, server=wire_server,
-                    block=b)
-            else:
-                dither = 0.5
-            codes, scales = codec.encode_block(delta, dither)
-            if gather_codes:
-                g_codes = jax.lax.all_gather(codes, axis_name)
-            else:
-                # simulated twin: the same code VALUES cross the wire at
-                # full f32 width (the f32 -> int8 round-trip is exact on
-                # code integers), so the collective moves 4x the bytes but
-                # the decode still happens after the gather — keeping the
-                # multiply-add structure, and therefore the FMA
-                # contraction, identical to the physical program: the two
-                # are asserted BITWISE equal, proving the narrow wire
-                # changes encoding width only, never the numerics
-                g_codes = jax.lax.all_gather(
-                    codes.astype(jnp.float32), axis_name).astype(codes.dtype)
-            g_scales = jax.lax.all_gather(scales, axis_name)
-            ref = ref + codec.decode_block(g_codes, g_scales, blk)
-            acc = row[0] * ref[0]
-            for j in range(1, m):
-                acc = acc + row[j] * ref[j]
-            return to_wire(acc.astype(dtype)), ref
+        def gossip_leaf(flat):
+            """Blocked in-place gossip over one flattened (wire) leaf.
 
-        def gossip_leaf(leaf_idx, flat):
-            """Blocked in-place gossip over one flattened (wire) leaf;
-            returns ``(mixed, shipped)`` with ``shipped`` this device's own
-            round-0 decoded transmission (f32; zeros without a codec).
-
-            The ragged tail block is zero-padded; zeros survive both wire
-            formats exactly (they mix to zero, and quantize to zero codes
-            without touching any real chunk's absmax scale), so the pad is
-            sliced back off unchanged."""
+            The ragged tail block is zero-padded; zeros survive the wire
+            format exactly (they mix to zero), so the pad is sliced back
+            off unchanged."""
             d = flat.size
             blk = min(block, d)
             nb = -(-d // blk)
             if nb * blk != d:
                 flat = jnp.pad(flat, (0, nb * blk - d))
-
-            def block_rounds(b, w):
-                if codec is None:
-                    return (jax.lax.fori_loop(0, t_server, round_fn, w),
-                            jnp.zeros((blk,), jnp.float32))
-                step = functools.partial(round_fn_wire, leaf_idx, b, blk)
-                ref0 = jnp.zeros((m, blk), jnp.float32)
-                if not with_shipped:
-                    w, _ = jax.lax.fori_loop(0, t_server, step, (w, ref0))
-                    return w, jnp.zeros((blk,), jnp.float32)
-                # round 0 unrolled: its post-round reference row IS what
-                # this device shipped of its own model (the EF hook) —
-                # only peeled when the caller wants it, so the plain
-                # program keeps a single gather site in the compiled HLO
-                w, ref = step(0, (w, ref0))
-                shipped = ref[idx]
-                w, _ = jax.lax.fori_loop(1, t_server, step, (w, ref))
-                return w, shipped
-
             if nb == 1:
-                w, shipped = block_rounds(0, flat)
-                return w[:d], shipped[:d]
+                return jax.lax.fori_loop(0, t_server, round_fn, flat)[:d]
 
-            def per_block(i, carry):
-                buf, sbuf = carry
+            def per_block(i, buf):
                 w = jax.lax.dynamic_slice(buf, (i * blk,), (blk,))
-                w, shipped = block_rounds(i, w)
-                return (jax.lax.dynamic_update_slice(buf, w, (i * blk,)),
-                        jax.lax.dynamic_update_slice(sbuf, shipped,
-                                                     (i * blk,)))
+                w = jax.lax.fori_loop(0, t_server, round_fn, w)
+                return jax.lax.dynamic_update_slice(buf, w, (i * blk,))
 
-            buf, sbuf = jax.lax.fori_loop(
-                0, nb, per_block,
-                (flat, jnp.zeros((nb * blk,), jnp.float32)))
-            return buf[:d], sbuf[:d]
+            return jax.lax.fori_loop(0, nb, per_block, flat)[:d]
 
         # Per-leaf loops CHAINED via optimization_barrier: leaves gossip
         # independently, so XLA would otherwise schedule their while-loops
         # concurrently and hold every leaf's wire buffers at once; the
         # token dependency forces one leaf in flight at a time.
-        new_leaves, shipped_leaves = [], []
+        new_leaves = []
         token = None
-        for leaf_idx, leaf in enumerate(leaves):
+        for leaf in leaves:
             wl = to_wire(leaf.astype(dtype)).reshape(-1)
             if token is not None:
                 wl, token = jax.lax.optimization_barrier((wl, token))
-            out, shipped = gossip_leaf(leaf_idx, wl)
+            out = gossip_leaf(wl)
             token = out[0]
             new_leaves.append(
                 from_wire(out).astype(leaf.dtype).reshape(leaf.shape))
-            shipped_leaves.append(
-                shipped.astype(leaf.dtype).reshape(leaf.shape))
-        mixed = jax.tree.unflatten(treedef, new_leaves)
-        if not with_shipped:
-            return mixed
-        return mixed, jax.tree.unflatten(treedef, shipped_leaves)
+        return jax.tree.unflatten(treedef, new_leaves)
 
     out_specs = ((leaf_specs, leaf_specs)
                  if codec is not None and with_shipped else leaf_specs)
@@ -1241,15 +1420,17 @@ class CompressedBackend(ConsensusBackend):
       are a host-side ledger.
     * ``"physical"`` — the codes ARE what crosses the interconnect: every
       round quantizes before the collective and dequantizes after
-      (``gossip_scan_wire`` for the pjit paths,
+      (``gossip_scan_wire_bucketed`` for the pjit paths,
       ``ShardMapBackend.wire_runner`` for explicit collectives), so each
       hop re-quantizes like a real store-and-forward relay and every
-      collective operand is int8 / packed int4.  Only the quantizers
-      define a wire byte format, and only the literal T_S-round schedules
-      (gossip / gossip_blocked / shard_map) have a per-round wire.  Error
-      feedback tracks the round-0 transmission of each server's OWN model
-      (``wire_roundtrip_tree``) — later hops' stochastic-rounding error is
-      zero-mean and untracked."""
+      collective operand is int8 / packed int4 — in the BUCKETED layout:
+      the whole tree as one padded code buffer, one collective pair per
+      round.  Only the quantizers define a wire byte format, and only the
+      literal T_S-round schedules (gossip / gossip_blocked / shard_map)
+      have a per-round wire.  Error feedback tracks the round-0
+      transmission of each server's OWN model
+      (``bucketed_roundtrip_tree``) — later hops' stochastic-rounding
+      error is zero-mean and untracked."""
 
     compressed = True
 
@@ -1312,13 +1493,18 @@ class CompressedBackend(ConsensusBackend):
     def _mix_physical(self, tree: Any, a: jax.Array, *, residual, key):
         """Run one physical-wire consensus period on a (possibly
         transposed) operator: EF correction + round-0 residual update, then
-        the per-round quantized collectives.  Returns ``(mixed tree, new
-        residual)``.  The residual is ``corrected - (round-0 decoded
-        transmission)``: for the shard_map backend that transmission comes
-        back from INSIDE the collective program (``with_shipped`` — the
-        only layout-exact source when leaf specs shard weight axes); the
-        pjit paths recompute it with ``wire_roundtrip_tree``, whose
-        global-row layout is exactly what ``gossip_scan_wire`` encodes."""
+        the per-round quantized collectives in the BUCKETED layout (one
+        code + one scale buffer per server per round).  Returns ``(mixed
+        tree, new residual)``.  The residual is ``corrected - (round-0
+        decoded transmission)``: for the shard_map backend that
+        transmission comes back from INSIDE the collective program
+        (``with_shipped`` — the only layout-exact source when leaf specs
+        shard weight axes); the pjit paths recompute it with
+        ``bucketed_roundtrip_tree``, whose global-row layout is exactly
+        what ``gossip_scan_wire_bucketed`` encodes.  The pjit gossip and
+        gossip_blocked backends share one bucketed program — bucket blocks
+        encode and gossip independently, so there is no block-major /
+        round-major distinction left to preserve."""
         codec = self.compressor
         ef = residual is not None and self.error_feedback
         if ef:
@@ -1334,14 +1520,12 @@ class CompressedBackend(ConsensusBackend):
                 out = run(a, tree, key)
             return out, residual
         if ef:
-            shipped = wire_roundtrip_tree(codec, tree, key,
-                                          block=self.wire_block)
+            shipped = bucketed_roundtrip_tree(codec, tree, key,
+                                              block=self.wire_block)
             residual = jax.tree.map(lambda c, q: c - q, tree, shipped)
-        return gossip_scan_wire(
+        return gossip_scan_wire_bucketed(
             a, tree, self.inner.t_server, codec, key,
-            block=self.wire_block,
-            block_major=isinstance(self.inner, BlockedGossipBackend)), \
-            residual
+            block=self.wire_block), residual
 
     # -- the EF-threading entry points the epoch step calls ------------------
     def mix_compressed(self, tree: Any, a_p: Optional[jax.Array] = None, *,

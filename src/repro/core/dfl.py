@@ -328,8 +328,11 @@ def active_wire(cfg: "DFLConfig") -> Tuple[str, int]:
     resolved from an injected ``consensus.CompressedBackend`` first, then
     from ``cfg.wire``.  The block is the physical byte-layout partitioning
     (``consensus.DEFAULT_GOSSIP_BLOCK`` on the string paths): the engine's
-    byte ledger needs it to count the padded per-block codes + scales the
-    collectives actually gather under ``wire='physical'``."""
+    byte ledger needs it to count the BUCKETED padded codes + scales the
+    collectives actually gather under ``wire='physical'`` (``comm.
+    accounting.tree_bucketed_wire_bytes_per_server``), and its tracker
+    needs the mode to know that push-sum's weight scalar never crosses a
+    physical collective."""
     backend = cfg.consensus_backend
     if backend is not None and getattr(backend, "compressed", False):
         return backend.wire, backend.wire_block

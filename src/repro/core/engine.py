@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.accounting import (BytesTracker,
-                                   tree_physical_wire_bytes_per_server)
+                                   tree_bucketed_wire_bytes_per_server)
 from repro.comm.compressors import tree_wire_bytes_per_server
 from repro.core import dfl
 from repro.core import topology as tp
@@ -87,8 +87,12 @@ class DynamicFederationEngine:
         # one ledger across the whole run — bytes accumulate through fault
         # surgery, unlike the contraction trackers which reset with M
         self._compressor = dfl.active_compressor(self.cfg)
+        # the tracker is wire-aware: on the physical wire push-sum's (M,)
+        # weight never crosses a collective (it mixes via the in-graph
+        # replicated matvec), so its +4 B/message applies only simulated
         self._bytes = (BytesTracker(self._compressor,
-                                    push_sum=self.cfg.mixing == "push_sum")
+                                    push_sum=self.cfg.mixing == "push_sum",
+                                    wire=dfl.active_wire(self.cfg)[0])
                        if self._compressor is not None else None)
         self._row_bytes: Dict[int, Tuple[int, int]] = {}  # M -> (bytes, elems)
         # spectral backends (chebyshev) consume a host-side per-epoch
@@ -128,11 +132,12 @@ class DynamicFederationEngine:
         """(compressed bytes, elements) of one server's message at the
         current federation size, cached per M.  Simulated wire: compressor
         metadata over the server-tree shapes (unpadded payload flooding).
-        Physical wire: the padded per-block codes + scales the collectives
+        Physical wire: the BUCKETED padded codes + scales the collectives
         actually gather each round (``comm.accounting.
-        tree_physical_wire_bytes_per_server``) — the ledger then reports
-        bytes the interconnect really moved, cross-checked against
-        compiled-HLO operand shapes in ``tests/test_wire.py``."""
+        tree_bucketed_wire_bytes_per_server`` — one code buffer + one
+        scale buffer for the whole tree) — the ledger then reports bytes
+        the interconnect really moved, cross-checked against compiled-HLO
+        operand shapes in ``tests/test_wire.py``."""
         m = self.topo.num_servers
         if m not in self._row_bytes:
             server_abs = jax.eval_shape(
@@ -140,7 +145,7 @@ class DynamicFederationEngine:
                 state.client_params)
             wire, wire_block = dfl.active_wire(self.cfg)
             if wire == "physical":
-                row = tree_physical_wire_bytes_per_server(
+                row = tree_bucketed_wire_bytes_per_server(
                     self._compressor, server_abs, wire_block)
             else:
                 row = tree_wire_bytes_per_server(self._compressor,
@@ -234,10 +239,12 @@ class DynamicFederationEngine:
                 else None)
         sched = EpochSchedule(jnp.asarray(mask_np, jnp.float32),
                               jnp.asarray(a_np, jnp.float32), lam2)
+        epoch_wire_bytes = None
         if self._bytes is not None:
             row_bytes, elems = self._wire_row_bytes(state)
-            self._bytes.update(a_np, self.topo.t_server,
-                               row_bytes=row_bytes, elems_per_row=elems)
+            epoch_wire_bytes = self._bytes.update(
+                a_np, self.topo.t_server, row_bytes=row_bytes,
+                elems_per_row=elems)
         state, metrics = self._step()(state, batches, sched)
         # participant-weighted loss of the last local iteration
         last = np.asarray(metrics.loss[-1], np.float32)
@@ -254,10 +261,14 @@ class DynamicFederationEngine:
             # ratio-consensus conditioning: a terminal weight near 0 means
             # that server's num/w read-out amplified rounding error
             record["psum_min_weight"] = float(jnp.min(state.psum_weight))
-        if self._bytes is not None:
+        if epoch_wire_bytes is not None:
             # this epoch's on-wire consensus traffic + the cumulative
-            # compression ratio vs f32 replicas over the same links
-            record["wire_mb"] = self._bytes.history[-1]["bytes"] / 1e6
+            # compression ratio vs f32 replicas over the same links.
+            # THIS epoch's update() return, never history[-1]: an epoch
+            # with zero gossip rounds (t_server=0, or M==1 after drop
+            # surgery) still records its true 0.0 rather than a stale
+            # entry — and never touches an empty history
+            record["wire_mb"] = epoch_wire_bytes / 1e6
             record["wire_ratio"] = self._bytes.ratio()
         return state, record
 

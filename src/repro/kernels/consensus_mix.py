@@ -31,6 +31,20 @@ round's collective; the decoded deltas and pre-encode innovations live
 only in VMEM and never materialise in HBM.  Bit-identical to the jnp wire
 path (``decode_block`` → accumulate → mix → ``compress``) under shared
 dither, which stays the reference oracle (``tests/test_wire.py``).
+
+``quantized_gossip_encode_2d`` covers the ENCODE side of the wire: the
+innovation ``W - R`` and its absmax-scaled stochastic rounding fused into
+one pass, so the pre-encode delta never round-trips HBM — what each
+server computes immediately before the collective (round 0 encodes the
+full state: ``R = 0``).
+
+``bucketed_gossip_round_2d`` is the BUCKETED-wire round kernel (PR 6):
+the band-carried recursion of ``core.consensus.gossip_scan_wire_bucketed``
+— each server holds only its OWN reference row and a running
+mixed-reference accumulator — fused encode→gather→dequant→accumulate→
+mix→requant around the round's single collective pair.  Together with
+``quantized_gossip_encode_2d`` it closes the loop: codes and innovations
+live only in VMEM between collectives.
 """
 from __future__ import annotations
 
@@ -92,8 +106,14 @@ def _quant_mix_kernel(a_ref, w_ref, u_ref, o_ref, *, block_d: int,
     nc = block_d // chunk
     wc = w.reshape(m, nc, chunk)
     absmax = jnp.max(jnp.abs(wc), axis=-1, keepdims=True)
-    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
-    q = jnp.clip(jnp.floor(wc / scale + u.reshape(m, nc, chunk)),
+    # multiply by the reciprocal CONSTANT, never divide: XLA's
+    # simplifier rewrites float division by a constant to a
+    # reciprocal multiply in SOME programs and not others (a 1-ulp
+    # scale skew between compilations of the same formula); an
+    # explicit literal leaves it nothing to rewrite, and matches
+    # ``comm.compressors.StochasticQuantizer._scales`` bitwise
+    scale = jnp.where(absmax > 0, absmax * (1.0 / qmax), 1.0)
+    q = jnp.clip(jnp.floor(wc * (1.0 / scale) + u.reshape(m, nc, chunk)),
                  -qmax, qmax)
     deq = (q * scale).reshape(m, block_d)
     o_ref[...] = jax.lax.dot_general(
@@ -181,8 +201,14 @@ def _wire_round_kernel(a_ref, q_ref, s_ref, r_ref, u_ref, w_ref, or_ref,
         mixed = mixed + a[:, j:j + 1] * ref[j]
     wc = (mixed - ref).reshape(m, nc, chunk)           # next innovations
     absmax = jnp.max(jnp.abs(wc), axis=-1, keepdims=True)
-    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
-    q2 = jnp.clip(jnp.floor(wc / scale + u.reshape(m, nc, chunk)),
+    # multiply by the reciprocal CONSTANT, never divide: XLA's
+    # simplifier rewrites float division by a constant to a
+    # reciprocal multiply in SOME programs and not others (a 1-ulp
+    # scale skew between compilations of the same formula); an
+    # explicit literal leaves it nothing to rewrite, and matches
+    # ``comm.compressors.StochasticQuantizer._scales`` bitwise
+    scale = jnp.where(absmax > 0, absmax * (1.0 / qmax), 1.0)
+    q2 = jnp.clip(jnp.floor(wc * (1.0 / scale) + u.reshape(m, nc, chunk)),
                   -qmax, qmax)
     w_ref[...] = mixed
     or_ref[...] = ref
@@ -272,4 +298,223 @@ def quantized_gossip_round_2d(a: jax.Array, codes: jax.Array,
         interpret=interpret,
     )(a, codes, scales, ref, dither)
     return (out_w[:, :d], out_r[:, :d], out_q[:, :d],
+            out_s[:, :d // chunk])
+
+
+# ---------------------------------------------------------------------------
+# fused innovation + encode: the send side of the physical wire
+# ---------------------------------------------------------------------------
+
+
+def _wire_encode_kernel(w_ref, r_ref, u_ref, oq_ref, os_ref, *,
+                        block_d: int, chunk: int, qmax: float):
+    """One (M, block_d) tile of the wire's SEND side: the innovation
+    ``w - r`` and its per-chunk absmax-scaled stochastic rounding in one
+    pass — the pre-encode delta exists only in VMEM."""
+    w = w_ref[...].astype(jnp.float32)                 # (M, block_d)
+    r = r_ref[...]                                     # (M, block_d) f32
+    u = u_ref[...].astype(jnp.float32)                 # dither in [0, 1)
+    m = w.shape[0]
+    nc = block_d // chunk
+    wc = (w - r).reshape(m, nc, chunk)                 # innovations
+    absmax = jnp.max(jnp.abs(wc), axis=-1, keepdims=True)
+    # multiply by the reciprocal CONSTANT, never divide: XLA's
+    # simplifier rewrites float division by a constant to a
+    # reciprocal multiply in SOME programs and not others (a 1-ulp
+    # scale skew between compilations of the same formula); an
+    # explicit literal leaves it nothing to rewrite, and matches
+    # ``comm.compressors.StochasticQuantizer._scales`` bitwise
+    scale = jnp.where(absmax > 0, absmax * (1.0 / qmax), 1.0)
+    q = jnp.clip(jnp.floor(wc * (1.0 / scale) + u.reshape(m, nc, chunk)),
+                 -qmax, qmax)
+    oq_ref[...] = q.reshape(m, block_d).astype(jnp.int8)
+    os_ref[...] = scale[..., 0]
+
+
+def quantized_gossip_encode_2d(w: jax.Array, ref: jax.Array,
+                               dither: jax.Array, *, bits: int = 8,
+                               chunk: int = 256, block_d: int = 2048,
+                               interpret: bool = True):
+    """Fused innovation + encode: ``C(w - ref; dither)`` in one HBM pass —
+    the SEND side of the physical wire, what every server computes
+    immediately before the round's collective (round 0, ``ref = 0``,
+    encodes the full state; that transmission is what error feedback
+    tracks).  Unfused, the delta is a full (M, D) f32 HBM round-trip
+    before the quantize pass reads it back.
+
+    ``w``: (M, D) iterates; ``ref``: (M, D) f32 decoded references;
+    ``dither``: (M, D) uniform [0, 1) rounding noise (generated outside —
+    see ``quantized_consensus_mix_2d``).  Returns ``(codes, scales)`` with
+    ``codes`` (M, D) UNPACKED int8 (int4 values in int8 storage —
+    ``comm.compressors.pack_int4`` is a free view change at the collective
+    boundary) and ``scales`` (M, D/chunk) f32.  Bit-identical to
+    ``StochasticQuantizer.encode_block`` of ``w - ref`` under jit when
+    ``chunk`` divides ``D`` (asserted in ``tests/test_wire.py``)."""
+    m, d = w.shape
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    if d % chunk:
+        raise ValueError(f"chunk={chunk} must divide D={d} (pad the wire "
+                         f"buffer to the bucket grid first, as the gossip "
+                         f"paths do)")
+    block_d = max(chunk, min(block_d, d))
+    if block_d % chunk:
+        raise ValueError(f"chunk={chunk} must divide block_d={block_d}")
+    nb = pl.cdiv(d, block_d)
+    pad = nb * block_d - d
+    if pad:     # ragged tile grid: zero deltas quantize to zero codes
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        ref = jnp.pad(ref, ((0, 0), (0, pad)))
+        dither = jnp.pad(dither, ((0, 0), (0, pad)))
+    qmax = float(2 ** (bits - 1) - 1)
+    nc_blk = block_d // chunk
+    kernel = functools.partial(_wire_encode_kernel, block_d=block_d,
+                               chunk=chunk, qmax=qmax)
+    out_q, out_s = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, nc_blk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.int8),
+            jax.ShapeDtypeStruct((m, nb * nc_blk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w, ref, dither)
+    return out_q[:, :d], out_s[:, :d // chunk]
+
+
+# ---------------------------------------------------------------------------
+# fused bucketed round: the band-carried recursion of the PR-6 wire
+# ---------------------------------------------------------------------------
+
+
+def _bucketed_round_kernel(a_ref, q_ref, s_ref, r_ref, c_ref, u_ref,
+                           oa_ref, or_ref, oq_ref, os_ref, *, block_d: int,
+                           chunk: int, qmax: float):
+    """One (M, block_d) tile of a BUCKETED delta-coded gossip round:
+    dequantize the gathered codes, fold each server's own decoded delta
+    into its reference row (``r`` is the band — row i is server i's OWN
+    reference, so the update is elementwise, no (M, M) fan-out),
+    accumulate the mixed deltas into ``acc``, and re-encode the next
+    innovations ``acc - r`` with fresh scales + dither."""
+    a = a_ref[...].astype(jnp.float32)                 # (M, M) resident
+    q = q_ref[...].astype(jnp.float32)                 # (M, block_d) codes
+    s = s_ref[...]                                     # (M, nc) scales
+    r = r_ref[...]                                     # (M, block_d) band
+    acc = c_ref[...]                                   # (M, block_d) f32
+    u = u_ref[...].astype(jnp.float32)                 # dither in [0, 1)
+    m = q.shape[0]
+    nc = block_d // chunk
+    dec = (q.reshape(m, nc, chunk) * s[..., None]).reshape(m, block_d)
+    r = r + dec
+    # unrolled left-to-right mul-adds, NOT an MXU dot — same reason and
+    # same order as ``_wire_round_kernel``: this is what keeps the kernel
+    # bit-identical to the bucketed wire paths
+    for j in range(m):
+        acc = acc + a[:, j:j + 1] * dec[j]
+    wc = (acc - r).reshape(m, nc, chunk)               # next innovations
+    absmax = jnp.max(jnp.abs(wc), axis=-1, keepdims=True)
+    # multiply by the reciprocal CONSTANT, never divide: XLA's
+    # simplifier rewrites float division by a constant to a
+    # reciprocal multiply in SOME programs and not others (a 1-ulp
+    # scale skew between compilations of the same formula); an
+    # explicit literal leaves it nothing to rewrite, and matches
+    # ``comm.compressors.StochasticQuantizer._scales`` bitwise
+    scale = jnp.where(absmax > 0, absmax * (1.0 / qmax), 1.0)
+    q2 = jnp.clip(jnp.floor(wc * (1.0 / scale) + u.reshape(m, nc, chunk)),
+                  -qmax, qmax)
+    oa_ref[...] = acc
+    or_ref[...] = r
+    oq_ref[...] = q2.reshape(m, block_d).astype(jnp.int8)
+    os_ref[...] = scale[..., 0]
+
+
+def bucketed_gossip_round_2d(a: jax.Array, codes: jax.Array,
+                             scales: jax.Array, ref: jax.Array,
+                             acc: jax.Array, dither: jax.Array, *,
+                             bits: int = 8, chunk: int = 256,
+                             block_d: int = 2048, interpret: bool = True):
+    """Fused encode→gather→dequant→accumulate→mix→requant, bucketed: one
+    round of ``core.consensus.gossip_scan_wire_bucketed``'s band-carried
+    recursion after the all-gather, in one HBM pass.
+
+    Implements (rows = servers, everything elementwise over D)::
+
+        dec   = D(codes, scales)       (gathered decoded deltas)
+        ref'  = ref + dec              (each row: its OWN reference band)
+        acc'  = acc + A · dec          (running (A · R_t) accumulator)
+        delta'= acc' - ref'            (next innovations; f32 iterate)
+        codes', scales' = C(delta'; dither)
+
+    ``codes``: (M, D) int8 delta codes as delivered by the all-gather
+    (int4 UNPACKED into int8); ``scales``: (M, D/chunk) f32; ``ref`` /
+    ``acc``: the (M, D) f32 band state (own-reference rows and mixed-
+    reference accumulators — together ~3 vectors per server instead of the
+    per-leaf form's (M+1)); ``dither``: (M, D) uniform [0, 1) noise for
+    the re-encode.  Returns ``(acc', ref', codes', scales')`` — the mixed
+    iterate IS ``acc'`` (cast to the model dtype by the caller).  The
+    decoded deltas and pre-encode innovations never touch HBM; vs the
+    unfused jnp round that is 4 (M, D) f32 HBM passes saved.
+
+    Bit-identical to the jnp oracle (``decode_block`` → band update →
+    left-to-right accumulate → ``encode_block``) under jit when ``chunk``
+    divides ``block_d`` and ``D`` — asserted for both code widths in
+    ``tests/test_wire.py``."""
+    m, d = codes.shape
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    if d % chunk:
+        raise ValueError(f"chunk={chunk} must divide D={d} (pad the wire "
+                         f"buffer to the bucket grid first, as the gossip "
+                         f"paths do)")
+    block_d = max(chunk, min(block_d, d))
+    if block_d % chunk:
+        raise ValueError(f"chunk={chunk} must divide block_d={block_d}")
+    nb = pl.cdiv(d, block_d)
+    pad = nb * block_d - d
+    if pad:     # ragged tile grid: zero codes / unit scales are inert
+        codes = jnp.pad(codes, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // chunk)),
+                         constant_values=1.0)
+        ref = jnp.pad(ref, ((0, 0), (0, pad)))
+        acc = jnp.pad(acc, ((0, 0), (0, pad)))
+        dither = jnp.pad(dither, ((0, 0), (0, pad)))
+    qmax = float(2 ** (bits - 1) - 1)
+    nc_blk = block_d // chunk
+    kernel = functools.partial(_bucketed_round_kernel, block_d=block_d,
+                               chunk=chunk, qmax=qmax)
+    out_a, out_r, out_q, out_s = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),        # A resident
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, nc_blk), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, nc_blk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.float32),
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.float32),
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.int8),
+            jax.ShapeDtypeStruct((m, nb * nc_blk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, codes, scales, ref, acc, dither)
+    return (out_a[:, :d], out_r[:, :d], out_q[:, :d],
             out_s[:, :d // chunk])

@@ -204,7 +204,12 @@ def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
     here because the mesh-aware backend never goes through the registry.
     ``wire="physical"`` makes the wrapped shard_map program gather the
     int8 / packed-int4 codes themselves (``ShardMapBackend.wire_runner``)
-    instead of simulating the quantization in-graph.  Inject the result via
+    instead of simulating the quantization in-graph — in the BUCKETED
+    layout: the device's whole local tree rides as one padded code buffer,
+    one s8 + one f32 all-gather per round regardless of leaf count
+    (``consensus.gossip_scan_wire_bucketed`` is the bit-exact in-graph
+    reference; both int8 and packed int4 ship at engine level).  Inject
+    the result via
     ``DFLConfig.consensus_backend``; selection between this,
     'gossip_blocked' and plain 'gossip' is per deployment plan
     (``launch.plans.DeploymentPlan.consensus_backend``)."""
