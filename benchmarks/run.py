@@ -39,6 +39,11 @@ theory quantities the paper derives and our beyond-paper claims):
                         on BOTH the simulated and the physical wire, and
                         that the metadata byte counts match the analytic
                         forms
+  byzantine_consensus   attack x defense grid: sign-flip / scaled-noise /
+                        inlier-shift attackers vs plain gossip and the
+                        robust screens (trimmed mean, median, clipped) —
+                        honest-server error, honest disagreement, and the
+                        per-defense wall-clock overhead
   kernel_micro          Pallas-kernel (interpret) vs jnp-oracle parity +
                         CPU wall time (correctness harness, not TPU perf)
   lm_epoch_throughput   DFL epoch wall time on a smoke LM (CPU reference)
@@ -638,6 +643,56 @@ def bench_compressed_consensus():
            round(phys["ratio"], 3))
 
 
+def bench_byzantine_consensus():
+    """Attack x defense grid on the fig-3 regression task (homogeneous
+    shards so the honest optimum is unambiguous): does each attack break
+    plain gossip, and does each robust screen hold under it?  Records the
+    honest servers' max error to w*, their mutual disagreement, and wall
+    time — the robustness datapoint tracked in BENCH_consensus.json."""
+    from repro.core import (ByzantineSchedule, FLTopology, init_dfl_state,
+                            make_engine)
+    from repro.data import RegressionSpec, make_regression_task
+    from repro.optim import sgd
+
+    m, n, t_c, t_s, epochs = 8, 3, S(15, 6), 8, S(40, 4)
+    topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                      t_server=t_s, graph_kind="complete")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.0),
+                                seed=0)
+    w_star = task["w_star"]
+    gamma = 1.5 / (9.0 * t_c)
+    attacks = {"none": None,
+               "sign_flip": "sign_flip:0.125",
+               "scaled_noise": "scaled_noise:0.125:10.0",
+               "inlier_shift": "inlier_shift:0.125:1.0"}
+    defenses = ("gossip", "trimmed_mean:1", "median", "clipped")
+    for aname, spec in attacks.items():
+        byz = ByzantineSchedule.parse(spec, seed=3) if spec else None
+        honest = np.ones(m, bool)
+        if byz is not None:
+            honest = byz.codes(0, tuple(range(m)), m) == 0
+        for mode in defenses:
+            engine = make_engine(topo, task["loss_fn"], sgd(gamma),
+                                 consensus_mode=mode, byzantine=byz)
+            state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(gamma),
+                                   jax.random.key(0))
+            t0 = time.time()
+            state, _ = engine.run(state, epochs, task["batch_fn"])
+            wall = time.time() - t0
+            servers = np.asarray(state.client_params[:, 0])[honest]
+            err = float(np.linalg.norm(servers - w_star, axis=-1).max())
+            dis = float(np.linalg.norm(servers - servers.mean(0),
+                                       axis=-1).max())
+            tag = f"{aname}_{mode.replace(':', '')}"
+            record("byzantine_consensus", f"{tag}_honest_err",
+                   round(err, 5))
+            record("byzantine_consensus", f"{tag}_honest_disagreement",
+                   f"{dis:.3e}")
+            record("byzantine_consensus", f"{tag}_wall_s", round(wall, 2))
+    record("byzantine_consensus", "attacker_fraction", 0.125)
+    record("byzantine_consensus", "graph", "complete8")
+
+
 BENCHES = {
     "fig3_consensus": bench_fig3_consensus,
     "thm1_epsilon_sweep": bench_thm1_epsilon_sweep,
@@ -647,6 +702,7 @@ BENCHES = {
     "directed_federation": bench_directed_federation,
     "consensus_backends": bench_consensus_backends,
     "compressed_consensus": bench_compressed_consensus,
+    "byzantine_consensus": bench_byzantine_consensus,
     "kernel_micro": bench_kernel_micro,
     "lm_epoch_throughput": bench_lm_epoch_throughput,
 }
@@ -706,7 +762,8 @@ def write_bench_consensus_json() -> None:
     PRs — the CSV is for humans, this file is the datapoint."""
     import json
 
-    tracked = ("consensus_backends", "compressed_consensus")
+    tracked = ("consensus_backends", "compressed_consensus",
+               "byzantine_consensus")
     per_bench = {name: {m: v for n, m, v in RESULTS if n == name}
                  for name in tracked}
     per_bench = {k: v for k, v in per_bench.items() if v}

@@ -1,0 +1,77 @@
+"""Byzantine-robust federation on the paper's Sec.-IV regression task.
+
+    PYTHONPATH=src python examples/byzantine_federation.py
+
+Algorithm 1 trusts every server's aggregate.  This example puts 1 of 8
+servers under adversarial control (its post-aggregation model is replaced
+BEFORE gossip each epoch) and runs the same engine through an attack x
+defense grid:
+
+  attacks   sign_flip     broadcast the negated model (w -> -w)
+            scaled_noise  broadcast w + 10 * N(0, I)
+            inlier_shift  collude to the corner of the honest
+                          coordinatewise envelope (unscreenable bias)
+
+  defenses  gossip        the paper's plain weighted gossip (no defense)
+            trimmed_mean  coordinatewise rank screen, drop f=1 high/low
+            median        coordinatewise median (maximal screen)
+            clipped       neighbor innovations norm-clipped against the
+                          receiver's own model, self-annealing threshold
+
+and prints the honest servers' max error to w* and mutual disagreement.
+The punchline mirrors tests/test_robust.py: the outlier attacks send
+plain gossip to err ~2 while every robust screen stays at the no-attack
+floor; the inlier attack cannot explode anyone (it is bounded by the
+honest envelope) — it only biases.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ByzantineSchedule, FLTopology, init_dfl_state,
+                        make_engine)
+from repro.data import RegressionSpec, make_regression_task
+from repro.optim import sgd
+
+M, N, T_C, T_S, EPOCHS = 8, 3, 15, 8, 40
+
+
+def main() -> None:
+    topo = FLTopology(num_servers=M, clients_per_server=N, t_client=T_C,
+                      t_server=T_S, graph_kind="complete")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.0),
+                                seed=0)
+    loss_fn, batch_fn, w_star = (task["loss_fn"], task["batch_fn"],
+                                 task["w_star"])
+    gamma = 1.5 / (9.0 * T_C)
+
+    attacks = {
+        "none": None,
+        "sign_flip": "sign_flip:0.125",
+        "scaled_noise": "scaled_noise:0.125:10.0",
+        "inlier_shift": "inlier_shift:0.125:1.0",
+    }
+    defenses = ("gossip", "trimmed_mean:1", "median", "clipped")
+
+    print(f"{'attack':<14}{'defense':<16}{'honest_err':>11}"
+          f"{'honest_dis':>12}")
+    for aname, spec in attacks.items():
+        byz = ByzantineSchedule.parse(spec, seed=3) if spec else None
+        honest = np.ones(M, bool)
+        if byz is not None:
+            honest = byz.codes(0, tuple(range(M)), M) == 0
+        for mode in defenses:
+            engine = make_engine(topo, loss_fn, sgd(gamma),
+                                 consensus_mode=mode, byzantine=byz)
+            state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(gamma),
+                                   jax.random.key(0))
+            state, _ = engine.run(state, EPOCHS, batch_fn)
+            servers = np.asarray(state.client_params[:, 0])[honest]
+            err = float(np.linalg.norm(servers - w_star, axis=-1).max())
+            dis = float(np.linalg.norm(servers - servers.mean(0),
+                                       axis=-1).max())
+            print(f"{aname:<14}{mode:<16}{err:>11.4f}{dis:>12.2e}")
+
+
+if __name__ == "__main__":
+    main()

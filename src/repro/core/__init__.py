@@ -19,7 +19,11 @@ from repro.core.consensus import (mix_pytree, gossip_scan, gossip_scan_tv,
                                   gossip_push_sum_tv, gossip_push_sum_blocked,
                                   ConsensusBackend, ShardMapBackend,
                                   CompressedBackend, lambda2_traced,
-                                  make_backend)
+                                  make_backend, trimmed_mean_mix, median_mix,
+                                  clip_weights, clipped_mix,
+                                  gossip_scan_trimmed, gossip_scan_median,
+                                  gossip_scan_clipped, TrimmedMeanBackend,
+                                  MedianBackend, ClippedGossipBackend)
 from repro.core.dfl import (DFLConfig, DFLState, DFLMetrics,
                             build_dfl_epoch_step, build_fedavg_epoch_step,
                             build_local_only_epoch_step, init_dfl_state,
@@ -27,10 +31,14 @@ from repro.core.dfl import (DFLConfig, DFLState, DFLMetrics,
                             masked_server_mean, carry_forward,
                             broadcast_to_clients, global_mean,
                             disagreement_norm, max_client_drift,
-                            active_compressor, wants_error_feedback)
+                            active_compressor, wants_error_feedback,
+                            apply_byzantine)
 from repro.core.schedule import (EpochSchedule, ParticipationSchedule,
                                  TopologySchedule, SigmaTracker,
-                                 FaultEvent, FaultSchedule)
+                                 FaultEvent, FaultSchedule,
+                                 ByzantineAttack, ByzantineSchedule,
+                                 diurnal_trace, save_participation_trace,
+                                 load_participation_trace)
 from repro.core.engine import DynamicFederationEngine, make_engine
 
 __all__ = [n for n in dir() if not n.startswith("_")]

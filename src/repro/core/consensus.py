@@ -49,6 +49,25 @@ sparsification) of each server's outgoing message plus optional error
 feedback — so every execution strategy composes with every compressor; the
 host-side byte ledger is ``comm.accounting.BytesTracker``.
 
+**Robust (Byzantine-screening) gossip.**  ``trimmed_mean_mix`` /
+``median_mix`` / ``clipped_mix`` replace the weighted round ``W <- A W``
+with neighbor-screening aggregation rules that tolerate adversarial
+servers: coordinatewise trimmed mean (discard the ``f`` largest and ``f``
+smallest supported values per coordinate, mean the rest — breakdown point
+``2f < c`` with ``c`` the supported neighborhood size, self included),
+coordinatewise median, and self-centered clipping (neighbor innovations
+norm-clipped against the receiver's own model, expressed as an effective
+per-round mixing matrix ``clip_weights`` so the round stays the einsum
+``mix_pytree``).  All three are pure traced functions of ``(A_p, tree)``,
+so they compose with the per-epoch matrices of dynamic federation;
+``TrimmedMeanBackend`` / ``MedianBackend`` / ``ClippedGossipBackend``
+register them through ``make_backend`` (``"trimmed_mean[:f]"`` /
+``"median"`` / ``"clipped[:mult]"``).  Screening discards the Eq.-6
+weights (a trimmed/median round is an unweighted mean over the surviving
+values), so none has a push-sum analogue (``supports_directed=False``) and
+none can run on the quantized physical wire (the screen must see every
+neighbor's plaintext values) — both combinations refuse loudly.
+
 **Physical wire.**  ``CompressedBackend(wire="physical")`` makes the
 compressed format the format that actually crosses the interconnect:
 every gossip round quantizes the local block to int8 / packed-int4 codes +
@@ -1176,6 +1195,10 @@ class ConsensusBackend:
       through ``schedule.EpochSchedule.lam2``.
     * ``compressed`` — a ``CompressedBackend`` wrapper (lossy wire
       simulation + error feedback around an inner backend).
+    * ``robust`` — a Byzantine-screening backend (trimmed mean / median /
+      clipped): must see every neighbor's plaintext values, so it cannot
+      ride the quantized physical wire, and its update is not the literal
+      ``W <- A W``, so no push-sum analogue exists.
     """
 
     name = "?"
@@ -1184,6 +1207,7 @@ class ConsensusBackend:
     mesh_bound = False
     needs_spectral = False
     compressed = False
+    robust = False
 
     def __init__(self, a_static: Optional[np.ndarray], t_server: int):
         self.a_static = (None if a_static is None
@@ -1338,6 +1362,238 @@ class ExactMeanBackend(ConsensusBackend):
                                        x.shape), tree)
 
 
+# ---------------------------------------------------------------------------
+# robust (Byzantine-screening) gossip: trimmed mean / median / clipped
+# ---------------------------------------------------------------------------
+
+
+def _support(a: jax.Array) -> jax.Array:
+    """Boolean (M, M) gossip support of a mixing matrix: every positive
+    entry plus the diagonal — a server always counts its OWN value among
+    the screened candidates, even on graphs whose self-weight is 0."""
+    return (a > 0) | jnp.eye(a.shape[0], dtype=bool)
+
+
+def _rank_keep_mean(a: jax.Array, leaf: jax.Array, keep_rule) -> jax.Array:
+    """Coordinatewise rank-screened neighbor mean — the shared core of the
+    trimmed-mean and median rounds.
+
+    For each receiver ``i`` and each coordinate, the supported values
+    (``leaf[j]`` for every ``j`` in i's support, self included) are ranked
+    by a stable double-argsort (ties broken by source index, so the keep
+    set is deterministic), ``keep_rule(rank, cnt)`` selects which ranks
+    survive, and the output is the UNWEIGHTED mean of the survivors summed
+    in ORIGINAL source order — which is why ``keep_rule = (0 <= r < cnt)``
+    (the f=0 trim) is bitwise the plain masked neighbor mean.
+    Non-neighbors are masked to +inf, so they occupy the ranks at and above
+    ``cnt`` and no admissible rule can keep them.  A receiver whose whole
+    neighborhood is screened away (past the breakdown point on a traced
+    graph, unverifiable at build time) holds its own value."""
+    m = a.shape[0]
+    sup = _support(a)
+    cnt = sup.sum(axis=1)                                    # (M,) int
+    supb = sup.reshape((m, m) + (1,) * (leaf.ndim - 1))
+    vals = jnp.broadcast_to(leaf[None], (m,) + leaf.shape)   # (M, M, *w)
+    big = jnp.where(supb, vals, jnp.asarray(jnp.inf, leaf.dtype))
+    order = jnp.argsort(big, axis=1)
+    rank = jnp.argsort(order, axis=1)
+    cntb = cnt.reshape((m,) + (1,) * leaf.ndim)
+    keep = keep_rule(rank, cntb) & supb
+    kept = jnp.where(keep, vals, jnp.zeros((), leaf.dtype))
+    kcnt = keep.sum(axis=1)
+    out = kept.sum(axis=1) / jnp.maximum(kcnt, 1).astype(leaf.dtype)
+    return jnp.where(kcnt > 0, out, leaf)
+
+
+def trimmed_mean_mix(a: jax.Array, tree: Any, f: int) -> Any:
+    """One coordinatewise-trimmed-mean screening round: per receiver and
+    coordinate, discard the ``f`` largest and ``f`` smallest supported
+    values and average the rest (unweighted).  Tolerates up to ``f``
+    arbitrary values per neighborhood as long as ``2f < c``; with ``f=0``
+    it IS the plain masked neighbor mean, bitwise."""
+    if f < 0:
+        raise ValueError(f"trimmed mean needs f >= 0, got {f}")
+    return jax.tree.map(
+        lambda leaf: _rank_keep_mean(
+            a, leaf, lambda r, c: (r >= f) & (r < c - f)), tree)
+
+
+def median_mix(a: jax.Array, tree: Any) -> Any:
+    """One coordinatewise-median screening round: per receiver and
+    coordinate, the median of the supported values (mean of the two middle
+    ranks when the neighborhood is even) — trimmed mean pushed to its
+    breakdown point ``f < c/2`` without choosing f."""
+    return jax.tree.map(
+        lambda leaf: _rank_keep_mean(
+            a, leaf, lambda r, c: (r >= (c - 1) // 2) & (r <= c // 2)),
+        tree)
+
+
+def clip_weights(a: jax.Array, tree: Any,
+                 clip_mult: float = 1.0) -> jax.Array:
+    """Self-centered clipping as an EFFECTIVE per-round mixing matrix.
+
+    Each receiver ``i`` clips every neighbor's innovation against its own
+    model: the off-diagonal weight becomes ``a[i,j] * min(1, tau_i /
+    ||x_j - x_i||)`` and the clipped-away mass returns to the self-loop,
+    so a round is the ordinary einsum ``mix_pytree(C, tree)`` and composes
+    with everything that consumes a mixing matrix.  The threshold ``tau_i``
+    is ``clip_mult x`` the MEDIAN tree-wide distance from ``i`` to its
+    supported neighbors — self-annealing: as the honest servers contract,
+    tau shrinks with them and the clip bites harder on anything still far
+    away (the attacker), while at ``tau -> inf`` the round degenerates to
+    the exact weighted gossip.  Distances are tree-wide l2 norms via the
+    Gram identity (one (M, M) accumulation, no (M, M, *w) tensor)."""
+    m = a.shape[0]
+    off = _support(a) & ~jnp.eye(m, dtype=bool)
+    d2 = jnp.zeros((m, m), jnp.float32)
+    for leaf in jax.tree.leaves(tree):
+        x = leaf.reshape(m, -1).astype(jnp.float32)
+        g = x @ x.T
+        sq = jnp.diagonal(g)
+        d2 = d2 + (sq[:, None] + sq[None, :] - 2.0 * g)
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    masked = jnp.where(off, dist, jnp.inf)
+    srt = jnp.sort(masked, axis=1)
+    k = off.sum(axis=1)
+    med = jnp.take_along_axis(
+        srt, jnp.maximum((k - 1) // 2, 0)[:, None], axis=1)[:, 0]
+    tau = clip_mult * med                    # inf for an isolated receiver
+    fac = jnp.where(dist > 0.0,
+                    jnp.minimum(1.0, tau[:, None] / jnp.maximum(dist, 1e-30)),
+                    1.0)
+    c_off = jnp.where(off, a.astype(jnp.float32) * fac, 0.0)
+    return c_off + jnp.diag(1.0 - c_off.sum(axis=1))
+
+
+def clipped_mix(a: jax.Array, tree: Any, clip_mult: float = 1.0) -> Any:
+    """One clipped-gossip round: build the state-dependent effective matrix
+    and apply the ordinary weighted round with it."""
+    return mix_pytree(clip_weights(a, tree, clip_mult), tree)
+
+
+def gossip_scan_trimmed(a: jax.Array, tree: Any, t_server: int,
+                        f: int) -> Any:
+    """T_S rounds of trimmed-mean screening (per-leaf fori_loop, mirroring
+    ``gossip_scan``'s schedule — leaves screen independently)."""
+    if f < 0:
+        raise ValueError(f"trimmed mean needs f >= 0, got {f}")
+    if t_server == 0:
+        return tree
+
+    def leaf_loop(leaf):
+        return jax.lax.fori_loop(
+            0, t_server,
+            lambda _, w: _rank_keep_mean(
+                a, w, lambda r, c: (r >= f) & (r < c - f)), leaf)
+
+    return jax.tree.map(leaf_loop, tree)
+
+
+def gossip_scan_median(a: jax.Array, tree: Any, t_server: int) -> Any:
+    """T_S rounds of coordinatewise-median screening."""
+    if t_server == 0:
+        return tree
+
+    def leaf_loop(leaf):
+        return jax.lax.fori_loop(
+            0, t_server,
+            lambda _, w: _rank_keep_mean(
+                a, w, lambda r, c: (r >= (c - 1) // 2) & (r <= c // 2)),
+            leaf)
+
+    return jax.tree.map(leaf_loop, tree)
+
+
+def gossip_scan_clipped(a: jax.Array, tree: Any, t_server: int,
+                        clip_mult: float = 1.0) -> Any:
+    """T_S rounds of clipped gossip.  The effective matrix depends on the
+    WHOLE tree's current state (tree-wide distances), so rounds cannot run
+    per leaf: a plain unrolled loop over the (static) round count."""
+    for _ in range(t_server):
+        tree = clipped_mix(a, tree, clip_mult)
+    return tree
+
+
+class TrimmedMeanBackend(ConsensusBackend):
+    """Coordinatewise trimmed-mean gossip (``gossip_scan_trimmed``).
+
+    Screens up to ``f`` arbitrary (Byzantine) values per neighborhood per
+    coordinate; construction fails fast when the STATIC graph is already
+    past the breakdown point (some supported neighborhood, self included,
+    has ``c <= 2f`` values — the screen would discard everything).  A
+    traced per-epoch ``A_p`` cannot be checked at build time; a fully
+    screened receiver then holds its own value (see ``_rank_keep_mean``).
+
+    ``f == 0`` requests no screening at all, so the backend degenerates to
+    the EXACT weighted schedule (``gossip_scan``) — bitwise identical to
+    the unprotected ``'gossip'`` backend, the identity the adversarial
+    suite (``tests/test_robust.py``) pins."""
+
+    name = "trimmed_mean"
+    supports_directed = False
+    robust = True
+
+    def __init__(self, a_static, t_server, *, f: int = 1):
+        super().__init__(a_static, t_server)
+        if f < 0:
+            raise ValueError(f"trimmed mean needs f >= 0, got {f}")
+        self.f = f
+        if a_static is not None and f > 0:
+            a = np.asarray(a_static)
+            cnt = int(((a > 0) | np.eye(a.shape[0], dtype=bool))
+                      .sum(axis=1).min())
+            if cnt <= 2 * f:
+                raise ValueError(
+                    f"trimmed_mean with f={f} is past its breakdown point "
+                    f"on this graph: a server has only {cnt} supported "
+                    f"values (self included) but the screen discards "
+                    f"2f={2 * f} per coordinate and needs > 2f survivors' "
+                    f"worth of margin; lower f or densify the graph")
+
+    def _mix(self, tree, a):
+        if self.f == 0:
+            return gossip_scan(a, tree, self.t_server)
+        return gossip_scan_trimmed(a, tree, self.t_server, self.f)
+
+
+class MedianBackend(ConsensusBackend):
+    """Coordinatewise-median gossip (``gossip_scan_median``): the maximal
+    screen — tolerates any minority of attackers per neighborhood
+    (breakdown point f < c/2) at the cost of discarding the most
+    information per round."""
+
+    name = "median"
+    supports_directed = False
+    robust = True
+
+    def _mix(self, tree, a):
+        return gossip_scan_median(a, tree, self.t_server)
+
+
+class ClippedGossipBackend(ConsensusBackend):
+    """Clipped gossip (``gossip_scan_clipped``): neighbor innovations
+    norm-clipped against the receiver's own model via the effective matrix
+    ``clip_weights``, so each round remains the weighted einsum and the
+    honest-and-agreed fixed point is EXACTLY preserved (an all-equal tree
+    has zero innovations and C == A).  Unlike the rank screens it keeps
+    the Eq.-6 weights for everything inside the clip radius."""
+
+    name = "clipped"
+    supports_directed = False
+    robust = True
+
+    def __init__(self, a_static, t_server, *, clip_mult: float = 1.0):
+        super().__init__(a_static, t_server)
+        if not clip_mult > 0.0:
+            raise ValueError(f"clipped needs clip_mult > 0, got {clip_mult}")
+        self.clip_mult = clip_mult
+
+    def _mix(self, tree, a):
+        return gossip_scan_clipped(a, tree, self.t_server,
+                                   clip_mult=self.clip_mult)
+
+
 class ShardMapBackend(ConsensusBackend):
     """The production explicit-collective path (``make_gossip_shard_map``):
     blocked u16-wire all-gathers over the mesh's server axis, with the
@@ -1447,6 +1703,13 @@ class CompressedBackend(ConsensusBackend):
             raise ValueError(f"wire must be 'simulated' or 'physical', "
                              f"got {wire!r}")
         if wire == "physical":
+            if getattr(inner, "robust", False):
+                raise ValueError(
+                    f"wire='physical' ships quantized codes through the "
+                    f"collectives, but the robust screening backend "
+                    f"{inner.name!r} must rank/clip every neighbor's "
+                    f"plaintext values before mixing — robust gossip "
+                    f"composes with wire='simulated' compression only")
             if not isinstance(compressor, _compressors.StochasticQuantizer):
                 raise ValueError(
                     "wire='physical' ships quantized codes through the "
@@ -1571,7 +1834,7 @@ class CompressedBackend(ConsensusBackend):
 
 
 BACKEND_MODES = ("gossip", "gossip_blocked", "collapsed", "chebyshev",
-                 "exact_mean")
+                 "exact_mean", "trimmed_mean", "median", "clipped")
 
 
 def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
@@ -1583,6 +1846,10 @@ def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
                  wire: str = "simulated") -> ConsensusBackend:
     """Map a ``DFLConfig.consensus_mode`` string to a ``ConsensusBackend``.
 
+    The robust screens take an optional spec argument after a colon:
+    ``"trimmed_mean[:f]"`` (default f=1) and ``"clipped[:mult]"`` (default
+    clip_mult=1.0); ``"median"`` is parameter-free.
+
     ``compression`` other than ``"none"`` (a ``comm.compressors.
     make_compressor`` spec, e.g. ``"int8"`` / ``"top_k:0.05"``) wraps the
     resolved backend in a ``CompressedBackend``, optionally with error
@@ -1592,6 +1859,7 @@ def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
     needs a mesh and per-leaf PartitionSpecs, so the launcher builds it
     directly (``launch.sharding.fl_consensus_backend``, which applies the
     same compression wrap)."""
+    base, _, arg = mode.partition(":")
     if mode == "gossip":
         backend = GossipBackend(a_static, t_server)
     elif mode == "gossip_blocked":
@@ -1604,6 +1872,25 @@ def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
                                    rounds=chebyshev_rounds)
     elif mode == "exact_mean":
         backend = ExactMeanBackend(a_static, t_server)
+    elif base == "trimmed_mean":
+        if arg and not arg.isdigit():
+            raise ValueError(f"bad trimmed_mean spec {mode!r}: expected "
+                             f"'trimmed_mean[:f]' with integer f >= 0")
+        backend = TrimmedMeanBackend(a_static, t_server,
+                                     f=int(arg) if arg else 1)
+    elif base == "median":
+        if arg:
+            raise ValueError(f"bad median spec {mode!r}: the coordinatewise "
+                             f"median takes no parameter")
+        backend = MedianBackend(a_static, t_server)
+    elif base == "clipped":
+        try:
+            clip_mult = float(arg) if arg else 1.0
+        except ValueError:
+            raise ValueError(f"bad clipped spec {mode!r}: expected "
+                             f"'clipped[:mult]' with float mult > 0")
+        backend = ClippedGossipBackend(a_static, t_server,
+                                       clip_mult=clip_mult)
     else:
         raise ValueError(f"unknown consensus mode {mode!r}")
     if compression != "none":

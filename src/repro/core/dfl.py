@@ -26,6 +26,10 @@ the natural privacy-preserving choice — moments never leave the client).
     "exact_mean"     idealised sigma_A=0 limit == hierarchical FL with a root
                      aggregator (the baseline the paper argues against)
     "none"           no inter-server communication (fully local ablation)
+    "trimmed_mean[:f]" / "median" / "clipped[:mult]"
+                     Byzantine-robust neighbor screening in place of the
+                     weighted round (consensus.py; pair with
+                     DFLConfig.byzantine to actually be attacked)
 
 Execution is delegated to a ``consensus.ConsensusBackend`` resolved from
 ``consensus_mode`` (or injected via ``DFLConfig.consensus_backend`` for
@@ -176,6 +180,13 @@ class DFLConfig:
     #                (gossip / gossip_blocked / shard_map).
     # Ignored when compression == "none".
     wire: str = "simulated"
+    # Adversarial-server scenario (schedule.ByzantineSchedule or None):
+    # marked servers replace their Eq.-4 aggregate with an attack
+    # (apply_byzantine) BEFORE the consensus period, so the robust
+    # consensus backends (trimmed_mean / median / clipped) are what stands
+    # between one attacker and the whole federation.  Dynamic mode only:
+    # the per-epoch attack codes ride the EpochSchedule operand.
+    byzantine: Optional[Any] = None
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +257,54 @@ def carry_forward(mask: jax.Array, new_tree: Any, old_tree: Any) -> Any:
         return nl
 
     return jax.tree.map(leaf, new_tree, old_tree)
+
+
+def apply_byzantine(server_tree: Any, codes: jax.Array, key: jax.Array,
+                    attacks: Tuple[Any, ...]) -> Any:
+    """Inject the scheduled attacks into the pre-gossip server tree.
+
+    ``codes`` is the traced (M,) int32 per-row attack marking of
+    ``schedule.ByzantineSchedule.codes`` (0 = honest, k+1 = attacks[k]);
+    ``attacks`` is the STATIC tuple of ``schedule.ByzantineAttack`` — the
+    attack kinds/scales are compiled in, only who attacks is traced, so
+    one program serves every epoch's attacker set.  Pure function of
+    ``(tree, codes, key)``: honest rows pass through bitwise untouched.
+
+    Attack semantics (per ``schedule.ByzantineAttack``): ``sign_flip``
+    transmits ``-scale * w``; ``scaled_noise`` transmits ``w + scale *
+    N(0, I)`` (one fresh key per leaf); ``inlier_shift`` transmits the
+    honest coordinatewise envelope's ``scale``-quantile corner ``h_min +
+    scale * (h_max - h_min)`` — a collusion that stays inside the honest
+    range (computed over ``codes == 0`` rows; if no honest row exists the
+    attacker keeps its value, guarding the inf - inf NaN)."""
+    honest = codes == 0
+
+    def leaf_fn(leaf, leaf_key):
+        out = leaf
+        code_b = codes.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        for idx, atk in enumerate(attacks):
+            if atk.kind == "sign_flip":
+                attacked = (-atk.scale) * leaf
+            elif atk.kind == "scaled_noise":
+                attacked = leaf + atk.scale * jax.random.normal(
+                    leaf_key, leaf.shape, leaf.dtype)
+            else:  # inlier_shift
+                hmask = honest.reshape((-1,) + (1,) * (leaf.ndim - 1))
+                hmin = jnp.where(hmask, leaf,
+                                 jnp.asarray(jnp.inf, leaf.dtype)).min(0)
+                hmax = jnp.where(hmask, leaf,
+                                 jnp.asarray(-jnp.inf, leaf.dtype)).max(0)
+                target = jnp.broadcast_to(
+                    hmin + atk.scale * (hmax - hmin), leaf.shape)
+                attacked = jnp.where(honest.any(), target, leaf)
+            out = jnp.where(code_b == idx + 1, attacked.astype(leaf.dtype),
+                            out)
+        return out
+
+    leaves, treedef = jax.tree.flatten(server_tree)
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten(
+        [leaf_fn(l, k) for l, k in zip(leaves, keys)])
 
 
 def _tree_sq_norm(tree: Any) -> jax.Array:
@@ -395,6 +454,15 @@ def build_dfl_epoch_step(
                 f"consensus backend {backend.name!r} cannot consume a "
                 f"traced per-epoch A_p; use 'gossip', 'gossip_blocked', "
                 f"'collapsed', 'chebyshev' or a shard_map backend")
+    # byzantine injection: the attack kinds/scales are static facts of the
+    # compiled program; WHO attacks is the traced EpochSchedule.byz operand
+    byz_attacks = (tuple(cfg.byzantine.attacks)
+                   if cfg.byzantine is not None else ())
+    if byz_attacks and not cfg.dynamic:
+        raise ValueError(
+            "DFLConfig.byzantine needs dynamic=True: the per-epoch "
+            "attacker codes ride the EpochSchedule operand (use "
+            "engine.make_engine, which sets it)")
     # compression wire state: static facts of the compiled program (when
     # False, nothing below touches the rng stream or the residual — the
     # compression="none" program is bitwise the pre-compression one)
@@ -545,6 +613,14 @@ def build_dfl_epoch_step(
 
         # ---- 2. masked aggregation (Eq. 4 over the participating set) ----
         server = masked_server_mean(params, mask)
+
+        # ---- 2b. adversarial injection: marked servers replace their
+        # aggregate BEFORE gossip — this is the message the federation
+        # actually receives, and what robust consensus must screen ----
+        if byz_attacks:
+            rng, bkey = jax.random.split(rng)
+            server = apply_byzantine(server, getattr(sched, "byz"), bkey,
+                                     byz_attacks)
 
         # ---- 3. consensus over this epoch's graph A_p (Eq. 5/7) ----
         if compressed:

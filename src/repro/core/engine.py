@@ -71,6 +71,10 @@ class DynamicFederationEngine:
         # fail at construction, not mid-run: every fault event must name an
         # ORIGINAL server id (data shards are keyed by original identity)
         self.faults.validate(self.topo.num_servers)
+        # ... and the byzantine populations must leave an honest majority
+        # candidate (at least one honest server)
+        if self.cfg.byzantine is not None:
+            self.cfg.byzantine.validate(self.topo.num_servers)
         if (self.faults.events and self.cfg.consensus_backend is not None
                 and getattr(self.cfg.consensus_backend, "mesh_bound", False)):
             raise ValueError(
@@ -237,8 +241,19 @@ class DynamicFederationEngine:
         batches = batch_fn(epoch, tuple(self.alive))
         lam2 = (jnp.float32(tp.lambda_2(a_np)) if self._needs_spectral
                 else None)
+        byz_np = None
+        if self.cfg.byzantine is not None and self.cfg.byzantine.attacks:
+            # per-row attack codes over the CURRENT federation: original
+            # attacker ids (stable across surgery — drawn over the
+            # ORIGINAL size) mapped through the alive row order.  The
+            # array is passed every epoch, all-zero included, so the
+            # compiled step's operand structure never changes.
+            byz_np = self.cfg.byzantine.codes(epoch, tuple(self.alive),
+                                              self._initial_m)
         sched = EpochSchedule(jnp.asarray(mask_np, jnp.float32),
-                              jnp.asarray(a_np, jnp.float32), lam2)
+                              jnp.asarray(a_np, jnp.float32), lam2,
+                              None if byz_np is None
+                              else jnp.asarray(byz_np, jnp.int32))
         epoch_wire_bytes = None
         if self._bytes is not None:
             row_bytes, elems = self._wire_row_bytes(state)
@@ -257,6 +272,10 @@ class DynamicFederationEngine:
             "num_servers": float(m),
             "sigma_prod": sigma_prod,
         }
+        if byz_np is not None:
+            # fraction of the CURRENT federation attacking this epoch —
+            # the honest-metric masks in tests/benchmarks key off this
+            record["byzantine"] = float((byz_np > 0).mean())
         if state.psum_weight is not None:
             # ratio-consensus conditioning: a terminal weight near 0 means
             # that server's num/w read-out amplified rounding error
@@ -317,8 +336,10 @@ def make_engine(topology: FLTopology, loss_fn: dfl.LossFn,
 
     ``history`` maps metric name -> per-epoch list (loss, disagreement,
     drift, participation, num_servers, sigma_prod, psum_min_weight under
-    ``mixing="push_sum"``, and wire_mb / wire_ratio under compressed
-    consensus — ``DFLConfig.compression``)."""
+    ``mixing="push_sum"``, wire_mb / wire_ratio under compressed
+    consensus — ``DFLConfig.compression`` — and byzantine, the attacking
+    fraction, under a ``byzantine=ByzantineSchedule(...)`` keyword, which
+    forwards to ``DFLConfig.byzantine`` like any other config field)."""
     cfg = dfl.DFLConfig(topology=topology, consensus_mode=consensus_mode,
                         dynamic=True, **cfg_kw)
     return DynamicFederationEngine(

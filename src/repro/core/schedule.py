@@ -20,6 +20,18 @@ given shape:
 * ``FaultSchedule``       — scheduled server failure/rejoin events, executed
   between epochs via ``FLTopology.drop_server`` / ``rejoin_server`` graph
   surgery (shapes change, so these live on the host; see ``engine.py``).
+* ``ByzantineSchedule``   — per-epoch ADVERSARIAL server sets: which servers
+  replace their Eq.-4 aggregate with an attack (sign flip, scaled noise,
+  inlier-shift collusion) before gossip.  The schedule marks attackers on
+  the host (``codes``); the attack itself is the pure traced function
+  ``dfl.apply_byzantine`` on the pre-gossip server tree, defended by the
+  robust consensus backends (``consensus.TrimmedMeanBackend`` & co).
+* trace-driven participation — ``ParticipationSchedule(kind="trace")``
+  replays an explicit ``(E, M, N)`` availability trace verbatim (diurnal
+  cycles, correlated churn — everything i.i.d. Bernoulli masks cannot
+  express).  ``diurnal_trace`` synthesises one;
+  ``save_participation_trace`` / ``load_participation_trace`` round-trip
+  it through a JSONL availability log bitwise.
 
 All sampling is deterministic in ``(seed, epoch)`` so runs are reproducible
 and a schedule can be replayed or sliced without storing mask traces.
@@ -27,6 +39,7 @@ and a schedule can be replayed or sliced without storing mask traces.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -45,11 +58,18 @@ class EpochSchedule(NamedTuple):
                 consensus backends (``consensus.ChebyshevBackend``) consume
                 alongside the traced matrix; ``None`` for every other
                 backend (the engine only computes it when asked for).
+    ``byz``:    optional (M,) int32 per-server attack codes for this epoch
+                (0 = honest, k+1 = ``ByzantineSchedule.attacks[k]``), in
+                CURRENT row order (original attacker ids mapped through the
+                engine's alive list, so surgery and attacks compose).
+                ``None`` whenever no ``ByzantineSchedule`` is configured —
+                the compiled step then contains no injection code at all.
     """
 
     mask: np.ndarray
     mixing: np.ndarray
     lam2: Optional[np.ndarray] = None
+    byz: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
@@ -67,6 +87,13 @@ class ParticipationSchedule:
       ``fixed_k``     exactly ``k`` uniformly-sampled clients per server.
       ``round_robin`` deterministic rotation of ``k`` clients per server —
                       the scheduling-policy baseline of Abdelghany et al.
+      ``trace``       replay an explicit ``(E, M, N)`` 0/1 availability
+                      trace VERBATIM (epoch ``p`` uses row ``p mod E``) —
+                      diurnal cycles and correlated churn instead of i.i.d.
+                      masks.  The trace is authoritative: no min_per_server
+                      top-up is applied (a replayed log must reproduce
+                      bitwise — ``load_participation_trace`` round-trip),
+                      so a fully-idle server simply carries its model.
 
     ``min_per_server`` forces at least that many participants per server
     (sampled uniformly from the idle ones) so the masked Eq. 4 mean stays
@@ -79,20 +106,48 @@ class ParticipationSchedule:
     k: Optional[int] = None
     min_per_server: int = 1
     seed: int = 0
+    # the (E, M, N) availability trace of kind="trace" — excluded from
+    # eq/hash (ndarray __eq__ is elementwise and would break the frozen
+    # dataclass contract) and from repr (it can be thousands of epochs)
+    trace: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self):
-        if self.kind not in ("full", "bernoulli", "fixed_k", "round_robin"):
+        if self.kind not in ("full", "bernoulli", "fixed_k", "round_robin",
+                             "trace"):
             raise ValueError(f"unknown participation kind {self.kind!r}")
         if self.kind == "bernoulli" and not 0.0 <= self.rate <= 1.0:
             raise ValueError("rate must be in [0, 1]")
         if self.kind in ("fixed_k", "round_robin") and not self.k:
             raise ValueError(f"kind={self.kind!r} needs k >= 1")
+        if self.kind == "trace":
+            if self.trace is None:
+                raise ValueError("kind='trace' needs a trace array — "
+                                 "generate one with diurnal_trace or load "
+                                 "a log with load_participation_trace")
+            t = np.asarray(self.trace)
+            if t.ndim != 3 or t.shape[0] < 1:
+                raise ValueError(f"trace must be (E, M, N) with E >= 1, "
+                                 f"got shape {t.shape}")
+            if not np.isin(t, (0, 1)).all():
+                raise ValueError("trace entries must be 0/1 availability")
+        elif self.trace is not None:
+            raise ValueError(f"kind={self.kind!r} does not take a trace")
 
     def mask(self, epoch: int, m: int, n: int) -> np.ndarray:
         """(M, N) float32 0/1 mask for ``epoch`` — deterministic in
         (seed, epoch), independent of call order."""
         if self.kind == "full":
             return np.ones((m, n), np.float32)
+        if self.kind == "trace":
+            t = np.asarray(self.trace)
+            if t.shape[1:] != (m, n):
+                raise ValueError(
+                    f"participation trace is shaped for a "
+                    f"({t.shape[1]}, {t.shape[2]}) federation but this run "
+                    f"has (M, N) = ({m}, {n}) — traces replay availability "
+                    f"of SPECIFIC clients and cannot be resized")
+            return t[epoch % t.shape[0]].astype(np.float32)
         rng = np.random.default_rng((self.seed, epoch))
         if self.kind == "bernoulli":
             mask = (rng.random((m, n)) < self.rate)
@@ -115,12 +170,85 @@ class ParticipationSchedule:
         return mask.astype(np.float32)
 
     def expected_rate(self, n: int) -> float:
-        """Mean fraction of participating clients (for reporting)."""
+        """Mean fraction of participating clients (for reporting).  For
+        kind='trace' this is EXACT — the empirical mean of the replayed
+        trace, since the trace is authoritative (no top-up)."""
         if self.kind == "full":
             return 1.0
+        if self.kind == "trace":
+            return float(np.asarray(self.trace, np.float64).mean())
         if self.kind == "bernoulli":
             return max(self.rate, self.min_per_server / n)
         return min(self.k, n) / n
+
+
+def diurnal_trace(epochs: int, m: int, n: int, *, period: int = 24,
+                  base: float = 0.6, amplitude: float = 0.4,
+                  min_per_server: int = 1, seed: int = 0) -> np.ndarray:
+    """Synthesise an ``(epochs, M, N)`` uint8 availability trace with a
+    diurnal cycle: server ``i``'s clients are available w.p.
+    ``clip(base + amplitude * sin(2 pi (p + phase_i) / period), 0, 1)`` at
+    epoch ``p``, with a uniformly-random per-server phase — correlated
+    within a server (its whole fleet sees the same local time-of-day) and
+    staggered across servers (time zones), the two structures i.i.d.
+    Bernoulli masks cannot express.  ``min_per_server`` participants are
+    topped up deterministically HERE, at generation time, so the emitted
+    trace is replayable verbatim (``ParticipationSchedule(kind='trace')``
+    applies no further top-up)."""
+    if epochs < 1 or m < 1 or n < 1:
+        raise ValueError("diurnal_trace needs epochs, m, n >= 1")
+    rng = np.random.default_rng((seed, 0))
+    phase = rng.uniform(0.0, period, size=m)
+    trace = np.zeros((epochs, m, n), np.uint8)
+    need = min(min_per_server, n)
+    for p in range(epochs):
+        rate = np.clip(base + amplitude
+                       * np.sin(2.0 * np.pi * (p + phase) / period),
+                       0.0, 1.0)                              # (M,)
+        row = rng.random((m, n)) < rate[:, None]
+        for i in range(m):
+            short = need - int(row[i].sum())
+            if short > 0:
+                idle = np.nonzero(~row[i])[0]
+                row[i, rng.choice(idle, size=short, replace=False)] = True
+        trace[p] = row
+    return trace
+
+
+def save_participation_trace(path: str, trace: np.ndarray) -> None:
+    """Write an availability trace as a JSONL log: one line per epoch,
+    ``{"epoch": p, "mask": [[0/1 x N] x M]}`` — the interchange format for
+    replaying real fleet availability logs through
+    ``ParticipationSchedule(kind="trace")``."""
+    t = np.asarray(trace)
+    if t.ndim != 3:
+        raise ValueError(f"trace must be (E, M, N), got shape {t.shape}")
+    with open(path, "w") as f:
+        for p in range(t.shape[0]):
+            f.write(json.dumps({"epoch": p,
+                                "mask": t[p].astype(int).tolist()}) + "\n")
+
+
+def load_participation_trace(path: str) -> np.ndarray:
+    """Read a JSONL availability log back into an ``(E, M, N)`` uint8
+    trace.  Lines must cover epochs 0..E-1 contiguously and in order (a
+    replayed log with a hole would silently shift every later epoch), and
+    every mask must share one (M, N) shape."""
+    rows = []
+    with open(path) as f:
+        for lineno, line in enumerate(filter(str.strip, f)):
+            rec = json.loads(line)
+            if rec.get("epoch") != lineno:
+                raise ValueError(
+                    f"availability log {path!r} is not contiguous: line "
+                    f"{lineno} carries epoch {rec.get('epoch')!r} (expected "
+                    f"{lineno}) — a hole would shift every later epoch")
+            rows.append(np.asarray(rec["mask"], np.uint8))
+    if not rows:
+        raise ValueError(f"availability log {path!r} is empty")
+    if any(r.shape != rows[0].shape or r.ndim != 2 for r in rows):
+        raise ValueError(f"availability log {path!r} mixes mask shapes")
+    return np.stack(rows)
 
 
 # ---------------------------------------------------------------------------
@@ -341,3 +469,146 @@ class FaultSchedule:
     @property
     def last_epoch(self) -> int:
         return max((e.epoch for e in self.events), default=-1)
+
+
+# ---------------------------------------------------------------------------
+# Byzantine (adversarial-server) schedules
+# ---------------------------------------------------------------------------
+
+ATTACK_KINDS = ("sign_flip", "scaled_noise", "inlier_shift")
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineAttack:
+    """One attack population: a ``frac`` fraction of the ORIGINAL servers
+    runs attack ``kind`` with strength ``scale``.
+
+    kinds (the traced injection functions live in ``dfl.apply_byzantine``):
+      ``sign_flip``    transmit ``-scale * w`` — the classic
+                       gradient/model reversal; drags plain gossip's
+                       average toward the mirrored model.
+      ``scaled_noise`` transmit ``w + scale * N(0, I)`` — a noise flooder;
+                       keeps every honest neighbor's post-mix state jittery
+                       so disagreement never reaches tolerance.
+      ``inlier_shift`` COLLUSION that stays inside the honest coordinate
+                       range: transmit ``h_min + scale * (h_max - h_min)``
+                       per coordinate (the honest envelope's ``scale``
+                       quantile corner, computed over the true honest
+                       servers) — undetectable by range checks, biases
+                       plain averaging toward the envelope edge.
+    """
+
+    kind: str
+    frac: float
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ATTACK_KINDS:
+            raise ValueError(f"unknown byzantine attack kind {self.kind!r}; "
+                             f"choose from {ATTACK_KINDS}")
+        if not 0.0 <= self.frac <= 1.0:
+            raise ValueError("attack frac must be in [0, 1]")
+        if self.kind == "inlier_shift" and not 0.0 <= self.scale <= 1.0:
+            raise ValueError("inlier_shift scale is an envelope quantile "
+                             "and must be in [0, 1]")
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineSchedule:
+    """Which servers attack, when — the adversarial sibling of
+    ``FaultSchedule``.
+
+    Attacker identities are drawn over ORIGINAL server ids (one seeded
+    permutation of ``range(M)``, carved into disjoint per-attack sets), so
+    they are stable across drop/rejoin surgery: a server that is both
+    scheduled to attack and currently dropped simply isn't there to
+    attack, and resumes attacking when it rejoins.  With ``resample=True``
+    a fresh permutation is drawn every epoch (a roaming adversary);
+    default is the fixed-adversary model every breakdown-point statement
+    assumes.
+
+    The schedule only MARKS attackers (host-side, ``codes``); the attacks
+    themselves are pure traced functions applied to the pre-gossip server
+    tree by ``dfl.apply_byzantine``, so the compiled epoch step stays one
+    program per federation size."""
+
+    attacks: Tuple[ByzantineAttack, ...] = ()
+    seed: int = 0
+    resample: bool = False
+
+    @staticmethod
+    def parse(spec: str, *, seed: int = 0,
+              resample: bool = False) -> "ByzantineSchedule":
+        """Parse the CLI grammar of ``launch/train.py --byzantine``.
+
+        Grammar (comma-separated attacks, whitespace ignored)::
+
+            spec   ::= "" | attack ("," attack)*
+            attack ::= kind ":" FRAC [":" SCALE]
+            kind   ::= "sign_flip" | "scaled_noise" | "inlier_shift"
+
+        e.g. ``"sign_flip:0.125"`` (1 of 8 servers flips its sign at the
+        default scale 1.0) or ``"sign_flip:0.1,scaled_noise:0.1:10"``.
+        The empty string parses to an empty (all-honest) schedule."""
+        attacks = []
+        for part in filter(None, (s.strip() for s in spec.split(","))):
+            fields = part.split(":")
+            if len(fields) not in (2, 3):
+                raise ValueError(f"bad byzantine spec {part!r}: expected "
+                                 f"'kind:FRAC[:SCALE]'")
+            try:
+                frac = float(fields[1])
+                scale = float(fields[2]) if len(fields) == 3 else 1.0
+            except ValueError:
+                raise ValueError(f"bad byzantine spec {part!r}: FRAC and "
+                                 f"SCALE must be numbers")
+            attacks.append(ByzantineAttack(fields[0], frac, scale))
+        return ByzantineSchedule(tuple(attacks), seed=seed,
+                                 resample=resample)
+
+    def counts(self, m: int) -> Tuple[int, ...]:
+        """Attackers per attack at federation size ``m`` (rounded)."""
+        return tuple(int(round(a.frac * m)) for a in self.attacks)
+
+    def validate(self, num_servers: int) -> None:
+        """Fail at engine construction when the attack populations don't
+        fit: the per-attack sets are disjoint, so their total size must
+        leave at least one honest server (an all-attacker federation has
+        no honest envelope, no honest metric, and nothing to defend)."""
+        total = sum(self.counts(num_servers))
+        if total >= num_servers and total > 0:
+            raise ValueError(
+                f"byzantine schedule marks {total} attackers but the "
+                f"federation has only {num_servers} servers — at least one "
+                f"honest server must remain")
+
+    def attacker_sets(self, epoch: int, m: int) -> Tuple[frozenset, ...]:
+        """Disjoint per-attack sets of ORIGINAL server ids for ``epoch``:
+        one seeded permutation of ``range(m)`` carved sequentially (a
+        fixed permutation unless ``resample``)."""
+        if not self.attacks:
+            return ()
+        key = (self.seed, epoch) if self.resample else (self.seed,)
+        perm = np.random.default_rng(key).permutation(m)
+        sets, lo = [], 0
+        for cnt in self.counts(m):
+            sets.append(frozenset(int(s) for s in perm[lo:lo + cnt]))
+            lo += cnt
+        return tuple(sets)
+
+    def codes(self, epoch: int, alive: Tuple[int, ...],
+              num_servers: int) -> np.ndarray:
+        """Per-CURRENT-ROW attack codes for ``epoch``: 0 = honest, k+1 =
+        ``attacks[k]``.  ``alive`` is the engine's original-id row order,
+        so the codes line up with the state arrays after any surgery;
+        ``num_servers`` is the ORIGINAL federation size — the permutation
+        is always drawn over it, so attacker identities don't shift when
+        a server drops."""
+        sets = self.attacker_sets(epoch, num_servers)
+        out = np.zeros(len(alive), np.int32)
+        for row, orig in enumerate(alive):
+            for k, ids in enumerate(sets):
+                if orig in ids:
+                    out[row] = k + 1
+                    break
+        return out

@@ -22,8 +22,9 @@ import numpy as np
 from repro.checkpoint import Checkpointer
 from repro.configs import get_arch, get_smoke
 from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
-                        init_dfl_state, make_engine, FaultSchedule,
-                        ParticipationSchedule, TopologySchedule)
+                        init_dfl_state, make_engine, ByzantineSchedule,
+                        FaultSchedule, ParticipationSchedule,
+                        TopologySchedule, load_participation_trace)
 from repro.data import DataConfig, FLDataPipeline
 from repro.launch import sharding as shd
 from repro.models import transformer as tf
@@ -221,6 +222,8 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                   straggler_weaken: float = 0.0,
                   asymmetric_drop_prob: float = 0.0,
                   faults: str = "",
+                  byzantine: str = "",
+                  participation_trace: str = "",
                   ckpt_dir: Optional[str] = None,
                   seed: int = 0, log_every: int = 1,
                   attn_impl: str = "reference") -> dict:
@@ -229,7 +232,14 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
     server graphs, scheduled server failure/rejoin (``faults`` is the
     ``"drop:EPOCH:SERVER,rejoin:EPOCH:SERVER"`` CLI syntax), and directed
     degradation (``asymmetric_drop_prob`` fails individual link DIRECTIONS
-    per epoch; pair it with ``mixing="push_sum"`` for unbiased consensus)."""
+    per epoch; pair it with ``mixing="push_sum"`` for unbiased consensus).
+
+    ``byzantine`` is the ``"sign_flip:0.1,scaled_noise:0.1:10"`` attack-spec
+    syntax (``ByzantineSchedule.parse``); pair it with a robust
+    ``consensus_mode`` (``trimmed_mean[:f]`` | ``median`` | ``clipped[:mult]``)
+    to keep the honest servers converging.  ``participation_trace`` replays a
+    recorded JSONL availability log (``load_participation_trace``) instead of
+    sampling participation stochastically."""
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
         arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
         seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
@@ -238,7 +248,10 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
         consensus_backend, consensus_mode, topo, params,
         compression=compression, error_feedback=error_feedback, wire=wire)
 
-    if participation_rate >= 1.0:
+    if participation_trace:
+        part = ParticipationSchedule(
+            kind="trace", trace=load_participation_trace(participation_trace))
+    elif participation_rate >= 1.0:
         part = ParticipationSchedule()                     # full
     elif participation_kind == "bernoulli":
         part = ParticipationSchedule(kind="bernoulli",
@@ -272,7 +285,10 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                          compression=compression,
                          error_feedback=error_feedback, wire=wire,
                          participation=part, topology_schedule=tsched,
-                         faults=FaultSchedule.parse(faults))
+                         faults=FaultSchedule.parse(faults),
+                         byzantine=(ByzantineSchedule.parse(byzantine,
+                                                            seed=seed)
+                                    if byzantine else None))
 
     state = init_dfl_state(engine.cfg, params, optimizer,
                            jax.random.key(seed + 1))
@@ -322,8 +338,11 @@ def build_parser() -> argparse.ArgumentParser:
                    choices=("ring", "complete", "star", "line", "erdos_renyi",
                             "directed_ring", "random_orientation"))
     p.add_argument("--consensus-mode", default="gossip",
-                   choices=("gossip", "gossip_blocked", "collapsed",
-                            "chebyshev", "exact_mean", "none"))
+                   help="inter-server mixing: gossip | gossip_blocked | "
+                        "collapsed | chebyshev | exact_mean | none, or a "
+                        "robust screening variant trimmed_mean[:f] | median "
+                        "| clipped[:mult] (validated by "
+                        "consensus.make_backend)")
     p.add_argument("--consensus-backend", default="auto",
                    choices=CONSENSUS_BACKENDS,
                    help="consensus execution backend: auto (follow "
@@ -377,6 +396,17 @@ def build_parser() -> argparse.ArgumentParser:
                           "--straggler-weaken for per-direction weakening)")
     dyn.add_argument("--faults", default="",
                      help="server fault schedule, e.g. 'drop:5:1,rejoin:9:1'")
+    dyn.add_argument("--byzantine", default="",
+                     help="Byzantine attack schedule, e.g. "
+                          "'sign_flip:0.1' or "
+                          "'sign_flip:0.1,scaled_noise:0.1:10'; attacked "
+                          "servers replace their aggregate before gossip "
+                          "(pair with a robust --consensus-mode)")
+    dyn.add_argument("--participation-trace", default="",
+                     help="JSONL availability-trace path (see "
+                          "schedule.save_participation_trace); replays the "
+                          "recorded per-epoch client masks instead of "
+                          "sampling --participation-rate")
     return p
 
 
@@ -393,7 +423,8 @@ def main() -> None:
               ckpt_dir=args.ckpt_dir)
     dynamic = (args.participation_rate < 1.0 or args.edge_drop_prob > 0.0
                or args.straggler_weaken > 0.0
-               or args.asymmetric_drop_prob > 0.0 or bool(args.faults))
+               or args.asymmetric_drop_prob > 0.0 or bool(args.faults)
+               or bool(args.byzantine) or bool(args.participation_trace))
     if dynamic:
         train_dynamic(args.arch,
                       participation_rate=args.participation_rate,
@@ -401,7 +432,8 @@ def main() -> None:
                       edge_drop_prob=args.edge_drop_prob,
                       straggler_weaken=args.straggler_weaken,
                       asymmetric_drop_prob=args.asymmetric_drop_prob,
-                      faults=args.faults, **kw)
+                      faults=args.faults, byzantine=args.byzantine,
+                      participation_trace=args.participation_trace, **kw)
     else:
         train(args.arch, **kw)
 

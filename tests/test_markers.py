@@ -1,0 +1,76 @@
+"""Test-tier hygiene audit: anything that forks an interpreter or forces
+a >2-device host mesh is too heavy for the fast tier and must carry the
+``slow`` marker (ROADMAP test-tier contract).  The audit is an AST walk
+over the test files themselves, so a new unmarked subprocess test fails
+HERE with a pointed message rather than silently bloating CI."""
+
+import ast
+import pathlib
+
+TESTS = pathlib.Path(__file__).parent
+# source fragments that mean "heavier than the fast tier": interpreter
+# forks and forced multi-device host platforms (the subprocess payload
+# strings live at module level, but the spawning call is in the function)
+HEAVY_TOKENS = ("subprocess.run", "subprocess.Popen", "subprocess.call",
+                "check_output", "xla_force_host_platform_device_count")
+
+
+def _has_slow_mark(fn: ast.FunctionDef, module_marked: bool) -> bool:
+    if module_marked:
+        return True
+    for dec in fn.decorator_list:
+        node = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(node, ast.Attribute) and node.attr == "slow":
+            return True
+    return False
+
+
+def _module_has_slow_pytestmark(tree: ast.Module, src: str) -> bool:
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "pytestmark"
+                        for t in node.targets)):
+            seg = ast.get_source_segment(src, node) or ""
+            if "slow" in seg:
+                return True
+    return False
+
+
+def test_subprocess_and_mesh_tests_carry_slow_marker():
+    offenders = []
+    for path in sorted(TESTS.glob("test_*.py")):
+        if path.name == "test_markers.py":
+            continue
+        src = path.read_text()
+        tree = ast.parse(src)
+        module_marked = _module_has_slow_pytestmark(tree, src)
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and node.name.startswith("test_")):
+                continue
+            seg = ast.get_source_segment(src, node) or ""
+            if not any(tok in seg for tok in HEAVY_TOKENS):
+                continue
+            if not _has_slow_mark(node, module_marked):
+                offenders.append(f"{path.name}::{node.name}")
+    assert not offenders, (
+        "these tests spawn a subprocess or force a multi-device host mesh "
+        "but lack @pytest.mark.slow (fast tier must stay light): "
+        + ", ".join(offenders))
+
+
+def test_audit_actually_sees_the_known_heavy_tests():
+    """Anti-rot guard: the audit's token scan must still FIND the known
+    subprocess-based suites (else a refactor silently blinded it)."""
+    hits = 0
+    for path in sorted(TESTS.glob("test_*.py")):
+        if path.name == "test_markers.py":
+            continue
+        src = path.read_text()
+        for node in ast.walk(ast.parse(src)):
+            if (isinstance(node, ast.FunctionDef)
+                    and node.name.startswith("test_")
+                    and any(tok in (ast.get_source_segment(src, node) or "")
+                            for tok in HEAVY_TOKENS)):
+                hits += 1
+    assert hits >= 5, f"marker audit only found {hits} heavy tests"

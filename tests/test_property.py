@@ -138,3 +138,86 @@ def test_flash_attention_property(seed, sq, extra, h, group, causal):
     ref = attention_ref(q, k, v, causal=causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# robust (Byzantine-screening) gossip invariants
+# ---------------------------------------------------------------------------
+
+
+def _distinct_int_tree(seed, m, d):
+    """(m, d) float32 leaf of DISTINCT small integers: integer-valued f32
+    sums are exact and ties are impossible, so rank screens are testable
+    bitwise."""
+    rng = np.random.default_rng(seed)
+    vals = rng.choice(4096, size=m * d, replace=False).astype(np.float32)
+    vals -= 2048.0
+    return jnp.asarray(vals.reshape(m, d))
+
+
+@given(seed=st.integers(0, 99), m=st.integers(3, 8), d=st.integers(1, 6),
+       f=st.integers(0, 1),
+       kind=st.sampled_from(["ring", "complete", "star"]),
+       perm_seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_robust_screens_are_permutation_equivariant(seed, m, d, f, kind,
+                                                    perm_seed):
+    """Relabelling the servers commutes with the screen: mixing the
+    permuted state on the conjugated matrix equals permuting the mixed
+    output — for the trimmed mean (when the graph is inside its breakdown
+    point) and the median, bitwise."""
+    adj = tp.build_graph(kind, m)
+    a = jnp.asarray(tp.metropolis_weights(adj), jnp.float32)
+    w = _distinct_int_tree(seed, m, d)
+    perm = np.random.default_rng(perm_seed).permutation(m)
+    pa = a[jnp.ix_(perm, perm)]
+    pw = w[perm]
+    cnt = int((np.asarray(adj) > 0).sum(1).min()) + 1   # + self
+    if cnt > 2 * f:
+        out = np.asarray(cns.trimmed_mean_mix(a, {"w": w}, f)["w"])
+        pout = np.asarray(cns.trimmed_mean_mix(pa, {"w": pw}, f)["w"])
+        np.testing.assert_array_equal(pout, out[perm])
+    out = np.asarray(cns.median_mix(a, {"w": w})["w"])
+    pout = np.asarray(cns.median_mix(pa, {"w": pw})["w"])
+    np.testing.assert_array_equal(pout, out[perm])
+
+
+@given(seed=st.integers(0, 99), m=st.integers(2, 8), d=st.integers(1, 8),
+       kind=st.sampled_from(["ring", "complete", "star", "line"]))
+@settings(**SETTINGS)
+def test_trimmed_f0_is_masked_neighbor_mean_bitwise(seed, m, d, kind):
+    """f=0 trims nothing: the screen must reduce to the plain masked
+    neighbor mean (unweighted, self included), summed in source order —
+    bitwise, on any graph."""
+    adj = tp.build_graph(kind, m)
+    a = jnp.asarray(tp.metropolis_weights(adj), jnp.float32)
+    w = jax.random.normal(jax.random.key(seed), (m, d))
+    out = np.asarray(cns.trimmed_mean_mix(a, {"w": w}, 0)["w"])
+    sup = np.asarray((a > 0) | jnp.eye(m, dtype=bool))
+    ref = np.stack([
+        np.asarray(jnp.where(jnp.asarray(sup[i][:, None]), w, 0.0)
+                   .sum(0) / sup[i].sum()) for i in range(m)])
+    np.testing.assert_array_equal(out, ref)
+
+
+@given(seed=st.integers(0, 99), m=st.integers(4, 9), d=st.integers(1, 5),
+       n_atk=st.integers(0, 1), atk_scale=st.floats(-1e6, 1e6))
+@settings(**SETTINGS)
+def test_robust_outputs_stay_in_honest_envelope(seed, m, d, n_atk,
+                                                atk_scale):
+    """With <= f arbitrary attacker values on a complete graph, every
+    honest receiver's trimmed-mean and median output stays inside the
+    coordinatewise honest min/max envelope."""
+    a = jnp.asarray(tp.metropolis_weights(tp.complete_graph(m)), jnp.float32)
+    w = np.asarray(_distinct_int_tree(seed, m, d)).copy()
+    attackers = np.zeros(m, bool)
+    attackers[:n_atk] = True
+    w[attackers] = np.float32(atk_scale)
+    hmin = w[~attackers].min(axis=0)
+    hmax = w[~attackers].max(axis=0)
+    wj = jnp.asarray(w)
+    for mixed in (cns.trimmed_mean_mix(a, {"w": wj}, 1)["w"],
+                  cns.median_mix(a, {"w": wj})["w"]):
+        out = np.asarray(mixed)[~attackers]
+        assert np.all(out >= hmin - 1e-4 * np.maximum(1, np.abs(hmin)))
+        assert np.all(out <= hmax + 1e-4 * np.maximum(1, np.abs(hmax)))

@@ -1,0 +1,332 @@
+"""Adversarial fault-injection suite: Byzantine attacks vs robust gossip.
+
+The headline demonstrations pin the paper-level claim: each injected
+attack (sign-flip, scaled-noise) drives PLAIN gossip past the fig-3
+tolerance (honest max error to w*), while every robust screening variant
+(coordinatewise trimmed mean, coordinatewise median, clipped gossip)
+keeps the honest servers converged under the SAME attack at f below the
+breakdown point — and with f=0 the trimmed-mean path is bitwise the
+unprotected 'gossip' path.  Also covered here: the attack-injection
+machinery (ByzantineSchedule codes through drop/rejoin surgery,
+engine determinism), the trace-driven participation round trip, and the
+refusal surface (physical wire, push-sum, breakdown point, non-dynamic
+configs, malformed specs)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ByzantineAttack, ByzantineSchedule, DFLConfig,
+                        FLTopology, ParticipationSchedule, FaultSchedule,
+                        apply_byzantine, build_dfl_epoch_step,
+                        diurnal_trace, init_dfl_state,
+                        load_participation_trace, make_backend, make_engine,
+                        save_participation_trace, trimmed_mean_mix)
+from repro.core import consensus as cns
+from repro.data import RegressionSpec, make_regression_task
+from repro.optim import sgd
+
+# fig-3 tolerance: honest servers within 0.05 of w* and in consensus
+FIG3_ERR = 0.05
+FIG3_DIS = 1e-3
+
+# calibrated fast-tier sizes: ~1s per 40-epoch run, plain gossip under
+# sign_flip:0.125 lands at err~2.0, the robust variants at err~0.004
+M, N, T_C, T_S, EPOCHS = 8, 3, 15, 8, 40
+GAMMA = 1.5 / (9.0 * T_C)
+
+
+def _setup(seed=0):
+    topo = FLTopology(num_servers=M, clients_per_server=N, t_client=T_C,
+                      t_server=T_S, graph_kind="complete")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.0),
+                                seed=seed)
+    return topo, task
+
+
+def _run(consensus_mode, byz, *, epochs=EPOCHS, seed=0, faults=None):
+    """Run the engine; return (honest max err to w*, honest disagreement,
+    raw server params)."""
+    topo, task = _setup(seed)
+    opt = sgd(GAMMA)
+    engine = make_engine(topo, task["loss_fn"], opt,
+                         consensus_mode=consensus_mode, byzantine=byz,
+                         faults=faults)
+    state = init_dfl_state(engine.cfg, jnp.zeros((2,)), opt,
+                           jax.random.key(seed))
+    state, _ = engine.run(state, epochs, task["batch_fn"])
+    servers = np.asarray(state.client_params[:, 0])
+    honest = np.ones(M, bool)
+    if byz is not None:
+        honest = byz.codes(0, tuple(range(M)), M) == 0
+    h = servers[honest]
+    err = float(np.linalg.norm(h - task["w_star"], axis=-1).max())
+    dis = float(np.linalg.norm(h - h.mean(0), axis=-1).max())
+    return err, dis, servers
+
+
+# ---------------------------------------------------------------------------
+# headline: attacks break plain gossip, not the robust variants
+# ---------------------------------------------------------------------------
+
+
+def test_sign_flip_breaks_plain_gossip_but_not_trimmed_or_clipped():
+    """1 of 8 servers sign-flipping drives plain gossip far past the fig-3
+    tolerance; trimmed-mean AND clipped gossip both converge under the
+    exact same attack (f=1 < breakdown point on the complete graph)."""
+    byz = ByzantineSchedule.parse("sign_flip:0.125")
+    err_plain, _, _ = _run("gossip", byz)
+    assert err_plain > FIG3_ERR, (
+        f"sign-flip should break plain gossip, got err={err_plain}")
+    for mode in ("trimmed_mean:1", "clipped"):
+        err, dis, _ = _run(mode, byz)
+        assert err < FIG3_ERR, f"{mode} under sign-flip: err={err}"
+        assert dis < FIG3_DIS, f"{mode} under sign-flip: dis={dis}"
+
+
+def test_scaled_noise_breaks_plain_gossip_but_not_median():
+    byz = ByzantineSchedule.parse("scaled_noise:0.125:10.0")
+    err_plain, _, _ = _run("gossip", byz)
+    assert err_plain > FIG3_ERR
+    err, dis, _ = _run("median", byz)
+    assert err < FIG3_ERR and dis < FIG3_DIS
+
+
+def test_no_attack_baselines_converge():
+    """All four paths meet the fig-3 tolerance with no attacker — the
+    robust screens cost accuracy only under attack, not in the clear."""
+    for mode in ("gossip", "trimmed_mean:1", "median", "clipped"):
+        err, dis, _ = _run(mode, None, epochs=EPOCHS)
+        assert err < FIG3_ERR, f"{mode} no-attack err={err}"
+        assert dis < FIG3_DIS, f"{mode} no-attack dis={dis}"
+
+
+def test_trimmed_f0_engine_bitwise_identical_to_plain_gossip():
+    """trimmed_mean:0 requests no screening, so the whole engine run must
+    be bit-identical to the unprotected 'gossip' run."""
+    _, _, s_plain = _run("gossip", None, epochs=6)
+    _, _, s_trim = _run("trimmed_mean:0", None, epochs=6)
+    np.testing.assert_array_equal(s_plain, s_trim)
+
+
+def test_inlier_shift_stays_inside_honest_envelope():
+    """The colluding inlier-shift attack lands INSIDE the coordinatewise
+    honest min/max envelope (it cannot be screened as an outlier), yet the
+    trimmed mean's output also stays inside that envelope — the attack
+    biases, it cannot explode."""
+    key = jax.random.key(3)
+    tree = {"w": jax.random.normal(key, (M, 5))}
+    codes = jnp.asarray([1, 0, 0, 0, 1, 0, 0, 0], jnp.int32)
+    atk = (ByzantineAttack("inlier_shift", 0.25, scale=0.8),)
+    attacked = apply_byzantine(tree, codes, jax.random.key(9), atk)
+    honest = np.asarray(codes) == 0
+    ref = np.asarray(tree["w"])
+    out = np.asarray(attacked["w"])
+    hmin = ref[honest].min(axis=0)
+    hmax = ref[honest].max(axis=0)
+    np.testing.assert_array_equal(out[honest], ref[honest])
+    assert np.all(out[~honest] >= hmin - 1e-6)
+    assert np.all(out[~honest] <= hmax + 1e-6)
+    assert np.any(out[~honest] != ref[~honest])  # it did act
+    a = jnp.asarray(np.ones((M, M)) / M, jnp.float32)
+    mixed = np.asarray(trimmed_mean_mix(a, attacked, 1)["w"])
+    assert np.all(mixed >= hmin - 1e-6) and np.all(mixed <= hmax + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attacker bookkeeping: codes, surgery, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_attacker_codes_follow_original_ids_through_surgery():
+    """codes() is keyed to ORIGINAL server ids: dropping an unrelated
+    server must not shift which physical server attacks."""
+    byz = ByzantineSchedule.parse("sign_flip:0.25", seed=7)
+    full = tuple(range(M))
+    base = byz.codes(0, full, M)
+    attackers = {full[i] for i in range(M) if base[i] != 0}
+    victim = next(i for i in full if i not in attackers)
+    alive = tuple(i for i in full if i != victim)
+    after = byz.codes(0, alive, M)
+    assert {alive[i] for i in range(len(alive)) if after[i] != 0} == attackers
+
+
+def test_engine_run_with_byzantine_and_surgery_is_deterministic():
+    """Same seeds, same program: two in-process runs with an attack AND a
+    drop/rejoin fault are bitwise identical."""
+    byz = ByzantineSchedule.parse("sign_flip:0.125", seed=1)
+    faults = FaultSchedule.parse("drop:2:3,rejoin:4:3")
+    _, _, s1 = _run("trimmed_mean:1", byz, epochs=6, faults=faults)
+    _, _, s2 = _run("trimmed_mean:1", byz, epochs=6, faults=faults)
+    np.testing.assert_array_equal(s1, s2)
+
+
+@pytest.mark.slow
+def test_engine_byzantine_seed_determinism_across_processes(tmp_path):
+    """The full adversarial run (ByzantineSchedule + drop/rejoin surgery)
+    reproduces bitwise across two fresh interpreter processes."""
+    prog = textwrap.dedent("""
+        import sys, numpy as np, jax, jax.numpy as jnp
+        from repro.core import (ByzantineSchedule, FLTopology, FaultSchedule,
+                                init_dfl_state, make_engine)
+        from repro.data import RegressionSpec, make_regression_task
+        from repro.optim import sgd
+        topo = FLTopology(num_servers=8, clients_per_server=3, t_client=15,
+                          t_server=8, graph_kind="complete")
+        task = make_regression_task(topo, RegressionSpec(heterogeneity=0.0),
+                                    seed=0)
+        opt = sgd(1.5 / (9.0 * 15))
+        engine = make_engine(topo, task["loss_fn"], opt,
+                             consensus_mode="trimmed_mean:1",
+                             byzantine=ByzantineSchedule.parse(
+                                 "sign_flip:0.125", seed=1),
+                             faults=FaultSchedule.parse(
+                                 "drop:2:3,rejoin:4:3"))
+        state = init_dfl_state(engine.cfg, jnp.zeros((2,)), opt,
+                               jax.random.key(0))
+        state, _ = engine.run(state, 6, task["batch_fn"])
+        np.save(sys.argv[1], np.asarray(state.client_params))
+    """)
+    outs = []
+    for tag in ("a", "b"):
+        out = tmp_path / f"{tag}.npy"
+        env = dict(os.environ,
+                   PYTHONPATH=os.pathsep.join(
+                       [os.path.join(os.path.dirname(__file__), os.pardir,
+                                     "src")]
+                       + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+        subprocess.run([sys.executable, "-c", prog, str(out)], check=True,
+                       env=env)
+        outs.append(np.load(out))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# trace-driven participation: round trip + replay semantics
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrip_bitwise_and_expected_rate(tmp_path):
+    trace = diurnal_trace(12, 4, 3, seed=5)
+    path = tmp_path / "avail.jsonl"
+    save_participation_trace(path, trace)
+    loaded = load_participation_trace(path)
+    np.testing.assert_array_equal(trace, loaded)
+    sched = ParticipationSchedule(kind="trace", trace=loaded)
+    for epoch in range(24):                     # wraps past the trace length
+        np.testing.assert_array_equal(
+            sched.mask(epoch, 4, 3), trace[epoch % 12].astype(np.float32))
+    assert sched.expected_rate(3) == pytest.approx(float(trace.mean()))
+    empirical = np.mean([sched.mask(e, 4, 3) for e in range(12)])
+    assert empirical == pytest.approx(float(trace.mean()))
+
+
+def test_trace_jsonl_is_line_per_epoch(tmp_path):
+    trace = diurnal_trace(3, 2, 2, seed=0)
+    path = tmp_path / "t.jsonl"
+    save_participation_trace(path, trace)
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert [r["epoch"] for r in lines] == [0, 1, 2]
+    np.testing.assert_array_equal(np.asarray(lines[1]["mask"]), trace[1])
+
+
+def test_diurnal_trace_respects_min_per_server():
+    trace = diurnal_trace(40, 5, 4, base=0.05, amplitude=0.0,
+                          min_per_server=1, seed=2)
+    assert trace.shape == (40, 5, 4)
+    assert int(trace.sum(axis=2).min()) >= 1
+
+
+def test_trace_schedule_drives_engine():
+    topo, task = _setup()
+    trace = diurnal_trace(6, M, N, seed=3)
+    part = ParticipationSchedule(kind="trace", trace=trace)
+    opt = sgd(GAMMA)
+    engine = make_engine(topo, task["loss_fn"], opt, participation=part)
+    state = init_dfl_state(engine.cfg, jnp.zeros((2,)), opt,
+                           jax.random.key(0))
+    _, hist = engine.run(state, 6, task["batch_fn"])
+    expect = [float(trace[e].mean()) for e in range(6)]
+    np.testing.assert_allclose(hist["participation"], expect, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# refusal surface
+# ---------------------------------------------------------------------------
+
+
+def test_physical_wire_refuses_robust_inner():
+    topo, _ = _setup()
+    a = topo.mixing_matrix()
+    inner = make_backend("trimmed_mean:1", a, T_S)
+    from repro.comm.compressors import make_compressor
+    with pytest.raises(ValueError, match="plaintext"):
+        cns.CompressedBackend(inner, make_compressor("int8"),
+                              wire="physical")
+
+
+def test_push_sum_refuses_robust_modes():
+    topo, task = _setup()
+    for mode in ("trimmed_mean:1", "median", "clipped"):
+        cfg = DFLConfig(topology=topo, consensus_mode=mode,
+                        mixing="push_sum")
+        with pytest.raises(ValueError, match="ratio-consensus"):
+            build_dfl_epoch_step(cfg, task["loss_fn"], sgd(GAMMA))
+
+
+def test_byzantine_requires_dynamic_engine():
+    topo, task = _setup()
+    cfg = DFLConfig(topology=topo, consensus_mode="gossip",
+                    byzantine=ByzantineSchedule.parse("sign_flip:0.125"))
+    with pytest.raises(ValueError, match="dynamic"):
+        build_dfl_epoch_step(cfg, task["loss_fn"], sgd(GAMMA))
+
+
+def test_trimmed_mean_breakdown_point_fails_fast():
+    """On a 3-server line graph the endpoints see only 2 values; f=1
+    discards 2 per coordinate — past the breakdown point at build time."""
+    topo = FLTopology(num_servers=3, clients_per_server=2, t_client=2,
+                      t_server=2, graph_kind="line")
+    with pytest.raises(ValueError, match="breakdown"):
+        make_backend("trimmed_mean:1", topo.mixing_matrix(), 2)
+
+
+def test_schedule_validation_needs_an_honest_server():
+    with pytest.raises(ValueError):
+        ByzantineSchedule.parse("sign_flip:1.0").validate(4)
+    ByzantineSchedule.parse("sign_flip:0.5").validate(4)  # 2 of 4 is fine
+
+
+def test_parse_rejects_malformed_specs():
+    for bad in ("warp:0.1", "sign_flip", "sign_flip:x",
+                "sign_flip:0.1:y", "sign_flip:2.0",
+                "inlier_shift:0.1:3.0"):
+        with pytest.raises(ValueError):
+            ByzantineSchedule.parse(bad)
+    for bad_mode in ("trimmed_mean:x", "median:3", "clipped:0",
+                     "clipped:x"):
+        with pytest.raises(ValueError):
+            make_backend(bad_mode, np.ones((4, 4)) / 4, 2)
+
+
+def test_trace_schedule_shape_and_kind_validation(tmp_path):
+    trace = diurnal_trace(4, 3, 2, seed=0)
+    sched = ParticipationSchedule(kind="trace", trace=trace)
+    with pytest.raises(ValueError, match="resized"):
+        sched.mask(0, 5, 2)
+    with pytest.raises(ValueError):
+        ParticipationSchedule(kind="trace")          # trace missing
+    with pytest.raises(ValueError):
+        ParticipationSchedule(kind="bernoulli", rate=0.5, trace=trace)
+    path = tmp_path / "bad.jsonl"
+    path.write_text('{"epoch": 1, "mask": [[1]]}\n')
+    with pytest.raises(ValueError):
+        load_participation_trace(path)               # not epoch-contiguous

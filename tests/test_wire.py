@@ -731,6 +731,7 @@ print("OK")
 """
 
 
+@pytest.mark.slow
 def test_shard_map_physical_wire_parity_and_hlo():
     """The tentpole, end to end: the BUCKETED shard_map wire program is
     bitwise the in-graph reference under shared dither (physical ==
