@@ -96,7 +96,8 @@ def bench_fig3_consensus():
     gamma = 0.5 / (9.0 * topo.t_client)
     cfg = DFLConfig(topology=topo)
     opt = sgd(gamma)
-    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt))
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt),
+                   donate_argnums=(0,))
     state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
     batches = (jnp.broadcast_to(x, (topo.t_client,) + x.shape),
                jnp.broadcast_to(y, (topo.t_client,) + y.shape))
@@ -141,7 +142,8 @@ def bench_thm1_epsilon_sweep():
         gamma = 0.4 / (9.0 * t_c)
         cfg = DFLConfig(topology=topo)
         opt = sgd(gamma)
-        step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt))
+        step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt),
+                       donate_argnums=(0,))
         state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
         batches = (jnp.broadcast_to(x, (t_c,) + x.shape),
                    jnp.broadcast_to(y, (t_c,) + y.shape))
@@ -224,10 +226,10 @@ def bench_topology_sweep():
 def bench_kernel_micro():
     from repro.kernels import ops, ref
 
-    key = jax.random.key(0)
+    kq, kkv, kx, kb, kc, kd = jax.random.split(jax.random.key(0), 6)
     seq = S(512, 128)
-    q = jax.random.normal(key, (2, seq, 8, 64))
-    kv = jax.random.normal(key, (2, seq, 2, 64))
+    q = jax.random.normal(kq, (2, seq, 8, 64))
+    kv = jax.random.normal(kkv, (2, seq, 2, 64))
 
     def time_it(fn, *args):
         out = fn(*args)
@@ -244,10 +246,10 @@ def bench_kernel_micro():
     record("kernel_micro", "flash_attn_interpret_ms", round(t_k, 1))
     record("kernel_micro", "flash_attn_jnp_ms", round(t_r, 1))
 
-    xs = jax.random.normal(key, (2, seq, 4, 64))
-    bs = jax.random.normal(key, (2, seq, 1, 128)) * 0.5
-    cs = jax.random.normal(key, (2, seq, 1, 128)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(key, (2, seq, 4)))
+    xs = jax.random.normal(kx, (2, seq, 4, 64))
+    bs = jax.random.normal(kb, (2, seq, 1, 128)) * 0.5
+    cs = jax.random.normal(kc, (2, seq, 1, 128)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(kd, (2, seq, 4)))
     ac = -jnp.exp(jnp.linspace(-1, 1, 4))
     (y_k, _), t_k = time_it(
         lambda *a: ops.ssd_scan(*a, chunk=128), xs, bs, cs, dt, ac)

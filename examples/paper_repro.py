@@ -40,7 +40,8 @@ def main():
     gamma = 0.5 / (lsmooth * topo.t_client)
     optimizer = sgd(gamma)
     cfg = DFLConfig(topology=topo, consensus_mode="gossip")
-    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, optimizer))
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, optimizer),
+                   donate_argnums=(0,))
     state = init_dfl_state(cfg, jnp.zeros((2,)), optimizer, jax.random.key(0))
     batches = (jnp.broadcast_to(x, (topo.t_client,) + x.shape),
                jnp.broadcast_to(y, (topo.t_client,) + y.shape))

@@ -27,7 +27,8 @@ def main():
     gamma = 0.4 / (9.0 * topo.t_client)          # < 1/(L T_C)  (Thm. 1)
     optimizer = sgd(gamma)
     cfg = DFLConfig(topology=topo, consensus_mode="gossip")
-    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, optimizer))
+    step = jax.jit(build_dfl_epoch_step(cfg, loss_fn, optimizer),
+                   donate_argnums=(0,))
     state = init_dfl_state(cfg, jnp.zeros((2,)), optimizer, jax.random.key(0))
 
     batches = (jnp.broadcast_to(x, (topo.t_client,) + x.shape),

@@ -1,0 +1,16 @@
+"""repro.analysis — the static-analysis layer: an AST lint engine with
+project-specific JAX-hygiene rules (``analysis.lint`` + ``analysis.rules``)
+and shared compiled-HLO passes (``analysis.hlo_audit``).
+
+Run it:  ``python -m repro.analysis [--format json] [paths...]`` — exits
+nonzero on findings; per-line ``# repro: ignore[rule]: reason``
+suppressions; ``--contracts`` additionally lowers the ``DFLConfig``
+contract table (``analysis.contracts``).
+
+This package root stays import-light on purpose: ``comm.accounting``
+delegates its HLO parsing to ``analysis.hlo_audit``, so nothing here may
+import ``repro.core``/``repro.comm`` (``analysis.contracts``, which does,
+is imported only by the CLI and the tests)."""
+from repro.analysis import hlo_audit  # noqa: F401
+from repro.analysis.lint import (DEFAULT_ROOTS, Finding, RULES,  # noqa: F401
+                                 lint_file, lint_paths, rule)

@@ -1,0 +1,83 @@
+"""CLI: ``python -m repro.analysis [paths...] [--format text|json]
+[--contracts] [--output FILE] [--list-rules]``.
+
+Exit status 0 iff no findings (and, with ``--contracts``, no contract
+violations) — the CI ``lint`` job gate."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from repro.analysis import lint
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-hygiene lint + compiled-program contract audit")
+    p.add_argument("paths", nargs="*",
+                   help=f"files/dirs to lint (default: "
+                        f"{', '.join(lint.DEFAULT_ROOTS)} under cwd)")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--output", default=None,
+                   help="write the report here as well as stdout")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule subset to run")
+    p.add_argument("--contracts", action="store_true",
+                   help="also lower + audit the DFLConfig contract table "
+                        "and the engine retrace detector (slower: compiles "
+                        "every cell)")
+    p.add_argument("--list-rules", action="store_true")
+    args = p.parse_args(argv)
+
+    import repro.analysis.rules  # noqa: F401
+    if args.list_rules:
+        for r in sorted(lint.RULES.values(), key=lambda r: r.name):
+            print(f"{r.name:24s} {r.description}")
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    findings = lint.lint_paths(args.paths or None, rules)
+
+    contract_report = None
+    if args.contracts:
+        from repro.analysis import contracts
+        results = contracts.audit_table()
+        retrace = contracts.audit_engine_retrace()
+        contract_report = {
+            "cells": [r.to_dict() for r in results],
+            "retrace": retrace.to_dict(),
+        }
+        for r in results:
+            for v in r.violations:
+                findings.append(lint.Finding(
+                    "contract", f"<cell:{r.cell.name}>", 0, 0, v))
+        for v in retrace.violations:
+            findings.append(lint.Finding(
+                "contract", "<engine-retrace>", 0, 0, v))
+
+    if args.format == "json":
+        report = {"findings": [f.to_dict() for f in findings],
+                  "count": len(findings),
+                  "rules": sorted(lint.RULES)}
+        if contract_report is not None:
+            report["contracts"] = contract_report
+        text = json.dumps(report, indent=2)
+    else:
+        body: List[str] = [f.format() for f in findings]
+        body.append(f"{len(findings)} finding(s)")
+        if contract_report is not None:
+            ncells = len(contract_report["cells"])
+            body.append(f"contract table: {ncells} cells audited")
+        text = "\n".join(body)
+    print(text)
+    if args.output:
+        with open(args.output, "w") as fh:
+            fh.write(text + "\n")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

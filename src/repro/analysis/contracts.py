@@ -1,0 +1,275 @@
+"""Front 2: the declarative compiled-program contract auditor.
+
+``CONTRACT_TABLE`` enumerates supported cells of the ``DFLConfig`` matrix
+(backend x mixing x compression x wire x dynamic); ``audit_table`` lowers
+each cell's epoch step at smoke size and statically asserts on the
+compiled HLO — no execution, the *program text* is the evidence:
+
+* **donation** — every cell that claims state donation must carry an
+  ``input_output_alias`` map (``hlo_audit.has_donation``).  Its absence
+  means XLA silently kept two full copies of client params + optimizer
+  state (the PR-3 engine bug, now a static regression).
+* **no host callbacks** — a compiled epoch step must never re-enter
+  Python (``hlo_audit.host_callback_sites``): one stray
+  ``jax.debug.callback`` turns every epoch into a device->host round-trip.
+* **wire dtypes** — any collective a physical-wire cell lowers must move
+  s8 codes / f32 scales, never a payload-sized float buffer.
+
+``audit_wire_hlo`` is the reusable site-count pass generalising the PR-6
+two-gather regression: fed a multi-device shard_map program's HLO (the
+slow-tier subprocess tests and the ``consensus_backends`` benchmark
+produce one), it asserts each gossip round is EXACTLY one s8 + one f32
+all-gather — a third site is the per-leaf (unbucketed) collective
+explosion coming back.
+
+``audit_engine_retrace`` drives the dynamic engine through varied
+schedules and churn and asserts, via
+``DynamicFederationEngine.compile_counts``, that the epoch step compiled
+AT MOST ONCE per federation size — a second trace at the same M means a
+schedule operand leaked into trace structure (weak-type flip, rank change,
+Python scalar) and every epoch quietly recompiles.
+
+Unlike the rest of ``repro.analysis`` this module imports the live stack
+(``repro.core``/``repro.comm``/``repro.data``); only the CLI
+(``--contracts``) and the tests import it, keeping ``comm.accounting`` ->
+``analysis.hlo_audit`` cycle-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hlo_audit
+
+#: dtypes allowed to cross a collective in a physical-wire program: the
+#: quantized codes and their scales (u32 shows up for packed int4 words)
+WIRE_DTYPES = ("s8", "f32", "u32")
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractCell:
+    """One audited point of the DFLConfig matrix and its claims."""
+
+    name: str
+    consensus_mode: str = "gossip"
+    mixing: str = "symmetric"
+    compression: str = "none"
+    error_feedback: bool = False
+    wire: str = "simulated"
+    dynamic: bool = False
+    donate: bool = True            # claim: jit with donate_argnums=(0,)
+    max_host_callbacks: int = 0    # claim: the step never re-enters Python
+
+
+CONTRACT_TABLE: Tuple[ContractCell, ...] = (
+    ContractCell("gossip"),
+    ContractCell("gossip_blocked", consensus_mode="gossip_blocked"),
+    ContractCell("collapsed", consensus_mode="collapsed"),
+    ContractCell("chebyshev", consensus_mode="chebyshev"),
+    ContractCell("exact_mean", consensus_mode="exact_mean"),
+    ContractCell("trimmed_mean", consensus_mode="trimmed_mean:1"),
+    ContractCell("median", consensus_mode="median"),
+    ContractCell("clipped", consensus_mode="clipped:1.5"),
+    ContractCell("push_sum", mixing="push_sum"),
+    ContractCell("gossip_int8_ef", compression="int8:8",
+                 error_feedback=True),
+    ContractCell("gossip_int4", compression="int4:8"),
+    ContractCell("gossip_topk_ef", compression="top_k:0.25",
+                 error_feedback=True),
+    ContractCell("gossip_int8_wire", compression="int8:8",
+                 error_feedback=True, wire="physical"),
+    ContractCell("blocked_int8_wire", consensus_mode="gossip_blocked",
+                 compression="int8:8", wire="physical"),
+    ContractCell("dynamic_gossip", dynamic=True),
+    ContractCell("dynamic_int8_wire", dynamic=True, compression="int8:8",
+                 error_feedback=True, wire="physical"),
+)
+
+
+@dataclasses.dataclass
+class CellResult:
+    cell: ContractCell
+    violations: List[str]
+    stats: Dict[str, object]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"cell": self.cell.name, "ok": self.ok,
+                "violations": list(self.violations),
+                "stats": dict(self.stats)}
+
+
+def lower_cell(cell: ContractCell, *, m: int = 4, n: int = 2,
+               t_client: int = 2, t_server: int = 3,
+               drop_donation: bool = False) -> str:
+    """Build the cell's epoch step at smoke size, jit it exactly the way
+    the shipping paths do (donating the carried state iff the cell claims
+    it — ``drop_donation=True`` is the tests' deliberate regression), and
+    return the compiled HLO text."""
+    from repro.core import (DFLConfig, EpochSchedule, FLTopology,
+                            build_dfl_epoch_step, init_dfl_state)
+    from repro.data import RegressionSpec, make_regression_task
+    from repro.optim import sgd
+
+    topo_kw = {}
+    if cell.mixing != "symmetric":
+        topo_kw["mixing"] = "out_degree"
+    topo = FLTopology(num_servers=m, clients_per_server=n,
+                      t_client=t_client, t_server=t_server,
+                      graph_kind="ring", **topo_kw)
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.3),
+                                seed=0)
+    cfg = DFLConfig(topology=topo, consensus_mode=cell.consensus_mode,
+                    mixing=cell.mixing, compression=cell.compression,
+                    error_feedback=cell.error_feedback, wire=cell.wire,
+                    dynamic=cell.dynamic)
+    opt = sgd(1e-3)
+    step = build_dfl_epoch_step(cfg, task["loss_fn"], opt)
+    state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
+    args: Tuple = (state, task["batches"])
+    if cell.dynamic:
+        sched = EpochSchedule(
+            mask=jnp.ones((m, n), jnp.float32),
+            mixing=jnp.asarray(topo.mixing_matrix(), jnp.float32))
+        args = args + (sched,)
+    donate = () if (not cell.donate or drop_donation) else (0,)
+    return jax.jit(step, donate_argnums=donate).lower(
+        *args).compile().as_text()
+
+
+def audit_cell(cell: ContractCell, hlo: Optional[str] = None,
+               **size_kw) -> CellResult:
+    """Check one cell's claims against its compiled HLO (lowered fresh
+    unless ``hlo`` is supplied — the tests feed doctored programs)."""
+    if hlo is None:
+        hlo = lower_cell(cell, **size_kw)
+    violations: List[str] = []
+    aliased = hlo_audit.has_donation(hlo)
+    callbacks = hlo_audit.host_callback_sites(hlo)
+    sites = hlo_audit.collective_sites(hlo)
+    if cell.donate and not aliased:
+        violations.append(
+            f"{cell.name}: donation claimed (donate_argnums=(0,)) but the "
+            f"compiled program has NO input_output_alias — the carried "
+            f"DFLState is double-buffered")
+    if len(callbacks) > cell.max_host_callbacks:
+        violations.append(
+            f"{cell.name}: {len(callbacks)} host callback site(s) in the "
+            f"compiled epoch step ({', '.join(sorted(set(callbacks)))}) — "
+            f"every epoch round-trips to Python")
+    if cell.wire == "physical":
+        bad = sorted({c["dtype"] for c in sites
+                      if c["dtype"] not in WIRE_DTYPES})
+        if bad:
+            violations.append(
+                f"{cell.name}: physical-wire program moves "
+                f"{', '.join(bad)} through a collective — only the "
+                f"quantized codes (s8/u32) and f32 scales may cross")
+    return CellResult(cell, violations, {
+        "aliased": aliased, "host_callbacks": len(callbacks),
+        "collective_sites": len(sites)})
+
+
+def audit_table(table: Sequence[ContractCell] = CONTRACT_TABLE,
+                **size_kw) -> List[CellResult]:
+    return [audit_cell(cell, **size_kw) for cell in table]
+
+
+def audit_wire_hlo(hlo: str, *, op: str = "all-gather",
+                   expect_sites: int = 2,
+                   allowed_dtypes: Sequence[str] = ("s8", "f32")
+                   ) -> List[str]:
+    """The reusable PR-6 wire contract over an explicit-collective
+    (shard_map / ring) program's compiled HLO: exactly ``expect_sites``
+    collective SITES of the given op per program — the bucketed layout's
+    one code + one scale gather, however many leaves the tree has — each
+    moving only the allowed wire dtypes.  More sites than the contract is
+    the per-leaf (unbucketed) collective explosion regressing."""
+    sites = [c for c in hlo_audit.collective_sites(hlo) if c["op"] == op]
+    violations: List[str] = []
+    if len(sites) != expect_sites:
+        kind = "per-leaf (unbucketed) collective regression" \
+            if len(sites) > expect_sites else "missing collective"
+        violations.append(
+            f"{kind}: {len(sites)} {op} site(s), the bucketed-wire "
+            f"contract is exactly {expect_sites} per program "
+            f"(dtypes seen: {sorted({c['dtype'] for c in sites})})")
+    bad = sorted({c["dtype"] for c in sites
+                  if c["dtype"] not in allowed_dtypes})
+    if bad:
+        violations.append(
+            f"collective operand dtype(s) {bad} outside the wire contract "
+            f"{sorted(allowed_dtypes)} — a payload-sized float buffer is "
+            f"crossing the interconnect")
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# jit retrace detector
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RetraceReport:
+    compile_counts: Dict[int, int]
+    violations: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"compile_counts": {str(k): v
+                                   for k, v in self.compile_counts.items()},
+                "ok": self.ok, "violations": list(self.violations)}
+
+
+def audit_engine_retrace(epochs: int = 6, *, m: int = 5, n: int = 3,
+                         t_client: int = 2, t_server: int = 3
+                         ) -> RetraceReport:
+    """Run the dynamic engine through per-epoch mask AND mixing variation
+    plus a drop/rejoin (two federation sizes), then assert the compiled
+    epoch step traced at most once per M.  A count above 1 means a
+    schedule operand's trace signature varied across epochs — the
+    compiles-every-epoch failure mode the EpochSchedule operand design
+    exists to prevent."""
+    from repro.core import (FLTopology, FaultSchedule,
+                            ParticipationSchedule, TopologySchedule,
+                            init_dfl_state, make_engine)
+    from repro.data import RegressionSpec, make_regression_task
+    from repro.optim import sgd
+
+    topo = FLTopology(num_servers=m, clients_per_server=n,
+                      t_client=t_client, t_server=t_server,
+                      graph_kind="ring")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.3),
+                                seed=0)
+    opt = sgd(1e-3)
+    engine = make_engine(
+        topo, task["loss_fn"], opt,
+        participation=ParticipationSchedule(kind="bernoulli", rate=0.7,
+                                            seed=1),
+        topology_schedule=TopologySchedule(kind="edge_drop", drop_prob=0.3,
+                                           seed=2),
+        faults=FaultSchedule.parse(f"drop:2:1,rejoin:{epochs - 2}:1"))
+    state = init_dfl_state(engine.cfg, jnp.zeros((2,)), opt,
+                           jax.random.key(0))
+    engine.run(state, epochs, task["batch_fn"])
+    counts = engine.compile_counts()
+    violations = [
+        f"epoch step at M={mm} compiled {c} times across {epochs} "
+        f"schedule-varied epochs — a traced operand's signature is "
+        f"unstable (expected exactly 1 trace per federation size)"
+        for mm, c in sorted(counts.items()) if c != 1]
+    if len(counts) < 2:
+        violations.append(
+            f"retrace audit exercised only federation sizes "
+            f"{sorted(counts)} — the drop/rejoin surgery did not run")
+    return RetraceReport(counts, violations)

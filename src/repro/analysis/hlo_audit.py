@@ -1,0 +1,108 @@
+"""Shared static passes over compiled-HLO text.
+
+This module is the ONE place that parses XLA's post-compile HLO dump; the
+byte ledger (``comm.accounting.hlo_collective_bytes``), the physical-wire
+regression tests (``tests/test_wire.py``), the benchmark cross-checks and
+the contract auditor (``analysis.contracts``) all call through here, so a
+change in XLA's text format is a one-file fix.
+
+Three passes:
+
+* ``collective_sites`` — every gather/permute collective with its operand
+  dtype, shape and RESULT-buffer bytes (the PR-5/6 wire audit, moved here
+  from ``comm.accounting`` verbatim).
+* ``input_output_alias_pairs`` / ``has_donation`` — the ``{output}: (param,
+  ...)`` aliasing map XLA emits in the module header when ``donate_argnums``
+  donation actually took: its ABSENCE on a program that claims donation
+  means the runtime silently holds two full copies of the carried state
+  (the PR-3 engine bug class).
+* ``host_callback_sites`` — ``custom-call`` sites whose target is a Python
+  host callback (``xla_python_cpu_callback`` and friends): a compiled epoch
+  step must contain none, or every step round-trips to the host.
+
+The module deliberately imports nothing from ``repro.core`` / ``repro.comm``
+(only ``re`` + numpy) so the comm layer can delegate to it without an
+import cycle.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# one compiled-HLO collective, sync or async-start form, e.g.
+#   %all-gather.3 = s8[4,256]{1,0} all-gather(s8[1,256]{1,0} %x), ...
+#   %ag = (s8[1,256], s8[4,256]) all-gather-start(s8[1,256] %x), ...
+# (the matching '-done' op is intentionally NOT matched — its result
+# aliases the start op's output buffer and would double-count)
+_HLO_COLLECTIVE = re.compile(
+    r"=\s+(\(?[^=]*?)\s*(all-gather|collective-permute)(-start)?\(")
+_HLO_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+HLO_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                   "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                   "s64": 8, "u64": 8, "f64": 8}
+
+# one entry of the module-header aliasing map XLA writes when donation
+# took, e.g.  input_output_alias={ {0}: (0, {}, may-alias), ... } —
+# matched entry-wise (the brace nesting makes a whole-map regex fragile):
+#   {output tuple index}: (param number, {param tuple index}, kind)
+_HLO_ALIAS_ENTRY = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{[\d,\s]*\},\s*(may-alias|must-alias)\)")
+
+# a custom-call whose target is a Python host callback (jax.debug.callback
+# / io_callback / pure_callback all lower to one of these CPU/FFI targets)
+_HLO_HOST_CALLBACK = re.compile(
+    r'custom_call_target="([^"]*(?:python|callback)[^"]*)"', re.IGNORECASE)
+
+
+def collective_sites(hlo_text: str) -> List[Dict[str, object]]:
+    """Parse a compiled-HLO dump into its gather/permute collectives:
+    ``[{op, dtype, shape, bytes}, ...]`` with ``bytes`` the RESULT buffer
+    size (for an all-gather over M participants, each participant ships
+    ``bytes / M``).  Handles both the synchronous form and the async
+    ``-start`` rewrite (whose result is an (operand, result) tuple — the
+    LARGEST element is the gathered buffer).  The dtypes and shapes here
+    are what actually crossed the interconnect, and must match the codec's
+    ``wire_block_bytes``."""
+    out: List[Dict[str, object]] = []
+    for m in _HLO_COLLECTIVE.finditer(hlo_text):
+        result_types, op = m.group(1), m.group(2)
+        best = None
+        for dtype, dims in _HLO_SHAPE.findall(result_types):
+            if dtype not in HLO_DTYPE_BYTES:
+                continue
+            shape = tuple(int(x) for x in dims.split(",") if x)
+            elems = int(np.prod(shape)) if shape else 1
+            nbytes = elems * HLO_DTYPE_BYTES[dtype]
+            if best is None or nbytes > best["bytes"]:
+                best = {"op": op, "dtype": dtype, "shape": shape,
+                        "bytes": nbytes}
+        if best is not None:
+            out.append(best)
+    return out
+
+
+def input_output_alias_pairs(hlo_text: str) -> List[Tuple[Tuple[int, ...],
+                                                          int, str]]:
+    """The compiled module's donation map as ``[(output tuple index, param
+    number, kind), ...]`` — empty when XLA established no aliasing (either
+    nothing was donated, or every donation was refused, e.g. by a
+    dtype/layout mismatch between the donated operand and any output)."""
+    return [(tuple(int(x) for x in out_idx.split(",") if x.strip()),
+             int(param), kind)
+            for out_idx, param, kind in _HLO_ALIAS_ENTRY.findall(hlo_text)]
+
+
+def has_donation(hlo_text: str) -> bool:
+    """True iff the compiled program aliases at least one output buffer to
+    an input — the observable proof that ``donate_argnums`` actually freed
+    the carried state instead of silently double-buffering it."""
+    return bool(input_output_alias_pairs(hlo_text))
+
+
+def host_callback_sites(hlo_text: str) -> List[str]:
+    """Custom-call targets that re-enter Python from inside the compiled
+    program (one entry per call SITE).  A hot compiled path — an epoch
+    step, a gossip round — must return an empty list here."""
+    return _HLO_HOST_CALLBACK.findall(hlo_text)

@@ -1,0 +1,217 @@
+"""The AST lint engine: rule registry, file walking, suppressions.
+
+Rules are project-specific JAX hygiene (``analysis.rules``): the bug
+classes that cost PRs 3-6 the most runtime debugging — reused PRNG keys,
+host syncs inside compiled bodies, undonated full-state jits, the
+division-vs-reciprocal 1-ulp scale trap — each statically detectable from
+the AST alone.  A rule is a callable ``check(ctx) -> Iterable[Finding]``
+registered under a kebab-case name via the ``@rule`` decorator; the engine
+parses each file once and hands every rule the same ``FileContext``.
+
+Suppression grammar (per line, trailing comment)::
+
+    x = a / qmax  # repro: ignore[qmax-division]: not a wire scale site
+    y = f(k)      # repro: ignore[key-reuse, host-sync-in-jit]: <reason>
+
+The reason after the second colon is MANDATORY — a reasonless ``ignore``
+still suppresses the named rules (so the repo stays one-finding-per-line)
+but itself surfaces as a ``bare-suppression`` finding, which cannot be
+suppressed.  Suppressions bind to the physical line the finding is
+reported on.
+
+``python -m repro.analysis`` is the CLI front end (text / JSON, nonzero
+exit on findings); ``lint_paths`` is the library entry the tests use.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+import tokenize
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: directory path components never walked: caches, VCS internals, and the
+#: seeded-violation fixture files the analysis tests feed to ``lint_file``
+#: directly (they contain deliberate findings and must not dirty the repo)
+EXCLUDED_PARTS = {"__pycache__", ".git", ".github", "fixtures",
+                  ".pytest_cache", "build", "dist"}
+
+#: the repo surfaces ``python -m repro.analysis`` walks by default
+DEFAULT_ROOTS = ("src", "tests", "benchmarks", "examples")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] " \
+               f"{self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule gets: one parse, shared by every rule.  The tree
+    carries parent links (``node.repro_parent``) so rules can walk UP —
+    e.g. 'is this sampler call inside a loop the key was defined outside
+    of'."""
+
+    path: str
+    src: str
+    tree: ast.Module
+    lines: List[str]
+
+    def finding(self, rule_name: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule_name, self.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message)
+
+
+RuleFn = Callable[[FileContext], Iterable[Finding]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    description: str
+    check: RuleFn
+
+
+#: the registry ``analysis.rules`` populates at import time
+RULES: Dict[str, Rule] = {}
+
+_RULE_NAME = re.compile(r"^[a-z][a-z0-9-]*$")
+
+
+def rule(name: str, description: str) -> Callable[[RuleFn], RuleFn]:
+    """Register a lint rule under a kebab-case name (see
+    ``docs/static_analysis.md`` for the how-to-add-a-rule walkthrough)."""
+    if not _RULE_NAME.match(name):
+        raise ValueError(f"rule name {name!r} must be kebab-case")
+
+    def deco(fn: RuleFn) -> RuleFn:
+        if name in RULES:
+            raise ValueError(f"duplicate rule name {name!r}")
+        RULES[name] = Rule(name, description, fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+_SUPPRESS = re.compile(
+    r"#\s*repro:\s*ignore\[([A-Za-z0-9_\-,\s]+)\]\s*(?::\s*(\S.*))?$")
+
+
+def parse_suppressions(src: str) -> Dict[int, Tuple[Set[str], bool]]:
+    """``{line: (rule names, has_reason)}`` for every ``# repro: ignore``
+    comment.  Comments are found with the tokenizer, not a per-line regex,
+    so the marker inside a string literal is not a suppression."""
+    out: Dict[int, Tuple[Set[str], bool]] = {}
+    try:
+        tokens = tokenize.generate_tokens(iter(src.splitlines(True)).__next__)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS.search(tok.string)
+            if not m:
+                continue
+            names = {s.strip() for s in m.group(1).split(",") if s.strip()}
+            out[tok.start[0]] = (names, m.group(2) is not None)
+    except tokenize.TokenizeError:
+        pass
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+def _link_parents(tree: ast.Module) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.repro_parent = node  # type: ignore[attr-defined]
+    tree.repro_parent = None  # type: ignore[attr-defined]
+
+
+def lint_file(path: str,
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the (selected) rules over one file and apply its suppressions.
+    Ensures rules are loaded, parses once, and returns findings sorted by
+    location.  A syntactically invalid file yields a single
+    ``syntax-error`` finding rather than crashing the walk."""
+    import repro.analysis.rules  # noqa: F401  (registers RULES)
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding("syntax-error", path, e.lineno or 1, e.offset or 0,
+                        f"file does not parse: {e.msg}")]
+    _link_parents(tree)
+    ctx = FileContext(path=path, src=src, tree=tree,
+                      lines=src.splitlines())
+    selected = [RULES[r] for r in rules] if rules else list(RULES.values())
+    findings: List[Finding] = []
+    for r in selected:
+        findings.extend(r.check(ctx))
+
+    sup = parse_suppressions(src)
+    kept: List[Finding] = []
+    for f in findings:
+        names, _ = sup.get(f.line, (set(), True))
+        if f.rule not in names:
+            kept.append(f)
+    # a reasonless suppression is itself a finding — and NOT suppressible
+    for line, (names, has_reason) in sorted(sup.items()):
+        if not has_reason:
+            kept.append(Finding(
+                "bare-suppression", path, line, 0,
+                f"suppression for [{', '.join(sorted(names))}] carries no "
+                f"reason — write '# repro: ignore[rule]: why it is a "
+                f"false positive'"))
+        unknown = names - set(RULES) - {"bare-suppression"}
+        if unknown:
+            kept.append(Finding(
+                "bare-suppression", path, line, 0,
+                f"suppression names unknown rule(s) "
+                f"{', '.join(sorted(unknown))} — it suppresses nothing"))
+    return sorted(kept, key=lambda f: (f.line, f.col, f.rule))
+
+
+def iter_python_files(roots: Sequence[str]) -> List[str]:
+    """Every ``.py`` file under the given roots (files accepted verbatim),
+    minus ``EXCLUDED_PARTS`` directories, sorted for stable output."""
+    out: List[str] = []
+    for root in roots:
+        if os.path.isfile(root):
+            out.append(root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in EXCLUDED_PARTS)
+            out.extend(os.path.join(dirpath, n) for n in sorted(filenames)
+                       if n.endswith(".py"))
+    return out
+
+
+def lint_paths(paths: Optional[Sequence[str]] = None,
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint a set of files/directories (default: the repo surfaces in
+    ``DEFAULT_ROOTS`` that exist under the current directory)."""
+    if paths is None:
+        paths = [r for r in DEFAULT_ROOTS if os.path.isdir(r)]
+    findings: List[Finding] = []
+    for path in iter_python_files(list(paths)):
+        findings.extend(lint_file(path, rules))
+    return findings

@@ -1,0 +1,6 @@
+"""Lint rule modules — importing this package registers every rule in
+``analysis.lint.RULES``.  To add a rule, drop a module here that calls
+``@lint.rule("name", "description")`` and import it below (walkthrough in
+``docs/static_analysis.md``)."""
+from repro.analysis.rules import (donation, host_sync, misc, prng,  # noqa: F401
+                                  quantization)

@@ -1,0 +1,203 @@
+"""Shared AST helpers for the lint rules: dotted-name rendering, compiled-
+context discovery (jit decorators, ``functools.partial(jax.jit, ...)``,
+functions handed to ``jax.jit`` / ``lax.scan`` / ``lax.fori_loop`` /
+``lax.while_loop`` / ``lax.cond`` at call sites) and traced-parameter
+resolution honouring ``static_argnames``."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.random.normal`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_jit_callable(node: ast.AST) -> bool:
+    """Does this expression denote ``jax.jit`` (or pjit)?  Matches the
+    bare names the repo imports under and any ``*.jit`` attribute."""
+    name = dotted_name(node)
+    if name is None:
+        return False
+    return name in ("jit", "pjit") or name.endswith(".jit") \
+        or name.endswith(".pjit")
+
+
+def _static_argnames_from_call(call: ast.Call) -> Set[str]:
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+    return names
+
+
+def _static_argnums_from_call(call: ast.Call) -> Set[int]:
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnums", "static_argnum"):
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+    return nums
+
+
+@dataclasses.dataclass
+class CompiledContext:
+    """One function body that ends up inside a compiled program, with the
+    parameter names that are TRACED there (static_argnames/argnums
+    excluded)."""
+
+    fn: ast.AST                      # FunctionDef | AsyncFunctionDef | Lambda
+    traced_params: Set[str]
+    via: str                         # what put it in a compiled program
+
+
+def _params(fn: ast.AST) -> List[ast.arg]:
+    a = fn.args
+    return list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+
+
+def _traced_params(fn: ast.AST, static_names: Set[str],
+                   static_nums: Set[int]) -> Set[str]:
+    out: Set[str] = set()
+    for i, p in enumerate(_params(fn)):
+        if p.arg in ("self", "cls") or p.arg in static_names:
+            continue
+        if i in static_nums:
+            continue
+        out.add(p.arg)
+    return out
+
+
+def _jit_decorator(dec: ast.AST) -> Optional[Tuple[Set[str], Set[int]]]:
+    """(static_argnames, static_argnums) if this decorator jits, else
+    None.  Handles ``@jax.jit``, ``@jit``, ``@jax.jit(...)`` via partial
+    (``@partial(jax.jit, static_argnames=...)``) and direct
+    ``@jax.jit(static_argnames=...)`` hmm — jax.jit is not usable that way,
+    but partial is the repo idiom (``kernels/ops.py``)."""
+    if is_jit_callable(dec):
+        return set(), set()
+    if isinstance(dec, ast.Call):
+        fname = dotted_name(dec.func)
+        if fname in ("partial", "functools.partial") and dec.args \
+                and is_jit_callable(dec.args[0]):
+            return (_static_argnames_from_call(dec),
+                    _static_argnums_from_call(dec))
+        if is_jit_callable(dec.func):
+            return (_static_argnames_from_call(dec),
+                    _static_argnums_from_call(dec))
+    return None
+
+
+#: call targets whose function-valued arguments execute inside a compiled
+#: program (traced): the control-flow primitives plus jit itself
+_COMPILING_CALLS = {
+    "scan": "lax.scan", "fori_loop": "lax.fori_loop",
+    "while_loop": "lax.while_loop", "cond": "lax.cond",
+    "switch": "lax.switch", "checkpoint": "jax.checkpoint",
+    "remat": "jax.remat", "vmap": None, "grad": None,
+    "value_and_grad": None,
+}
+
+
+def _local_functions(tree: ast.Module) -> Dict[str, ast.AST]:
+    """name -> innermost FunctionDef for every def in the file (lint
+    granularity: a name collision across scopes resolves to the last def,
+    which is fine for a warner)."""
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+    return out
+
+
+def compiled_contexts(tree: ast.Module) -> List[CompiledContext]:
+    """Every function body the file demonstrably places inside a compiled
+    program, each with its traced parameter names."""
+    out: List[CompiledContext] = []
+    seen: Set[int] = set()
+    local = _local_functions(tree)
+
+    def add(fn: ast.AST, traced: Set[str], via: str) -> None:
+        if id(fn) in seen:
+            return
+        seen.add(id(fn))
+        out.append(CompiledContext(fn, traced, via))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                got = _jit_decorator(dec)
+                if got is not None:
+                    add(node, _traced_params(node, *got), "decorator")
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted_name(node.func)
+        if fname is None:
+            continue
+        tail = fname.rsplit(".", 1)[-1]
+        if is_jit_callable(node.func):
+            static_names = _static_argnames_from_call(node)
+            static_nums = _static_argnums_from_call(node)
+            for arg in node.args[:1]:
+                fn = local.get(arg.id) if isinstance(arg, ast.Name) else \
+                    (arg if isinstance(arg, ast.Lambda) else None)
+                if fn is not None:
+                    add(fn, _traced_params(fn, static_names, static_nums),
+                        "jax.jit call")
+        elif tail in ("scan", "fori_loop", "while_loop", "cond", "switch") \
+                and ("lax" in fname or "jax" in fname):
+            for arg in node.args:
+                fn = local.get(arg.id) if isinstance(arg, ast.Name) else \
+                    (arg if isinstance(arg, ast.Lambda) else None)
+                if fn is not None:
+                    add(fn, _traced_params(fn, set(), set()),
+                        f"argument to {fname}")
+    return out
+
+
+def walk_scope(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body WITHOUT descending into nested function/class
+    definitions (their params shadow; they get their own context if they
+    are compiled)."""
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    stack: List[ast.AST] = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """The base Name of an attribute/subscript chain: ``sched.mask[0]``
+    -> ``sched``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def enclosing(node: ast.AST, kinds) -> Optional[ast.AST]:
+    """Nearest ancestor of one of the given AST types (via the
+    ``repro_parent`` links ``lint._link_parents`` installs)."""
+    cur = getattr(node, "repro_parent", None)
+    while cur is not None:
+        if isinstance(cur, kinds):
+            return cur
+        cur = getattr(cur, "repro_parent", None)
+    return None

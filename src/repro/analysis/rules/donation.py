@@ -1,0 +1,61 @@
+"""``undonated-jit`` — ``jax.jit`` of a full-state epoch step without
+``donate_argnums``.
+
+The bug class that cost PR 3 its engine memory budget: jitting
+``build_dfl_epoch_step(...)`` (or any ``*epoch_step*`` builder) and
+threading the carried ``DFLState`` through it WITHOUT donating arg 0 makes
+XLA hold TWO full copies of client params + optimizer state per call — the
+old input buffer and the new output.  The rule flags any ``jax.jit(X,
+...)`` call site whose first argument is (a call to) an epoch-step
+builder/function and which passes neither ``donate_argnums`` nor
+``donate_argnames``.
+
+Test files (basename ``test_*``) are exempt BY DESIGN: the suite
+deliberately jits undonated steps so the initial state survives for
+bitwise re-runs (e.g. the static-vs-dynamic degeneration oracles), and a
+suppression on each of ~20 sites would be noise.  The contract auditor
+(``analysis.contracts``) covers the other side: it PROVES donation took on
+the shipping paths by asserting ``input_output_alias`` in compiled HLO."""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List
+
+from repro.analysis.lint import FileContext, Finding, rule
+from repro.analysis.rules.common import dotted_name, is_jit_callable
+
+_DONATE_KWARGS = {"donate_argnums", "donate_argnames"}
+
+
+def _is_epoch_step_expr(node: ast.AST) -> bool:
+    """Does this expression denote an epoch step?  Either a direct call to
+    a ``*epoch_step*`` builder (``build_dfl_epoch_step(cfg, ...)``) or a
+    bare name containing ``epoch_step``."""
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func) or ""
+        return "epoch_step" in name.rsplit(".", 1)[-1]
+    name = dotted_name(node) or ""
+    return "epoch_step" in name.rsplit(".", 1)[-1]
+
+
+@rule("undonated-jit",
+      "jax.jit of an epoch step (full DFLState threaded) without "
+      "donate_argnums — holds two copies of the carried state")
+def check(ctx: FileContext):
+    if os.path.basename(ctx.path).startswith("test_"):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or not is_jit_callable(node.func):
+            continue
+        if not node.args or not _is_epoch_step_expr(node.args[0]):
+            continue
+        if any(kw.arg in _DONATE_KWARGS for kw in node.keywords):
+            continue
+        findings.append(ctx.finding(
+            "undonated-jit", node,
+            "jax.jit of an epoch step without donate_argnums: the carried "
+            "DFLState is double-buffered (input + output copies) — add "
+            "donate_argnums=(0,)"))
+    return findings

@@ -1,0 +1,133 @@
+"""``host-sync-in-jit`` and ``traced-branch`` — host round-trips and
+Python control flow inside compiled bodies.
+
+Both rules run only over function bodies the file DEMONSTRABLY compiles
+(``rules.common.compiled_contexts``): jit-decorated defs (including the
+``functools.partial(jax.jit, static_argnames=...)`` idiom, whose static
+names are exempt) and functions/lambdas handed to ``jax.jit`` /
+``lax.scan`` / ``lax.fori_loop`` / ``lax.while_loop`` / ``lax.cond`` at a
+call site in the same file.
+
+``host-sync-in-jit`` flags ``.item()`` / ``.tolist()`` / ``np.asarray`` /
+``np.array`` anywhere in such a body (under tracing these either fail or
+silently constant-fold a stale value), and ``float()`` / ``int()`` /
+``bool()`` applied to a traced parameter (they force a device sync —
+inside jit, a ConcretizationTypeError at best).
+
+``traced-branch`` flags ``if``/``while`` whose test reads a traced
+parameter with a value comparison or truthiness — the branch freezes at
+trace time.  Structural tests are exempt: ``is``/``is not`` (pytree
+structure, e.g. ``if sched.byz is None``), ``isinstance``, and ``len()``
+(static under tracing)."""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.lint import FileContext, Finding, rule
+from repro.analysis.rules.common import (compiled_contexts, dotted_name,
+                                         root_name, walk_scope)
+
+_HOST_METHODS = {"item", "tolist"}
+_NUMPY_FUNCS = {"asarray", "array"}
+_NUMPY_MODULES = {"np", "numpy", "onp"}
+_CASTS = {"float", "int", "bool", "complex"}
+
+
+def _reads_traced(node: ast.AST, traced: Set[str]) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                and n.id in traced:
+            return True
+    return False
+
+
+@rule("host-sync-in-jit",
+      "a host-synchronizing call (.item/.tolist/np.asarray/float(traced)) "
+      "inside a jit-compiled or scanned body")
+def check_host_sync(ctx: FileContext):
+    findings: List[Finding] = []
+    for cc in compiled_contexts(ctx.tree):
+        for node in walk_scope(cc.fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _HOST_METHODS \
+                    and not node.args:
+                findings.append(ctx.finding(
+                    "host-sync-in-jit", node,
+                    f".{node.func.attr}() inside a compiled body "
+                    f"({cc.via}) forces a host sync — keep it a traced "
+                    f"array, or move the read outside the compiled step"))
+                continue
+            fname = dotted_name(node.func)
+            if fname is not None and "." in fname:
+                head, tail = fname.rsplit(".", 1)
+                if tail in _NUMPY_FUNCS and head in _NUMPY_MODULES:
+                    findings.append(ctx.finding(
+                        "host-sync-in-jit", node,
+                        f"{fname}(...) inside a compiled body ({cc.via}) "
+                        f"materialises on the host — use jnp inside "
+                        f"compiled code"))
+                    continue
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in _CASTS and node.args \
+                    and _reads_traced(node.args[0], cc.traced_params):
+                findings.append(ctx.finding(
+                    "host-sync-in-jit", node,
+                    f"{node.func.id}() of a traced operand inside a "
+                    f"compiled body ({cc.via}) — a ConcretizationType"
+                    f"Error in waiting; keep the value abstract"))
+    return findings
+
+
+@rule("traced-branch",
+      "Python if/while branching on a traced operand inside a compiled "
+      "body — the branch freezes at trace time")
+def check_traced_branch(ctx: FileContext):
+    findings: List[Finding] = []
+    for cc in compiled_contexts(ctx.tree):
+        for node in walk_scope(cc.fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            test = node.test
+            if _is_structural(test):
+                continue
+            if _reads_traced_value(test, cc.traced_params):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(ctx.finding(
+                    "traced-branch", node,
+                    f"`{kind}` on traced operand inside a compiled body "
+                    f"({cc.via}) evaluates ONCE at trace time — use "
+                    f"jnp.where / lax.cond / lax.while_loop"))
+    return findings
+
+
+def _is_structural(test: ast.AST) -> bool:
+    """Tests that are static under tracing: identity against None,
+    isinstance, len(), attribute existence."""
+    if isinstance(test, ast.Compare) \
+            and all(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in test.ops):
+        return True
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_structural(test.operand)
+    if isinstance(test, ast.BoolOp):
+        return all(_is_structural(v) for v in test.values)
+    if isinstance(test, ast.Call):
+        fname = dotted_name(test.func)
+        if fname in ("isinstance", "len", "hasattr", "callable"):
+            return True
+    return False
+
+
+def _reads_traced_value(test: ast.AST, traced: Set[str]) -> bool:
+    """A traced parameter (or an attribute/subscript of one) appears as a
+    VALUE in the test — not merely inside a structural subexpression."""
+    for n in ast.walk(test):
+        if isinstance(n, (ast.Attribute, ast.Subscript, ast.Name)):
+            if isinstance(n, ast.Name) and not isinstance(n.ctx, ast.Load):
+                continue
+            if root_name(n) in traced:
+                return True
+    return False

@@ -1,0 +1,89 @@
+"""``mutable-default`` and ``dead-schedule-operand`` — general Python
+hygiene with a DFL-specific twist.
+
+``mutable-default``: a list/dict/set (display or constructor call) as a
+parameter default is shared across ALL calls — the classic aliasing trap.
+
+``dead-schedule-operand``: a function takes an ``EpochSchedule`` operand
+(param named ``sched``/``schedule`` or annotated ``EpochSchedule``) and
+never reads it.  A dead schedule operand means the per-epoch mask/mixing
+the engine threads in is silently ignored — the dynamic run degenerates to
+static while APPEARING to honour the schedule.  Underscore-prefixed params
+are exempt (the explicit I-know-it-is-unused spelling)."""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.lint import FileContext, Finding, rule
+from repro.analysis.rules.common import dotted_name
+
+_MUTABLE_CALLS = {"list", "dict", "set", "defaultdict", "OrderedDict"}
+_SCHED_NAMES = {"sched", "schedule", "epoch_schedule"}
+
+
+@rule("mutable-default",
+      "mutable default argument (list/dict/set) shared across calls")
+def check_mutable_default(ctx: FileContext):
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            continue
+        for default in list(node.args.defaults) + \
+                [d for d in node.args.kw_defaults if d is not None]:
+            bad = isinstance(default, (ast.List, ast.Dict, ast.Set))
+            if isinstance(default, ast.Call):
+                name = dotted_name(default.func) or ""
+                bad = name.rsplit(".", 1)[-1] in _MUTABLE_CALLS
+            if bad:
+                findings.append(ctx.finding(
+                    "mutable-default", default,
+                    "mutable default argument is created once and shared "
+                    "across every call — default to None and construct "
+                    "inside the body"))
+    return findings
+
+
+def _is_schedule_param(arg: ast.arg) -> bool:
+    if arg.arg.startswith("_"):
+        return False
+    if arg.arg in _SCHED_NAMES:
+        return True
+    if arg.annotation is not None:
+        ann = dotted_name(arg.annotation) or ""
+        if "EpochSchedule" in ann:
+            return True
+        # string annotations ('EpochSchedule') and subscripted ones
+        for n in ast.walk(arg.annotation):
+            if isinstance(n, ast.Constant) and isinstance(n.value, str) \
+                    and "EpochSchedule" in n.value:
+                return True
+            if isinstance(n, ast.Name) and "EpochSchedule" in n.id:
+                return True
+    return False
+
+
+@rule("dead-schedule-operand",
+      "an EpochSchedule parameter is never read — the dynamic run "
+      "silently ignores its per-epoch mask/mixing")
+def check_dead_schedule(ctx: FileContext):
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        a = node.args
+        params = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+        sched_params = [p for p in params if _is_schedule_param(p)]
+        if not sched_params:
+            continue
+        read = {n.id for n in ast.walk(node)
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+        for p in sched_params:
+            if p.arg not in read:
+                findings.append(ctx.finding(
+                    "dead-schedule-operand", p,
+                    f"schedule operand '{p.arg}' of {node.name}() is "
+                    f"never read — the per-epoch mask/mixing it carries "
+                    f"is dropped; thread it or rename it '_{p.arg}'"))
+    return findings

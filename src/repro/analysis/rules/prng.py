@@ -1,0 +1,166 @@
+"""``key-reuse`` — a PRNG key consumed by two samplers without a
+``split``/``fold_in`` between them.
+
+JAX keys are values, not stateful generators: sampling twice with the same
+key yields IDENTICAL (or worse, silently correlated) draws.  The rule
+tracks, per function scope, every name bound from a key-producing call
+(``jax.random.key`` / ``PRNGKey`` / ``split`` / ``fold_in``) and every
+sampler call that consumes it; a second consumption without an intervening
+rebind is a finding, as is any sampler consuming a loop-invariant key from
+inside a loop (the per-iteration draws would all be equal)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.lint import FileContext, Finding, rule
+from repro.analysis.rules.common import (dotted_name, enclosing, walk_scope)
+
+#: jax.random functions that CONSUME a key to draw values.  ``split`` /
+#: ``fold_in`` / ``key_data`` / ``clone`` are deliberately absent: they
+#: derive or inspect, they do not draw.
+SAMPLERS = frozenset({
+    "normal", "uniform", "bernoulli", "randint", "permutation", "choice",
+    "categorical", "gumbel", "truncated_normal", "exponential", "laplace",
+    "beta", "gamma", "poisson", "dirichlet", "rademacher", "cauchy",
+    "logistic", "pareto", "t", "ball", "orthogonal", "loggamma",
+    "multivariate_normal", "binomial", "bits",
+})
+
+_PRODUCERS = frozenset({"key", "PRNGKey", "split", "fold_in",
+                        "wrap_key_data", "clone"})
+
+
+def _random_call(node: ast.Call) -> Optional[str]:
+    """The jax.random function name if this call looks like one (its
+    dotted path mentions ``random`` or the common ``jr``/``jrandom``
+    aliases), else None."""
+    name = dotted_name(node.func)
+    if name is None or "." not in name:
+        return None
+    head, tail = name.rsplit(".", 1)
+    if tail not in SAMPLERS and tail not in _PRODUCERS:
+        return None
+    if "random" in head or head.split(".")[-1] in ("jr", "jrandom"):
+        return tail
+    return None
+
+
+def _consumed_key(node: ast.Call) -> Optional[str]:
+    """The Name a sampler call consumes as its key (first positional or
+    ``key=`` keyword), else None."""
+    if node.args and isinstance(node.args[0], ast.Name):
+        return node.args[0].id
+    for kw in node.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+def _scopes(tree: ast.Module):
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            yield node
+
+
+def _bound_names(target: ast.AST) -> List[str]:
+    return [n.id for n in ast.walk(target)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)]
+
+
+def _loop_of(node: ast.AST, scope: ast.AST) -> Optional[ast.AST]:
+    """The nearest enclosing for/while INSIDE this scope, else None."""
+    loop = enclosing(node, (ast.For, ast.While, ast.FunctionDef,
+                            ast.AsyncFunctionDef, ast.Lambda))
+    if isinstance(loop, (ast.For, ast.While)) and loop is not scope:
+        return loop
+    return None
+
+
+@rule("key-reuse",
+      "a PRNG key is consumed by two sampler calls (or by a sampler "
+      "inside a loop) without split/fold_in — identical draws")
+def check(ctx: FileContext):
+    findings: List[Finding] = []
+    for scope in _scopes(ctx.tree):
+        # (line, kind, name, node): kind 'bind' retires previous uses,
+        # 'use' is a sampler consumption
+        events: List[Tuple[int, int, str, ast.AST]] = []
+        walker = walk_scope(scope) if not isinstance(scope, ast.Module) \
+            else ast.iter_child_nodes(scope)
+        nodes = []
+        if isinstance(scope, ast.Module):
+            # module scope: top-level statements only (functions are their
+            # own scopes)
+            stack = [n for n in scope.body
+                     if not isinstance(n, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef,
+                                           ast.ClassDef))]
+            while stack:
+                n = stack.pop()
+                nodes.append(n)
+                if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda, ast.ClassDef)):
+                    stack.extend(ast.iter_child_nodes(n))
+        else:
+            nodes = list(walk_scope(scope))
+
+        for node in nodes:
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    for name in _bound_names(t):
+                        events.append((node.lineno, 0, name, node))
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign,
+                                   ast.NamedExpr)):
+                for name in _bound_names(node.target):
+                    events.append((node.lineno, 0, name, node))
+            elif isinstance(node, ast.For):
+                for name in _bound_names(node.target):
+                    events.append((node.lineno, 0, name, node))
+            elif isinstance(node, ast.Call):
+                tail = _random_call(node)
+                if tail in SAMPLERS:
+                    key = _consumed_key(node)
+                    if key is not None:
+                        events.append((node.lineno, 1, key, node))
+
+        events.sort(key=lambda e: (e[0], e[1]))
+        uses: Dict[str, int] = {}
+        first_use_line: Dict[str, int] = {}
+        for line, kind, name, node in events:
+            if kind == 0:
+                uses[name] = 0
+                continue
+            loop = _loop_of(node, scope)
+            if loop is not None:
+                # rebind inside the loop body (fold_in idiom) is fine, as
+                # is the loop target itself (``for k in split(key, n)``)
+                rebinds = isinstance(loop, ast.For) \
+                    and name in _bound_names(loop.target)
+                rebinds = rebinds or any(
+                    isinstance(n, (ast.Assign, ast.AnnAssign, ast.AugAssign,
+                                   ast.NamedExpr))
+                    and name in sum((_bound_names(t) for t in (
+                        n.targets if isinstance(n, ast.Assign)
+                        else [n.target])), [])
+                    for n in ast.walk(loop))
+                if not rebinds:
+                    findings.append(ctx.finding(
+                        "key-reuse", node,
+                        f"PRNG key '{name}' is sampled inside a loop "
+                        f"without being rebound — every iteration draws "
+                        f"the same values; fold_in the loop index or "
+                        f"split before the loop"))
+                    continue
+            uses[name] = uses.get(name, 0) + 1
+            if uses[name] == 1:
+                first_use_line[name] = line
+            elif uses[name] >= 2:
+                findings.append(ctx.finding(
+                    "key-reuse", node,
+                    f"PRNG key '{name}' already consumed by a sampler at "
+                    f"line {first_use_line.get(name, line)} — split or "
+                    f"fold_in before reusing it"))
+    return findings

@@ -1,0 +1,47 @@
+"""``qmax-division`` — raw ``/ qmax`` at a quantization-scale site.
+
+The PR-6 1-ulp rule: quantization scales must be computed as ``absmax *
+(1.0 / qmax)``, never ``absmax / qmax``.  XLA CPU rewrites constant
+division to reciprocal-multiplication INCONSISTENTLY across program
+contexts (notably across the Pallas-kernel / jnp-oracle boundary), so the
+two spellings differ by 1 ulp and break the bitwise kernel-vs-oracle
+parity tests.  Writing the reciprocal-multiply explicitly pins one
+rounding everywhere.
+
+The rule flags any division whose denominator is a name ending in
+``qmax`` — UNLESS the numerator is the literal ``1``/``1.0`` (that IS the
+blessed reciprocal idiom)."""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.lint import FileContext, Finding, rule
+from repro.analysis.rules.common import dotted_name
+
+
+def _is_qmax(node: ast.AST) -> bool:
+    name = dotted_name(node) or ""
+    return name.rsplit(".", 1)[-1].endswith("qmax")
+
+
+@rule("qmax-division",
+      "scale computed as `x / qmax` instead of `x * (1.0 / qmax)` — "
+      "1-ulp divergence under XLA's inconsistent reciprocal rewrite")
+def check(ctx: FileContext):
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.BinOp)
+                and isinstance(node.op, ast.Div)):
+            continue
+        if not _is_qmax(node.right):
+            continue
+        if isinstance(node.left, ast.Constant) \
+                and node.left.value in (1, 1.0):
+            continue                      # the blessed reciprocal constant
+        findings.append(ctx.finding(
+            "qmax-division", node,
+            "dividing by qmax at a scale site: write `* (1.0 / qmax)` — "
+            "XLA's division->reciprocal rewrite is context-dependent and "
+            "costs 1 ulp of kernel/oracle parity"))
+    return findings

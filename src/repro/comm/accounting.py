@@ -41,7 +41,6 @@ adds its +4 B/message only on the simulated wire (``wire=`` ctor arg).
 """
 from __future__ import annotations
 
-import re
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -148,19 +147,6 @@ def tree_bucketed_wire_bytes_per_server(quantizer: cp.StochasticQuantizer,
     return nb * (code_bytes + scale_bytes)
 
 
-# one compiled-HLO collective, sync or async-start form, e.g.
-#   %all-gather.3 = s8[4,256]{1,0} all-gather(s8[1,256]{1,0} %x), ...
-#   %ag = (s8[1,256], s8[4,256]) all-gather-start(s8[1,256] %x), ...
-# (the matching '-done' op is intentionally NOT matched — its result
-# aliases the start op's output buffer and would double-count)
-_HLO_COLLECTIVE = re.compile(
-    r"=\s+(\(?[^=]*?)\s*(all-gather|collective-permute)(-start)?\(")
-_HLO_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
-_HLO_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-              "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-              "f64": 8}
-
-
 def hlo_collective_bytes(hlo_text: str) -> List[Dict[str, object]]:
     """Parse a compiled-HLO dump into its gather/permute collectives:
     ``[{op, dtype, shape, bytes}, ...]`` with ``bytes`` the RESULT buffer
@@ -170,23 +156,14 @@ def hlo_collective_bytes(hlo_text: str) -> List[Dict[str, object]]:
     LARGEST element is the gathered buffer).  Test/benchmark
     instrumentation for the physical-wire claim: the dtypes and shapes
     here are what actually crossed the interconnect, and must match the
-    codec's ``wire_block_bytes``."""
-    out: List[Dict[str, object]] = []
-    for m in _HLO_COLLECTIVE.finditer(hlo_text):
-        result_types, op = m.group(1), m.group(2)
-        best = None
-        for dtype, dims in _HLO_SHAPE.findall(result_types):
-            if dtype not in _HLO_BYTES:
-                continue
-            shape = tuple(int(x) for x in dims.split(",") if x)
-            elems = int(np.prod(shape)) if shape else 1
-            nbytes = elems * _HLO_BYTES[dtype]
-            if best is None or nbytes > best["bytes"]:
-                best = {"op": op, "dtype": dtype, "shape": shape,
-                        "bytes": nbytes}
-        if best is not None:
-            out.append(best)
-    return out
+    codec's ``wire_block_bytes``.
+
+    Kept as the comm-facing name; since PR 8 the parser itself lives in
+    ``repro.analysis.hlo_audit.collective_sites`` so the byte ledger, the
+    wire regression tests and the contract auditor
+    (``analysis.contracts``) share ONE HLO pass."""
+    from repro.analysis.hlo_audit import collective_sites
+    return collective_sites(hlo_text)
 
 
 class BytesTracker:

@@ -286,8 +286,11 @@ def apply_byzantine(server_tree: Any, codes: jax.Array, key: jax.Array,
             if atk.kind == "sign_flip":
                 attacked = (-atk.scale) * leaf
             elif atk.kind == "scaled_noise":
+                # fold in the attack index: two scaled_noise entries in one
+                # schedule must not draw the SAME noise from the leaf key
                 attacked = leaf + atk.scale * jax.random.normal(
-                    leaf_key, leaf.shape, leaf.dtype)
+                    jax.random.fold_in(leaf_key, idx), leaf.shape,
+                    leaf.dtype)
             else:  # inlier_shift
                 hmask = honest.reshape((-1,) + (1,) * (leaf.ndim - 1))
                 hmin = jnp.where(hmask, leaf,

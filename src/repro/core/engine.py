@@ -172,6 +172,18 @@ class DynamicFederationEngine:
                 cfg, self.loss_fn, self.optimizer), donate_argnums=(0,))
         return self._steps[m]
 
+    def compile_counts(self) -> Dict[int, int]:
+        """Per federation size M, how many distinct programs the cached
+        epoch step has traced.  The dynamic-mode contract is EXACTLY 1:
+        the EpochSchedule operand is traced, so mask/mixing/byz variation
+        must never change the trace signature.  A count above 1 means a
+        schedule operand leaked into trace structure (weak-type flip,
+        rank change, Python scalar) and every epoch silently recompiles —
+        the regression ``analysis.contracts.audit_engine_retrace`` gates
+        on this surface."""
+        return {m: int(step._cache_size())
+                for m, step in self._steps.items()}
+
     # -- fault surgery -------------------------------------------------------
     def _drop(self, state: dfl.DFLState, server: int) -> dfl.DFLState:
         """Remove ORIGINAL server id ``server`` from the federation."""

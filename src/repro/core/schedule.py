@@ -470,6 +470,66 @@ class FaultSchedule:
     def last_epoch(self) -> int:
         return max((e.epoch for e in self.events), default=-1)
 
+    @staticmethod
+    def from_trace(trace: np.ndarray, *,
+                   min_down_epochs: int = 1) -> "FaultSchedule":
+        """Derive correlated drop/rejoin churn from an ``(E, M, N)``
+        availability trace — the SAME JSONL logs
+        ``ParticipationSchedule(kind="trace")`` replays
+        (``load_participation_trace`` / ``diurnal_trace``), so one fleet
+        log drives both participation masks and server-level surgery.
+
+        Server ``i`` is DOWN at epoch ``p`` iff its whole client row is
+        zero (no client of that server reported in).  Each maximal outage
+        ``[p0, p1)`` becomes ``drop`` at epoch ``p0`` and ``rejoin`` at
+        epoch ``p1`` (events fire at the START of an epoch, matching the
+        engine's surgery point); an outage still running at the end of
+        the trace gets no rejoin.  Outages shorter than
+        ``min_down_epochs`` are ignored as logging blips — raise it to
+        keep transient gaps from thrashing the jit cache with drop/rejoin
+        resizes.  Rejects a trace with an epoch where EVERY server is
+        down (the surgery would leave an empty federation); round-trip:
+        replaying the events reproduces the trace's (blip-filtered)
+        down-timeline exactly (``tests/test_dynamic_federation.py``)."""
+        t = np.asarray(trace)
+        if t.ndim != 3 or t.shape[0] < 1:
+            raise ValueError(f"trace must be (E, M, N) with E >= 1, got "
+                             f"shape {t.shape}")
+        if not np.isin(t, (0, 1)).all():
+            raise ValueError("trace entries must be 0/1 availability")
+        if min_down_epochs < 1:
+            raise ValueError("min_down_epochs must be >= 1")
+        epochs, m, _ = t.shape
+        down = t.sum(axis=2) == 0                          # (E, M)
+        # blip filter BEFORE the all-down check: a one-epoch global gap
+        # below the threshold never becomes surgery, so it is survivable
+        kept = np.zeros_like(down)
+        events = []
+        for i in range(m):
+            p = 0
+            while p < epochs:
+                if not down[p, i]:
+                    p += 1
+                    continue
+                q = p
+                while q < epochs and down[q, i]:
+                    q += 1
+                if q - p >= min_down_epochs:
+                    kept[p:q, i] = True
+                    events.append(FaultEvent(p, "drop", i))
+                    if q < epochs:
+                        events.append(FaultEvent(q, "rejoin", i))
+                p = q
+        all_down = np.nonzero(kept.all(axis=1))[0]
+        if all_down.size:
+            raise ValueError(
+                f"availability trace has every server down at epoch(s) "
+                f"{all_down.tolist()[:5]} — the derived surgery would "
+                f"leave an empty federation; raise min_down_epochs or "
+                f"clean the log")
+        events.sort(key=lambda e: (e.epoch, e.kind == "drop", e.server))
+        return FaultSchedule(tuple(events))
+
 
 # ---------------------------------------------------------------------------
 # Byzantine (adversarial-server) schedules

@@ -1,0 +1,8 @@
+"""Seeded violation: jax.jit of an epoch step without donation."""
+import jax
+
+from repro.core import build_dfl_epoch_step
+
+
+def undonated(cfg, loss_fn, opt):
+    return jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt))   # two copies

@@ -1,0 +1,22 @@
+"""Seeded violations: host syncs inside compiled bodies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def decorated_item(x):
+    return x + x.mean().item()            # .item() inside a jitted body
+
+
+def jitted_at_call_site():
+    def step(w, g):
+        lr = float(g)                     # float() of a traced operand
+        return w - lr * g
+    return jax.jit(step)
+
+
+def scanned_asarray():
+    def body(carry, x):
+        return carry + np.asarray(x), None   # host materialise in scan body
+    return jax.lax.scan(body, jnp.zeros(()), jnp.arange(3.0))

@@ -1,0 +1,17 @@
+"""Seeded violation: PRNG key consumed twice, and sampled in a loop."""
+import jax
+
+
+def straight_line_reuse():
+    key = jax.random.key(0)
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))        # reuse: same draws as `a`'s stream
+    return a, b
+
+
+def loop_invariant_key():
+    key = jax.random.key(1)
+    outs = []
+    for _ in range(3):
+        outs.append(jax.random.normal(key, (2,)))   # identical every iteration
+    return outs

@@ -1,0 +1,10 @@
+"""Seeded violations: mutable default + dead EpochSchedule operand."""
+
+
+def accumulate(x, seen=[]):          # shared across every call
+    seen.append(x)
+    return seen
+
+
+def epoch_step_dynamic(state, batches, sched):
+    return state, batches            # sched never read: mask/mixing dropped

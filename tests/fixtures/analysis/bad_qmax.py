@@ -1,0 +1,13 @@
+"""Seeded violation: raw division by qmax at a scale site."""
+import jax.numpy as jnp
+
+
+def scales(absmax, qmax):
+    return jnp.where(absmax > 0, absmax / qmax, 1.0)    # the 1-ulp trap
+
+
+class Quantizer:
+    qmax = 127.0
+
+    def scale(self, absmax):
+        return absmax / self.qmax                       # attribute form

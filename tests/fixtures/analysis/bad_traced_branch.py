@@ -1,0 +1,17 @@
+"""Seeded violations: Python control flow on traced operands."""
+import jax
+
+
+@jax.jit
+def branch_on_traced(x, y):
+    if x > 0:                      # freezes at trace time
+        return x + y
+    return x - y
+
+
+def while_on_traced():
+    def body(w, tol):
+        while w.sum() > tol:       # trace-time loop on traced values
+            w = w * 0.5
+        return w
+    return jax.jit(body)

@@ -1,0 +1,13 @@
+"""Clean twin: the carried state is donated."""
+import jax
+
+from repro.core import build_dfl_epoch_step
+
+
+def donated(cfg, loss_fn, opt):
+    return jax.jit(build_dfl_epoch_step(cfg, loss_fn, opt),
+                   donate_argnums=(0,))
+
+
+def unrelated_jit(fn):
+    return jax.jit(fn)        # not an epoch step: no donation contract

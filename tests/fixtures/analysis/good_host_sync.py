@@ -1,0 +1,21 @@
+"""Clean twin: host reads happen OUTSIDE the compiled step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def all_traced(x):
+    return x + x.mean()
+
+
+def host_read_outside():
+    step = jax.jit(lambda w, g: w - 0.1 * g)
+    w = step(jnp.ones(()), jnp.ones(()))
+    return float(w), np.asarray(w), w.item()    # outside jit: fine
+
+
+def scan_stays_traced():
+    def body(carry, x):
+        return carry + x, None
+    return jax.lax.scan(body, jnp.zeros(()), jnp.arange(3.0))

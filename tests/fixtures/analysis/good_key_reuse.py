@@ -1,0 +1,25 @@
+"""Clean twin: every sampler gets a fresh key via split / fold_in."""
+import jax
+
+
+def straight_line_split():
+    ka, kb = jax.random.split(jax.random.key(0))
+    a = jax.random.normal(ka, (4,))
+    b = jax.random.uniform(kb, (4,))
+    return a, b
+
+
+def loop_fold_in():
+    key = jax.random.key(1)
+    outs = []
+    for i in range(3):
+        k = jax.random.fold_in(key, i)
+        outs.append(jax.random.normal(k, (2,)))
+    return outs
+
+
+def loop_over_split():
+    outs = []
+    for k in jax.random.split(jax.random.key(2), 3):
+        outs.append(jax.random.normal(k, (2,)))
+    return outs

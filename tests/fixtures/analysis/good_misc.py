@@ -1,0 +1,16 @@
+"""Clean twin: None default; schedule operand threaded (or disavowed)."""
+
+
+def accumulate(x, seen=None):
+    seen = [] if seen is None else seen
+    seen.append(x)
+    return seen
+
+
+def epoch_step_dynamic(state, batches, sched):
+    mask = sched.mask
+    return state, (batches, mask)
+
+
+def static_step(state, batches, _sched):
+    return state, batches            # underscore: explicitly unused

@@ -1,0 +1,17 @@
+"""Clean twin: multiply by the reciprocal CONSTANT (the PR-6 idiom)."""
+import jax.numpy as jnp
+
+
+def scales(absmax, qmax):
+    return jnp.where(absmax > 0, absmax * (1.0 / qmax), 1.0)
+
+
+class Quantizer:
+    qmax = 127.0
+
+    def scale(self, absmax):
+        return absmax * (1.0 / self.qmax)
+
+
+def unrelated_division(x, total):
+    return x / total            # not a qmax site

@@ -1,0 +1,19 @@
+"""Clean twin: structural tests and lax control flow."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def structural_and_lax(x, y):
+    if y is None:                              # structural: pytree shape
+        return x
+    return jnp.where(x > 0, x + y, x - y)      # traced select
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def static_branch(x, mode):
+    if mode == "double":                       # static_argnames: exempt
+        return x * 2
+    return x

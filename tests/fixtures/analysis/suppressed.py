@@ -1,0 +1,14 @@
+"""Suppression-grammar fixture: one reasoned (silences), one bare
+(surfaces as bare-suppression), one naming an unknown rule."""
+
+
+def reasoned(absmax, qmax):
+    return absmax / qmax  # repro: ignore[qmax-division]: fixture exercising the reasoned-suppression path
+
+
+def bare(absmax, qmax):
+    return absmax / qmax  # repro: ignore[qmax-division]
+
+
+def unknown(x):
+    return x  # repro: ignore[no-such-rule]: reason present but rule unknown

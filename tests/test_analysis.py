@@ -1,0 +1,323 @@
+"""repro.analysis: the lint engine (seeded fixtures + clean twins +
+suppression grammar + CLI), the HLO auditor's edge cases, and the
+compiled-program contract table — including the deliberately-dropped
+donation that MUST fail and the per-leaf collective regression."""
+
+import io
+import json
+from contextlib import redirect_stdout
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import DEFAULT_ROOTS, RULES, hlo_audit, lint_file, lint_paths
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.contracts import (CONTRACT_TABLE, audit_cell, audit_table,
+                                      audit_wire_hlo, lower_cell)
+from repro.core import FaultEvent, FaultSchedule
+from repro.core.schedule import (diurnal_trace, load_participation_trace,
+                                 save_participation_trace)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+
+# ---------------------------------------------------------------------------
+# seeded fixtures: each bad file must flag exactly its rule(s); each clean
+# twin must be silent
+# ---------------------------------------------------------------------------
+
+BAD_FIXTURES = {
+    "bad_key_reuse.py": {"key-reuse": 2},
+    "bad_host_sync.py": {"host-sync-in-jit": 3},
+    "bad_traced_branch.py": {"traced-branch": 2},
+    "bad_donation.py": {"undonated-jit": 1},
+    "bad_qmax.py": {"qmax-division": 2},
+    "bad_misc.py": {"mutable-default": 1, "dead-schedule-operand": 1},
+}
+
+GOOD_FIXTURES = ["good_key_reuse.py", "good_host_sync.py",
+                 "good_traced_branch.py", "good_donation.py",
+                 "good_qmax.py", "good_misc.py"]
+
+
+@pytest.mark.parametrize("name", sorted(BAD_FIXTURES))
+def test_bad_fixture_flags_expected_rules(name):
+    findings = lint_file(FIXTURES / name)
+    got = {}
+    for f in findings:
+        got[f.rule] = got.get(f.rule, 0) + 1
+    assert got == BAD_FIXTURES[name]
+
+
+@pytest.mark.parametrize("name", GOOD_FIXTURES)
+def test_clean_twin_is_silent(name):
+    assert lint_file(FIXTURES / name) == []
+
+
+def test_findings_are_sorted_and_carry_positions():
+    findings = lint_file(FIXTURES / "bad_key_reuse.py")
+    lines = [f.line for f in findings]
+    assert lines == sorted(lines) and all(l > 0 for l in lines)
+    d = findings[0].to_dict()
+    assert set(d) >= {"rule", "path", "line", "col", "message"}
+    assert findings[0].rule in RULES
+    # text rendering is path:line:col: [rule] message
+    assert findings[0].format().startswith(str(FIXTURES / "bad_key_reuse.py"))
+
+
+def test_rules_subset_restricts_findings():
+    findings = lint_file(FIXTURES / "bad_misc.py", rules=["mutable-default"])
+    assert {f.rule for f in findings} == {"mutable-default"}
+
+
+def test_syntax_error_becomes_single_finding(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    findings = lint_file(p)
+    assert [f.rule for f in findings] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# suppression grammar
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_semantics():
+    findings = lint_file(FIXTURES / "suppressed.py")
+    # the reasoned suppression silences qmax-division entirely; the bare
+    # one still suppresses but surfaces as bare-suppression; the
+    # unknown-rule one suppresses nothing and is itself flagged.
+    assert [f.rule for f in findings] == ["bare-suppression",
+                                         "bare-suppression"]
+    assert not any(f.rule == "qmax-division" for f in findings)
+    msgs = " ".join(f.message for f in findings)
+    assert "no reason" in msgs and "no-such-rule" in msgs
+
+
+def test_suppression_comment_inside_string_is_inert(tmp_path):
+    p = tmp_path / "s.py"
+    p.write_text('def f(absmax, qmax):\n'
+                 '    s = "# repro: ignore[qmax-division]: not a comment"\n'
+                 '    return absmax / qmax, s\n')
+    assert [f.rule for f in lint_file(p)] == ["qmax-division"]
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is analysis-clean (tentpole acceptance) and the walker
+# skips fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_lint_clean():
+    roots = [REPO / r for r in DEFAULT_ROOTS]
+    findings = lint_paths(roots)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_walker_excludes_fixture_dirs():
+    findings = lint_paths([REPO / "tests"])
+    assert not any("fixtures" in Path(f.path).parts for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# CLI (in-process: fast tier forbids subprocess helpers)
+# ---------------------------------------------------------------------------
+
+
+def test_cli_nonzero_on_seeded_fixture_and_json_parses():
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc = analysis_main([str(FIXTURES / "bad_qmax.py"),
+                            "--format", "json"])
+    assert rc == 1
+    report = json.loads(buf.getvalue())
+    assert report["count"] == 2
+    assert {f["rule"] for f in report["findings"]} == {"qmax-division"}
+
+
+def test_cli_zero_on_clean_twin_text_format():
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc = analysis_main([str(FIXTURES / "good_qmax.py")])
+    assert rc == 0
+    assert "0 finding(s)" in buf.getvalue()
+
+
+def test_cli_output_file_and_list_rules(tmp_path):
+    out = tmp_path / "report.json"
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc = analysis_main([str(FIXTURES / "bad_misc.py"),
+                            "--format", "json", "--output", str(out)])
+    assert rc == 1 and json.loads(out.read_text())["count"] == 2
+    with redirect_stdout(io.StringIO()) as buf2:
+        assert analysis_main(["--list-rules"]) == 0
+    listing = buf2.getvalue()
+    assert all(name in listing for name in RULES)
+
+
+# ---------------------------------------------------------------------------
+# hlo_audit edge cases (synthetic HLO: no lowering needed)
+# ---------------------------------------------------------------------------
+
+
+def test_collective_sites_zero_collective_program():
+    assert hlo_audit.collective_sites("ENTRY main { ROOT x = f32[2] add(a, b) }") == []
+
+
+def test_collective_sites_sync_and_async_ragged():
+    hlo = """
+  ag = s8[5,3]{1,0} all-gather(s8[1,3]{1,0} %p), replica_groups={}
+  ag2 = (f32[7]{0}, f32[7]{0}) all-gather-start(f32[1]{0} %q), dims={0}
+  cp = u32[] collective-permute(u32[] %tok)
+"""
+    sites = hlo_audit.collective_sites(hlo)
+    assert [(s["op"], s["dtype"], s["bytes"]) for s in sites] == [
+        ("all-gather", "s8", 15),          # 5*3 * 1 byte
+        ("all-gather", "f32", 28),         # async: largest tuple element
+        ("collective-permute", "u32", 4),  # scalar shape -> one element
+    ]
+    assert sites[0]["shape"] == (5, 3) and sites[2]["shape"] == ()
+
+
+def test_alias_pairs_and_has_donation():
+    hlo = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+           "{1}: (0, {1}, must-alias) }\n")
+    pairs = hlo_audit.input_output_alias_pairs(hlo)
+    assert len(pairs) == 2 and hlo_audit.has_donation(hlo)
+    assert not hlo_audit.has_donation("HloModule m\n")
+
+
+def test_host_callback_sites():
+    hlo = 'x = f32[] custom-call(), custom_call_target="xla_python_cpu_callback"'
+    assert hlo_audit.host_callback_sites(hlo) == ["xla_python_cpu_callback"]
+    benign = 'y = f32[] custom-call(), custom_call_target="TopK"'
+    assert hlo_audit.host_callback_sites(benign) == []
+
+
+# ---------------------------------------------------------------------------
+# wire contract on synthetic HLO: bucketed OK, per-leaf regression caught
+# ---------------------------------------------------------------------------
+
+_BUCKETED = """
+  a = s8[4,100]{1,0} all-gather(s8[1,100]{1,0} %codes)
+  b = f32[4,2]{1,0} all-gather(f32[1,2]{1,0} %scales)
+"""
+
+_PER_LEAF = "\n".join(
+    f"  g{i} = f32[4,{n}]{{1,0}} all-gather(f32[1,{n}]{{1,0}} %p{i})"
+    for i, n in enumerate([30, 10, 40, 5, 25, 60]))
+
+
+def test_audit_wire_hlo_accepts_bucketed_program():
+    assert audit_wire_hlo(_BUCKETED) == []
+
+
+def test_audit_wire_hlo_catches_per_leaf_regression():
+    violations = audit_wire_hlo(_PER_LEAF)
+    assert any("per-leaf" in v for v in violations)
+
+
+def test_audit_wire_hlo_catches_float_payload():
+    # two sites (count OK) but the payload went out as f32 instead of s8
+    hlo = """
+  a = f32[4,100]{1,0} all-gather(f32[1,100]{1,0} %codes)
+  b = f32[4,2]{1,0} all-gather(f32[1,2]{1,0} %scales)
+"""
+    violations = audit_wire_hlo(hlo, allowed_dtypes=("s8",))
+    assert any("f32" in v for v in violations)
+
+
+# ---------------------------------------------------------------------------
+# contract table: >= 12 cells, all green; dropped donation must fail
+# ---------------------------------------------------------------------------
+
+
+def test_contract_table_covers_matrix_and_is_green():
+    assert len(CONTRACT_TABLE) >= 12
+    axes = {(c.consensus_mode, c.mixing, c.compression, c.error_feedback,
+             c.wire, c.dynamic) for c in CONTRACT_TABLE}
+    assert len(axes) == len(CONTRACT_TABLE), "duplicate contract cells"
+    results = audit_table()
+    bad = [r for r in results if not r.ok]
+    assert not bad, "\n".join(v for r in bad for v in r.violations)
+    # every audited cell carries lowering stats for the report artifact
+    assert all(r.stats.get("aliased") is not None for r in results)
+
+
+def test_dropped_donation_is_caught():
+    cell = CONTRACT_TABLE[0]
+    assert cell.donate
+    hlo = lower_cell(cell, drop_donation=True)
+    result = audit_cell(cell, hlo=hlo)
+    assert not result.ok
+    assert any("donat" in v or "alias" in v for v in result.violations)
+
+
+@pytest.mark.slow
+def test_engine_retrace_contract():
+    from repro.analysis.contracts import audit_engine_retrace
+    report = audit_engine_retrace()
+    assert report.violations == []
+    assert len(report.compile_counts) >= 2
+    assert all(c == 1 for c in report.compile_counts.values())
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule.from_trace: churn derived from the same JSONL traces the
+# participation schedule replays
+# ---------------------------------------------------------------------------
+
+
+def test_from_trace_hand_built_outage():
+    # server 1 fully dark epochs 2..3, back at 4; server 0 never down
+    trace = np.ones((6, 2, 3), dtype=np.float64)
+    trace[2:4, 1, :] = 0.0
+    fs = FaultSchedule.from_trace(trace)
+    assert fs.events == (FaultEvent(epoch=2, kind="drop", server=1),
+                         FaultEvent(epoch=4, kind="rejoin", server=1))
+
+
+def test_from_trace_trailing_outage_has_no_rejoin():
+    trace = np.ones((5, 2, 2))
+    trace[3:, 0, :] = 0.0
+    fs = FaultSchedule.from_trace(trace)
+    assert fs.events == (FaultEvent(epoch=3, kind="drop", server=0),)
+
+
+def test_from_trace_blip_filter():
+    trace = np.ones((6, 2, 2))
+    trace[1, 0, :] = 0.0          # 1-epoch blip
+    trace[3:5, 1, :] = 0.0        # real 2-epoch outage
+    fs = FaultSchedule.from_trace(trace, min_down_epochs=2)
+    assert all(e.server == 1 for e in fs.events)
+
+
+def test_from_trace_all_servers_down_raises():
+    trace = np.ones((4, 2, 2))
+    trace[2, :, :] = 0.0
+    with pytest.raises(ValueError, match="every server"):
+        FaultSchedule.from_trace(trace)
+
+
+def test_from_trace_rejects_bad_shapes_and_values():
+    with pytest.raises(ValueError):
+        FaultSchedule.from_trace(np.ones((4, 3)))
+    bad = np.ones((4, 2, 2))
+    bad[0, 0, 0] = 0.5
+    with pytest.raises(ValueError):
+        FaultSchedule.from_trace(bad)
+
+
+def test_from_trace_jsonl_round_trip(tmp_path):
+    trace = diurnal_trace(12, 3, 2, period=6, base=0.9, amplitude=0.9,
+                          min_per_server=0, seed=7)
+    path = tmp_path / "avail.jsonl"
+    save_participation_trace(path, trace)
+    fs_disk = FaultSchedule.from_trace(load_participation_trace(path))
+    fs_mem = FaultSchedule.from_trace(trace)
+    assert fs_disk.events == fs_mem.events
+    # every derived event indexes a real epoch/server of the trace
+    for e in fs_mem.events:
+        assert 0 <= e.epoch < 12 and 0 <= e.server < 3

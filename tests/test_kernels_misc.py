@@ -78,9 +78,10 @@ def test_consensus_mix_pytree_roundtrip():
     m = 5
     a = jnp.asarray(collapse_mixing(
         tp.metropolis_weights(tp.line_graph(m)), 9), jnp.float32)
-    tree = {"w": jax.random.normal(KEY, (m, 17, 3)),
-            "b": jax.random.normal(KEY, (m, 5)),
-            "nested": {"x": jax.random.normal(KEY, (m, 2, 2, 2))}}
+    kw, kb, kx = jax.random.split(KEY, 3)
+    tree = {"w": jax.random.normal(kw, (m, 17, 3)),
+            "b": jax.random.normal(kb, (m, 5)),
+            "nested": {"x": jax.random.normal(kx, (m, 2, 2, 2))}}
     out = consensus_mix_pytree(a, tree, block_d=16)
     for lo, li in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
         ref = consensus_mix_ref(a, li.reshape(m, -1)).reshape(li.shape)
@@ -92,8 +93,9 @@ def test_consensus_mix_pytree_roundtrip():
     (32, 128, 8), (100, 256, 32), (256, 960, 256), (7, 64, 8),
 ])
 def test_rmsnorm_kernel(rows, d, block):
-    x = jax.random.normal(KEY, (rows, d))
-    scale = jax.random.normal(KEY, (d,))
+    kx, ks = jax.random.split(KEY)
+    x = jax.random.normal(kx, (rows, d))
+    scale = jax.random.normal(ks, (d,))
     out = ops.rmsnorm(x, scale, block_rows=block)
     ref = rmsnorm_ref(x, scale)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
