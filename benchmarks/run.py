@@ -44,6 +44,12 @@ theory quantities the paper derives and our beyond-paper claims):
                         robust screens (trimmed mean, median, clipped) —
                         honest-server error, honest disagreement, and the
                         per-defense wall-clock overhead
+  obs_phases            the repro.obs telemetry stack on a full dynamic
+                        scenario: per-phase wall breakdown (local vs
+                        gossip vs surgery vs host aggregation) from the
+                        span tracer, obs-on vs obs-off overhead, the
+                        bitwise-inertness cross-check, and validating
+                        JSONL + Chrome-trace artifacts for CI
   kernel_micro          Pallas-kernel (interpret) vs jnp-oracle parity +
                         CPU wall time (correctness harness, not TPU perf)
   lm_epoch_throughput   DFL epoch wall time on a smoke LM (CPU reference)
@@ -695,6 +701,96 @@ def bench_byzantine_consensus():
     record("byzantine_consensus", "graph", "complete8")
 
 
+def bench_obs_phases():
+    """The repro.obs stack on a full dynamic scenario (sampled
+    participation + faulty links + drop/rejoin churn + physical int8+EF
+    wire): per-phase wall breakdown from the span tracer (local vs gossip
+    vs surgery vs host aggregation), obs-on vs obs-off overhead, the
+    bitwise-inertness cross-check, and validating JSONL + Chrome trace
+    artifacts for CI to upload."""
+    from repro.core import (FLTopology, FaultEvent, FaultSchedule,
+                            ParticipationSchedule, TopologySchedule,
+                            init_dfl_state, make_engine)
+    from repro.data import RegressionSpec, make_regression_task
+    from repro.obs import (JSONLSink, MemorySink, MetricsHub, Observability,
+                           Tracer, load_jsonl, validate_chrome_trace,
+                           validate_jsonl)
+    from repro.optim import sgd
+
+    m, n, t_c, t_s, epochs = 4, 4, S(20, 4), S(8, 3), S(30, 8)
+    topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                      t_server=t_s, graph_kind="ring")
+    task = make_regression_task(topo, RegressionSpec(heterogeneity=0.5),
+                                seed=0)
+    gamma = 0.4 / (9.0 * t_c)
+    kw = dict(consensus_mode="gossip", compression="int8",
+              error_feedback=True, wire="physical",
+              participation=ParticipationSchedule(kind="bernoulli",
+                                                  rate=0.7, seed=7),
+              topology_schedule=TopologySchedule(kind="edge_drop",
+                                                 drop_prob=0.3, seed=11),
+              faults=FaultSchedule((FaultEvent(epochs // 3, "drop", 2),
+                                    FaultEvent(2 * epochs // 3, "rejoin",
+                                               2))))
+
+    def run(obs):
+        engine = make_engine(topo, task["loss_fn"], sgd(gamma), obs=obs,
+                             **kw)
+        state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(gamma),
+                               jax.random.key(0))
+        hist = {}
+        t0 = time.time()
+        for epoch in range(epochs):
+            state, rec = engine.run_epoch(state, epoch, task["batch_fn"])
+            for k, v in rec.items():
+                hist.setdefault(k, []).append(v)
+        return hist, time.time() - t0, engine
+
+    hist_off, wall_off, _ = run(None)
+
+    os.makedirs(OUT, exist_ok=True)
+    jsonl_path = os.path.join(OUT, "telemetry_smoke.jsonl")
+    trace_path = os.path.join(OUT, "trace_smoke.json")
+    tracer = Tracer()
+    obs = Observability(
+        hub=MetricsHub([MemorySink(),
+                        JSONLSink(jsonl_path,
+                                  run_info={"bench": "obs_phases",
+                                            "smoke": SMOKE})]),
+        tracer=tracer, monitor=True)
+    hist_on, wall_on, engine = run(obs)
+    obs.close()
+    tracer.save_chrome(trace_path)
+
+    inert = (set(hist_off) == set(hist_on)
+             and all(hist_off[k] == hist_on[k] for k in hist_off))
+    record("obs_phases", "bitwise_inert", inert)
+    record("obs_phases", "epochs", epochs)
+    record("obs_phases", "wall_off_s", round(wall_off, 3))
+    record("obs_phases", "wall_on_s", round(wall_on, 3))
+    record("obs_phases", "obs_overhead_pct",
+           round(100.0 * (wall_on - wall_off) / max(wall_off, 1e-9), 1))
+    phase_s = {}
+    for sp in tracer.spans:
+        phase_s[sp.name] = phase_s.get(sp.name, 0.0) + sp.duration_ns / 1e9
+    for name in ("local-period", "gossip-period", "fault-surgery",
+                 "host-aggregation"):
+        record("obs_phases", f"phase_{name.replace('-', '_')}_s",
+               round(phase_s.get(name, 0.0), 4))
+    compiles = [ev["args"]["cause"] for ev in tracer.instants
+                if ev["name"] == "compile"]
+    record("obs_phases", "compiles", len(compiles))
+    record("obs_phases", "compile_causes", ";".join(sorted(set(compiles))))
+    n_events = len(validate_jsonl(load_jsonl(jsonl_path)))
+    import json as _json
+    with open(trace_path) as f:
+        n_trace = len(validate_chrome_trace(_json.load(f)))
+    record("obs_phases", "jsonl_events", n_events)
+    record("obs_phases", "trace_events", n_trace)
+    record("obs_phases", "scenario",
+           "bernoulli0.7+edge_drop0.3+churn+int8_ef_physical")
+
+
 BENCHES = {
     "fig3_consensus": bench_fig3_consensus,
     "thm1_epsilon_sweep": bench_thm1_epsilon_sweep,
@@ -705,6 +801,7 @@ BENCHES = {
     "consensus_backends": bench_consensus_backends,
     "compressed_consensus": bench_compressed_consensus,
     "byzantine_consensus": bench_byzantine_consensus,
+    "obs_phases": bench_obs_phases,
     "kernel_micro": bench_kernel_micro,
     "lm_epoch_throughput": bench_lm_epoch_throughput,
 }
@@ -765,7 +862,7 @@ def write_bench_consensus_json() -> None:
     import json
 
     tracked = ("consensus_backends", "compressed_consensus",
-               "byzantine_consensus")
+               "byzantine_consensus", "obs_phases")
     per_bench = {name: {m: v for n, m, v in RESULTS if n == name}
                  for name in tracked}
     per_bench = {k: v for k, v in per_bench.items() if v}

@@ -17,6 +17,13 @@ step through four scenarios the static paper setting cannot express:
 and prints each scenario's convergence trace: max server error to w*,
 server disagreement (Lemma 1 LHS), participation rate, and the host-side
 product contraction sigma_prod = ||prod_p A_p^{T_S} - 11'/M||_2.
+
+Each scenario runs with the repro.obs stack attached (JSONL telemetry +
+span tracer + convergence watchdogs — see docs/observability.md), so the
+run leaves /tmp/dynfed_<scenario>.jsonl and a Perfetto-loadable
+/tmp/dynfed_<scenario>_trace.json behind, and the summary reports any
+watchdog that fired.  Observability is bitwise inert: the numbers below
+are identical with or without it.
 """
 import jax
 import jax.numpy as jnp
@@ -26,6 +33,8 @@ from repro.core import (FLTopology, FaultEvent, FaultSchedule,
                         ParticipationSchedule, TopologySchedule,
                         init_dfl_state, make_engine)
 from repro.data import RegressionSpec, make_regression_task
+from repro.obs import (JSONLSink, MemorySink, MetricsHub, Observability,
+                       Tracer)
 from repro.optim import sgd
 
 M, N, T_C, T_S, EPOCHS = 5, 5, 25, 10, 40
@@ -51,18 +60,27 @@ def main() -> None:
     }
 
     print(f"{'scenario':<14}{'err_to_w*':>10}{'disagree':>11}"
-          f"{'part':>7}{'sigma_prod':>12}{'M_end':>7}")
+          f"{'part':>7}{'sigma_prod':>12}{'M_end':>7}  watchdogs")
     for name, kw in scenarios.items():
-        engine = make_engine(topo, loss_fn, sgd(gamma), **kw)
+        tracer = Tracer()
+        obs = Observability(
+            hub=MetricsHub([MemorySink(),
+                            JSONLSink(f"/tmp/dynfed_{name}.jsonl",
+                                      run_info={"scenario": name})]),
+            tracer=tracer, monitor=True)
+        engine = make_engine(topo, loss_fn, sgd(gamma), obs=obs, **kw)
         state = init_dfl_state(engine.cfg, jnp.zeros((2,)), sgd(gamma),
                                jax.random.key(0))
         state, hist = engine.run(state, EPOCHS, batch_fn)
+        obs.close()
+        tracer.save_chrome(f"/tmp/dynfed_{name}_trace.json")
         servers = np.asarray(state.client_params[:, 0])
         err = float(np.linalg.norm(servers - w_star, axis=-1).max())
+        fired = ",".join(ev.rule for ev in obs.monitor.events) or "-"
         print(f"{name:<14}{err:>10.4f}{hist['disagreement'][-1]:>11.2e}"
               f"{np.mean(hist['participation']):>7.2f}"
               f"{hist['sigma_prod'][-1]:>12.2e}"
-              f"{int(hist['num_servers'][-1]):>7}")
+              f"{int(hist['num_servers'][-1]):>7}  {fired}")
 
 
 if __name__ == "__main__":

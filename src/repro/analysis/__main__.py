@@ -35,7 +35,7 @@ def main(argv=None) -> int:
     import repro.analysis.rules  # noqa: F401
     if args.list_rules:
         for r in sorted(lint.RULES.values(), key=lambda r: r.name):
-            print(f"{r.name:24s} {r.description}")
+            print(f"{r.name:24s} {r.description}")  # repro: ignore[print-in-library]: CLI report output
         return 0
 
     rules = args.rules.split(",") if args.rules else None
@@ -72,7 +72,7 @@ def main(argv=None) -> int:
             ncells = len(contract_report["cells"])
             body.append(f"contract table: {ncells} cells audited")
         text = "\n".join(body)
-    print(text)
+    print(text)  # repro: ignore[print-in-library]: CLI report output
     if args.output:
         with open(args.output, "w") as fh:
             fh.write(text + "\n")

@@ -2,5 +2,5 @@
 ``analysis.lint.RULES``.  To add a rule, drop a module here that calls
 ``@lint.rule("name", "description")`` and import it below (walkthrough in
 ``docs/static_analysis.md``)."""
-from repro.analysis.rules import (donation, host_sync, misc, prng,  # noqa: F401
-                                  quantization)
+from repro.analysis.rules import (donation, host_sync, misc,  # noqa: F401
+                                  printing, prng, quantization)

@@ -1,0 +1,49 @@
+"""``print-in-library`` — bare ``print()`` inside the library packages.
+
+Library code (anything under ``src/repro/``) must not write to stdout
+directly: ad-hoc prints bypass the ``repro.obs`` sink fan-out (JSONL
+telemetry silently loses whatever was printed), interleave with the
+sanctioned ``ConsoleSink`` epoch lines, and cannot be silenced by
+callers embedding the library.  Route output through a
+``MetricsHub`` sink, or — for genuine CLI surfaces like ``__main__``
+entry points — suppress with ``# repro: ignore[print-in-library]: why``.
+
+Tests, examples and benchmarks are exempt (the rule only fires on paths
+under ``src/repro/``); fixture files stay eligible so the rule's own
+good/bad twins under ``tests/fixtures/analysis/`` exercise it."""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePath
+from typing import List
+
+from repro.analysis.lint import FileContext, Finding, rule
+
+
+def _in_scope(ctx: FileContext) -> bool:
+    parts = PurePath(ctx.path).parts
+    if "fixtures" in parts:        # the rule's own test fixtures
+        return True
+    return "src" in parts and "repro" in parts
+
+
+@rule("print-in-library",
+      "bare print() in library code bypasses the repro.obs sinks — "
+      "route output through a MetricsHub sink (or suppress at a real "
+      "CLI entry point)")
+def check_print_in_library(ctx: FileContext):
+    findings: List[Finding] = []
+    if not _in_scope(ctx):
+        return findings
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id == "print":
+            findings.append(ctx.finding(
+                "print-in-library", node,
+                "bare print() in library code — emit through a "
+                "repro.obs sink (ConsoleSink owns the console), or "
+                "suppress with '# repro: ignore[print-in-library]: "
+                "reason' at a CLI entry point"))
+    return findings

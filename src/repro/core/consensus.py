@@ -88,7 +88,7 @@ measured ~1e-2 on the fig-3 task, 10x outside the paper's tolerance).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -1230,6 +1230,18 @@ class ConsensusBackend:
         del lam2
         return self._mix(tree, self._resolve(a_p))
 
+    def mix_stats(self, tree: Any, a_p: Optional[jax.Array] = None,
+                  lam2=None) -> Tuple[Any, jax.Array]:
+        """``mix`` plus the period's per-source screen-activity counts —
+        ``(mixed, rejected)`` with ``rejected[j]`` how many values server
+        j had discarded/clipped by its receivers' screens.  Non-``robust``
+        backends screen nothing: the counts are identically zero and the
+        value path is EXACTLY ``mix`` (the robust backends override this
+        with their shared-body stats variants)."""
+        m = self._resolve(a_p).shape[0]
+        return (self.mix(tree, a_p, lam2=lam2),
+                jnp.zeros((m,), jnp.float32))
+
     def mix_push_sum(self, state: PushSumState,
                      a_p: Optional[jax.Array] = None) -> PushSumState:
         """Ratio consensus: numerator streamed through the SAME execution
@@ -1374,9 +1386,10 @@ def _support(a: jax.Array) -> jax.Array:
     return (a > 0) | jnp.eye(a.shape[0], dtype=bool)
 
 
-def _rank_keep_mean(a: jax.Array, leaf: jax.Array, keep_rule) -> jax.Array:
+def _rank_keep_mean_stats(a: jax.Array, leaf: jax.Array,
+                          keep_rule) -> Tuple[jax.Array, jax.Array]:
     """Coordinatewise rank-screened neighbor mean — the shared core of the
-    trimmed-mean and median rounds.
+    trimmed-mean and median rounds — plus its screen-activity readout.
 
     For each receiver ``i`` and each coordinate, the supported values
     (``leaf[j]`` for every ``j`` in i's support, self included) are ranked
@@ -1388,7 +1401,17 @@ def _rank_keep_mean(a: jax.Array, leaf: jax.Array, keep_rule) -> jax.Array:
     Non-neighbors are masked to +inf, so they occupy the ranks at and above
     ``cnt`` and no admissible rule can keep them.  A receiver whose whole
     neighborhood is screened away (past the breakdown point on a traced
-    graph, unverifiable at build time) holds its own value."""
+    graph, unverifiable at build time) holds its own value.
+
+    Returns ``(out, rejected)`` where ``rejected`` is the per-SOURCE
+    screen-activity count: ``rejected[j]`` = how many (receiver,
+    coordinate) pairs discarded server j's supported value this round.
+    The rank screens discard a FIXED number of values per neighborhood
+    (the informative signal is WHOSE values land in the discarded ranks —
+    an attacker's coordinates are rejected far above the honest base
+    rate).  Callers that only need ``out`` take element 0 and XLA
+    dead-code-eliminates the counting — the plain path stays bitwise and
+    cost-identical."""
     m = a.shape[0]
     sup = _support(a)
     cnt = sup.sum(axis=1)                                    # (M,) int
@@ -1402,7 +1425,15 @@ def _rank_keep_mean(a: jax.Array, leaf: jax.Array, keep_rule) -> jax.Array:
     kept = jnp.where(keep, vals, jnp.zeros((), leaf.dtype))
     kcnt = keep.sum(axis=1)
     out = kept.sum(axis=1) / jnp.maximum(kcnt, 1).astype(leaf.dtype)
-    return jnp.where(kcnt > 0, out, leaf)
+    rejected = (supb & ~keep).sum(
+        axis=tuple(i for i in range(keep.ndim) if i != 1),
+        dtype=jnp.float32)                                   # (M,) per source
+    return jnp.where(kcnt > 0, out, leaf), rejected
+
+
+def _rank_keep_mean(a: jax.Array, leaf: jax.Array, keep_rule) -> jax.Array:
+    """``_rank_keep_mean_stats`` without the screen-activity readout."""
+    return _rank_keep_mean_stats(a, leaf, keep_rule)[0]
 
 
 def trimmed_mean_mix(a: jax.Array, tree: Any, f: int) -> Any:
@@ -1444,6 +1475,16 @@ def clip_weights(a: jax.Array, tree: Any,
     away (the attacker), while at ``tau -> inf`` the round degenerates to
     the exact weighted gossip.  Distances are tree-wide l2 norms via the
     Gram identity (one (M, M) accumulation, no (M, M, *w) tensor)."""
+    return clip_weights_stats(a, tree, clip_mult)[0]
+
+
+def clip_weights_stats(a: jax.Array, tree: Any, clip_mult: float = 1.0
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """``clip_weights`` plus its screen-activity readout: ``clipped[j]`` =
+    how many receivers clipped sender j's innovation this round (links
+    where the clip factor actually bit, ``fac < 1``).  One shared body, so
+    the effective matrix is bitwise identical whether or not the count is
+    consumed (XLA dead-code-eliminates it on the plain path)."""
     m = a.shape[0]
     off = _support(a) & ~jnp.eye(m, dtype=bool)
     d2 = jnp.zeros((m, m), jnp.float32)
@@ -1463,7 +1504,8 @@ def clip_weights(a: jax.Array, tree: Any,
                     jnp.minimum(1.0, tau[:, None] / jnp.maximum(dist, 1e-30)),
                     1.0)
     c_off = jnp.where(off, a.astype(jnp.float32) * fac, 0.0)
-    return c_off + jnp.diag(1.0 - c_off.sum(axis=1))
+    clipped = (off & (fac < 1.0)).sum(axis=0, dtype=jnp.float32)  # per source
+    return c_off + jnp.diag(1.0 - c_off.sum(axis=1)), clipped
 
 
 def clipped_mix(a: jax.Array, tree: Any, clip_mult: float = 1.0) -> Any:
@@ -1515,6 +1557,65 @@ def gossip_scan_clipped(a: jax.Array, tree: Any, t_server: int,
     return tree
 
 
+# -- screen-activity variants: same rounds, plus the per-source counts -----
+
+
+def _rank_scan_stats(a: jax.Array, tree: Any, t_server: int,
+                     keep_rule) -> Tuple[Any, jax.Array]:
+    """T_S rank-screened rounds returning ``(tree, rejected)`` with
+    ``rejected[j]`` the total (receiver, coordinate, round, leaf) count of
+    server j's screened-away values this period.  The value path is the
+    exact ``_rank_keep_mean`` round sequence — only the f32 count rides
+    alongside the ``fori_loop`` carry."""
+    m = a.shape[0]
+    if t_server == 0:
+        return tree, jnp.zeros((m,), jnp.float32)
+
+    def leaf_loop(leaf):
+        def body(_, carry):
+            w, rej = carry
+            out, r = _rank_keep_mean_stats(a, w, keep_rule)
+            return out, rej + r
+        return jax.lax.fori_loop(0, t_server, body,
+                                 (leaf, jnp.zeros((m,), jnp.float32)))
+
+    leaves, treedef = jax.tree.flatten(tree)
+    results = [leaf_loop(l) for l in leaves]
+    out = treedef.unflatten([r[0] for r in results])
+    rejected = sum(r[1] for r in results)
+    return out, rejected
+
+
+def gossip_scan_trimmed_stats(a: jax.Array, tree: Any, t_server: int,
+                              f: int) -> Tuple[Any, jax.Array]:
+    """``gossip_scan_trimmed`` + per-source screen-activity counts."""
+    if f < 0:
+        raise ValueError(f"trimmed mean needs f >= 0, got {f}")
+    return _rank_scan_stats(
+        a, tree, t_server, lambda r, c: (r >= f) & (r < c - f))
+
+
+def gossip_scan_median_stats(a: jax.Array, tree: Any,
+                             t_server: int) -> Tuple[Any, jax.Array]:
+    """``gossip_scan_median`` + per-source screen-activity counts."""
+    return _rank_scan_stats(
+        a, tree, t_server,
+        lambda r, c: (r >= (c - 1) // 2) & (r <= c // 2))
+
+
+def gossip_scan_clipped_stats(a: jax.Array, tree: Any, t_server: int,
+                              clip_mult: float = 1.0
+                              ) -> Tuple[Any, jax.Array]:
+    """``gossip_scan_clipped`` + per-source counts of links whose clip
+    factor bit (``fac < 1``), summed over rounds and receivers."""
+    clipped = jnp.zeros((a.shape[0],), jnp.float32)
+    for _ in range(t_server):
+        c, hit = clip_weights_stats(a, tree, clip_mult)
+        tree = mix_pytree(c, tree)
+        clipped = clipped + hit
+    return tree, clipped
+
+
 class TrimmedMeanBackend(ConsensusBackend):
     """Coordinatewise trimmed-mean gossip (``gossip_scan_trimmed``).
 
@@ -1556,6 +1657,16 @@ class TrimmedMeanBackend(ConsensusBackend):
             return gossip_scan(a, tree, self.t_server)
         return gossip_scan_trimmed(a, tree, self.t_server, self.f)
 
+    def mix_stats(self, tree, a_p=None, lam2=None):
+        del lam2
+        a = self._resolve(a_p)
+        if self.f == 0:
+            # no screening requested: the exact weighted schedule, with
+            # identically-zero counts (the f=0 bitwise identity holds)
+            return (gossip_scan(a, tree, self.t_server),
+                    jnp.zeros((a.shape[0],), jnp.float32))
+        return gossip_scan_trimmed_stats(a, tree, self.t_server, self.f)
+
 
 class MedianBackend(ConsensusBackend):
     """Coordinatewise-median gossip (``gossip_scan_median``): the maximal
@@ -1569,6 +1680,11 @@ class MedianBackend(ConsensusBackend):
 
     def _mix(self, tree, a):
         return gossip_scan_median(a, tree, self.t_server)
+
+    def mix_stats(self, tree, a_p=None, lam2=None):
+        del lam2
+        return gossip_scan_median_stats(self._resolve(a_p), tree,
+                                        self.t_server)
 
 
 class ClippedGossipBackend(ConsensusBackend):
@@ -1592,6 +1708,12 @@ class ClippedGossipBackend(ConsensusBackend):
     def _mix(self, tree, a):
         return gossip_scan_clipped(a, tree, self.t_server,
                                    clip_mult=self.clip_mult)
+
+    def mix_stats(self, tree, a_p=None, lam2=None):
+        del lam2
+        return gossip_scan_clipped_stats(self._resolve(a_p), tree,
+                                         self.t_server,
+                                         clip_mult=self.clip_mult)
 
 
 class ShardMapBackend(ConsensusBackend):

@@ -107,6 +107,13 @@ class DFLMetrics(NamedTuple):
     server_disagreement: jax.Array  # ||W - 1 wbar'||_F after consensus (Lemma 1 LHS)
     client_drift: jax.Array         # max_ij ||w^{ij} - w^i_p|| before aggregation (Lemma 3 LHS)
     grad_norm: jax.Array            # mean per-client grad norm of last local step
+    # (M,) per-SOURCE robust-screen activity: how many of server j's values
+    # the receivers' trimmed_mean/median/clipped screens discarded this
+    # epoch's consensus period.  Populated only under a robust backend with
+    # metrics="full" (a static fact of the config, NOT of whether an
+    # observer is attached — so obs on/off runs the same compiled program);
+    # None everywhere else.
+    screen_rejected: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -385,6 +392,29 @@ def wants_error_feedback(cfg: "DFLConfig") -> bool:
             and cfg.consensus_mode != "none")
 
 
+def resolve_backend(cfg: "DFLConfig"):
+    """The ``consensus.ConsensusBackend`` this config's consensus period
+    executes through: the injected ``cfg.consensus_backend`` if any, else
+    one built from ``cfg.consensus_mode`` over the static topology matrix
+    (``None`` for consensus_mode='none').  Shared by the epoch-step
+    builder and the engine's consensus-replay timing probe so both see
+    the SAME execution strategy."""
+    topo = cfg.topology
+    if cfg.consensus_backend is not None:
+        return cfg.consensus_backend
+    if cfg.consensus_mode == "none":
+        return None
+    m = topo.num_servers
+    a_np = topo.mixing_matrix() if m > 1 else np.ones((1, 1))
+    return cns.make_backend(
+        cfg.consensus_mode, a_np, topo.t_server,
+        chebyshev_rounds=cfg.chebyshev_rounds,
+        gossip_flat_sharding=cfg.gossip_flat_sharding,
+        compression=cfg.compression,
+        error_feedback=cfg.error_feedback,
+        wire=cfg.wire)
+
+
 def active_wire(cfg: "DFLConfig") -> Tuple[str, int]:
     """``(wire mode, wire block)`` of the active compression layer —
     resolved from an injected ``consensus.CompressedBackend`` first, then
@@ -431,19 +461,7 @@ def build_dfl_epoch_step(
             "Perron-weighted average — choose DFLConfig(mixing='push_sum') "
             "(unbiased) or mixing='row_stochastic' (the explicit biased "
             "baseline)")
-    a_np = topo.mixing_matrix() if m > 1 else np.ones((1, 1))
-    if cfg.consensus_backend is not None:
-        backend = cfg.consensus_backend
-    elif cfg.consensus_mode == "none":
-        backend = None
-    else:
-        backend = cns.make_backend(
-            cfg.consensus_mode, a_np, topo.t_server,
-            chebyshev_rounds=cfg.chebyshev_rounds,
-            gossip_flat_sharding=cfg.gossip_flat_sharding,
-            compression=cfg.compression,
-            error_feedback=cfg.error_feedback,
-            wire=cfg.wire)
+    backend = resolve_backend(cfg)
     if backend is not None:
         if cfg.mixing != "symmetric" and not backend.supports_directed:
             raise ValueError(
@@ -472,6 +490,14 @@ def build_dfl_epoch_step(
     compressed = (backend is not None
                   and getattr(backend, "compressed", False)
                   and m > 1 and topo.t_server > 0)
+    # robust screen-activity readout: a STATIC fact of the config (robust
+    # backend + full metrics), never of whether an observer is attached —
+    # the obs-on and obs-off programs must stay byte-identical.  On the
+    # plain paths mix_stats is never called, so nothing changes there
+    # either.
+    screen_stats = (backend is not None
+                    and getattr(backend, "robust", False)
+                    and cfg.metrics == "full")
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     # vmap over clients within a server, then over servers
@@ -525,12 +551,15 @@ def build_dfl_epoch_step(
         ``ef_residual``/``key``: the error-feedback residual tree and the
         stochastic-rounding key, threaded only under compressed consensus;
         ``lam2``: the per-epoch spectral hint for spectral backends.
-        Returns ``(server_tree, psum_weight, ef_residual)`` — the weight is
-        the terminal push-sum weight under mixing='push_sum', the residual
-        the post-transmission EF state; both pass through unchanged when
-        their feature is off."""
+        Returns ``(server_tree, psum_weight, ef_residual, screen)`` — the
+        weight is the terminal push-sum weight under mixing='push_sum',
+        the residual the post-transmission EF state (both pass through
+        unchanged when their feature is off), and ``screen`` the per-source
+        robust screen-activity counts (``(M,)`` under a robust backend
+        with full metrics, ``None`` otherwise — see DFLMetrics)."""
+        screen0 = (jnp.zeros((m,), jnp.float32) if screen_stats else None)
         if m == 1 or topo.t_server == 0 or backend is None:
-            return server_tree, psum_weight, ef_residual
+            return server_tree, psum_weight, ef_residual, screen0
         if cfg.mixing == "push_sum":
             # each consensus period is a fresh ratio consensus: numerator =
             # this epoch's server aggregates, weight reset to 1 (the carried
@@ -543,13 +572,16 @@ def build_dfl_epoch_step(
                     ps0, a_p, residual=ef_residual, key=key)
             else:
                 ps = backend.mix_push_sum(ps0, a_p)
-            return ps.ratio(), ps.weight, ef_residual
+            return ps.ratio(), ps.weight, ef_residual, screen0
         if compressed:
             mixed, ef_residual = backend.mix_compressed(
                 server_tree, a_p, residual=ef_residual, key=key, lam2=lam2)
-            return mixed, psum_weight, ef_residual
+            return mixed, psum_weight, ef_residual, screen0
+        if screen_stats:
+            mixed, screen = backend.mix_stats(server_tree, a_p, lam2=lam2)
+            return mixed, psum_weight, ef_residual, screen
         return backend.mix(server_tree, a_p, lam2=lam2), psum_weight, \
-            ef_residual
+            ef_residual, screen0
 
     def epoch_step(state: DFLState, batches: Any) -> Tuple[DFLState, DFLMetrics]:
         # ---- 1. local period: T_C client SGD iterations (Eq. 3) ----
@@ -574,7 +606,7 @@ def build_dfl_epoch_step(
             rng, ckey = jax.random.split(rng)
         else:
             ckey = None
-        server, psw, ef_res = apply_consensus(
+        server, psw, ef_res, screen = apply_consensus(
             server, psum_weight=state.psum_weight,
             ef_residual=state.ef_residual, key=ckey)
         disagreement = (disagreement_norm(server) if cfg.metrics == "full"
@@ -586,7 +618,8 @@ def build_dfl_epoch_step(
         new_state = DFLState(params, opt_state, state.epoch + 1, rng, psw,
                              ef_res)
         metrics = DFLMetrics(loss=losses, server_disagreement=disagreement,
-                             client_drift=drift, grad_norm=gnorms[-1])
+                             client_drift=drift, grad_norm=gnorms[-1],
+                             screen_rejected=screen)
         return new_state, metrics
 
     def epoch_step_dynamic(state: DFLState, batches: Any,
@@ -630,7 +663,7 @@ def build_dfl_epoch_step(
             rng, ckey = jax.random.split(rng)
         else:
             ckey = None
-        server, psw, ef_res = apply_consensus(
+        server, psw, ef_res, screen = apply_consensus(
             server, a_p, psum_weight=state.psum_weight,
             ef_residual=state.ef_residual, key=ckey, lam2=lam2)
         disagreement = (disagreement_norm(server) if cfg.metrics == "full"
@@ -642,10 +675,64 @@ def build_dfl_epoch_step(
         new_state = DFLState(params, opt_state, state.epoch + 1, rng, psw,
                              ef_res)
         metrics = DFLMetrics(loss=losses, server_disagreement=disagreement,
-                             client_drift=drift, grad_norm=gnorms[-1])
+                             client_drift=drift, grad_norm=gnorms[-1],
+                             screen_rejected=screen)
         return new_state, metrics
 
     return epoch_step_dynamic if cfg.dynamic else epoch_step
+
+
+def build_consensus_replay(cfg: DFLConfig) -> Optional[Callable]:
+    """A consensus-period-only program for WALL-CLOCK ATTRIBUTION.
+
+    ``replay(server_tree, a_p, lam2) -> mixed_tree`` re-runs just the
+    T_S-round consensus period — the same ``ConsensusBackend``
+    (``resolve_backend``), mixing interpretation, and compression wrapper
+    as the full epoch step — on an already-computed server tree.  The
+    engine's span tracer times it (results DISCARDED, nothing donated)
+    to split one compiled epoch step's wall time into local-period vs
+    gossip-period estimates: the two phases cannot be timed separately
+    inside one compiled program without a host sync in the middle, which
+    would change the very schedule being measured.
+
+    The replay is an estimate, not the in-program truth — XLA may overlap
+    phases differently in the fused step (exactly what the ROADMAP's
+    overlapped-consensus work will exploit); spans carry
+    ``method="consensus-replay"`` to say so.  Under compressed consensus
+    the probe uses a fixed rounding key and a zero EF residual: timing
+    only — its numerics never touch training state.  Returns ``None``
+    when there is no consensus period to time (M == 1, T_S == 0, or
+    consensus_mode='none')."""
+    topo = cfg.topology
+    m = topo.num_servers
+    if m == 1 or topo.t_server == 0:
+        return None
+    backend = resolve_backend(cfg)
+    if backend is None:
+        return None
+    compressed = getattr(backend, "compressed", False)
+    ef = wants_error_feedback(cfg)
+
+    def replay(server_tree: Any, a_p: jax.Array,
+               lam2: Optional[jax.Array] = None) -> Any:
+        key = jax.random.key(0) if compressed else None
+        residual = (jax.tree.map(jnp.zeros_like, server_tree)
+                    if compressed and ef else None)
+        if cfg.mixing == "push_sum":
+            ps0 = cns.init_push_sum(server_tree)
+            if compressed:
+                ps, _ = backend.mix_push_sum_compressed(
+                    ps0, a_p, residual=residual, key=key)
+            else:
+                ps = backend.mix_push_sum(ps0, a_p)
+            return ps.ratio()
+        if compressed:
+            mixed, _ = backend.mix_compressed(
+                server_tree, a_p, residual=residual, key=key, lam2=lam2)
+            return mixed
+        return backend.mix(server_tree, a_p, lam2=lam2)
+
+    return replay
 
 
 def init_dfl_state(cfg: DFLConfig, params: Any, optimizer: Optimizer,

@@ -38,6 +38,7 @@ from repro.core.schedule import (EpochSchedule, FaultSchedule,
                                  ParticipationSchedule, SigmaTracker,
                                  TopologySchedule)
 from repro.core.topology import FLTopology
+from repro.obs import OBS_OFF
 from repro.optim import Optimizer
 
 # batch_fn(epoch, alive_original_server_ids) -> batch pytree with leaves
@@ -56,8 +57,17 @@ class DynamicFederationEngine:
     participation: ParticipationSchedule = ParticipationSchedule()
     topology_schedule: TopologySchedule = TopologySchedule()
     faults: FaultSchedule = FaultSchedule()
+    # observability bundle (repro.obs.Observability) or None for the no-op
+    # null bundle.  HARD CONTRACT: attaching one is bitwise inert on
+    # training numerics — the instrumentation only reads already-computed
+    # values, the compiled programs are identical with obs on or off
+    # (asserted in tests/test_obs.py), and the tracer's block_until_ready
+    # sync points exist only when a tracer is attached.
+    obs: Any = None
 
     def __post_init__(self):
+        if self.obs is None:
+            self.obs = OBS_OFF
         if not self.cfg.dynamic:
             self.cfg = dataclasses.replace(self.cfg, dynamic=True)
         if (self.topology_schedule.kind == "asymmetric"
@@ -99,6 +109,10 @@ class DynamicFederationEngine:
                                     wire=dfl.active_wire(self.cfg)[0])
                        if self._compressor is not None else None)
         self._row_bytes: Dict[int, Tuple[int, int]] = {}  # M -> (bytes, elems)
+        # consensus-replay timing probes (dfl.build_consensus_replay),
+        # built lazily per M and ONLY when a span tracer is attached
+        self._probes: Dict[int, Optional[Callable]] = {}
+        self._probe_warm: set = set()
         # spectral backends (chebyshev) consume a host-side per-epoch
         # |lambda_2(A_p)| alongside the traced matrix
         backend = self.cfg.consensus_backend
@@ -242,65 +256,155 @@ class DynamicFederationEngine:
                 state = self._rejoin(state, ev.server)
         return state
 
+    # -- observability -------------------------------------------------------
+    def _consensus_probe(self, m: int) -> Optional[Callable]:
+        """The jitted consensus-replay timing probe for federation size
+        ``m`` (``dfl.build_consensus_replay``), or None when there is no
+        consensus period to time.  Built lazily, and only ever reached
+        when a span tracer is attached."""
+        if m not in self._probes:
+            cfg = dataclasses.replace(self.cfg, topology=self.topo)
+            fn = dfl.build_consensus_replay(cfg)
+            self._probes[m] = None if fn is None else jax.jit(fn)
+        return self._probes[m]
+
+    def _trace_step(self, epoch_span, epoch: int, m: int, m_known: bool,
+                    programs_before: int, t0: int, t1: int,
+                    state: dfl.DFLState, a_np, lam2) -> None:
+        """Tracer-only post-step work: emit the compile event if this call
+        traced a new program, then split the step's [t0, t1] wall interval
+        into local-period / gossip-period spans via the consensus-replay
+        probe (re-run the consensus period alone on the post-epoch server
+        tree, warmed once per M untimed; its wall time estimates the
+        gossip share of the fused step)."""
+        tracer = self.obs.tracer
+        programs_after = int(self._steps[m]._cache_size())
+        if programs_after > programs_before:
+            if not m_known and len(self._steps) == 1:
+                cause = "first_trace"
+            elif not m_known:
+                cause = "federation_size_change"
+            else:
+                # a schedule operand leaked into trace structure — the
+                # compile-once contract (compile_counts) is being violated
+                cause = "retrace"
+            tracer.compile_event(cause, m=m, programs=programs_after,
+                                 epoch=epoch)
+        probe = self._consensus_probe(m)
+        if probe is None:
+            tracer.add_span("local-period", t0, t1, parent=epoch_span,
+                            epoch=epoch)
+            return
+        server_tree = jax.tree.map(lambda x: x[:, 0], state.client_params)
+        a_j = jnp.asarray(a_np, jnp.float32)
+        if m not in self._probe_warm:
+            jax.block_until_ready(probe(server_tree, a_j, lam2))
+            self._probe_warm.add(m)
+        p0 = tracer.now()
+        jax.block_until_ready(probe(server_tree, a_j, lam2))
+        gossip_ns = min(tracer.now() - p0, t1 - t0)
+        split = t1 - gossip_ns
+        tracer.add_span("local-period", t0, split, parent=epoch_span,
+                        epoch=epoch, method="consensus-replay")
+        tracer.add_span("gossip-period", split, t1, parent=epoch_span,
+                        epoch=epoch, method="consensus-replay",
+                        t_server=self.topo.t_server)
+
     # -- the loop ------------------------------------------------------------
     def run_epoch(self, state: dfl.DFLState, epoch: int,
                   batch_fn: BatchFn) -> Tuple[dfl.DFLState, Dict[str, float]]:
-        state = self.apply_faults(state, epoch)
-        m, n = self.topo.num_servers, self.topo.clients_per_server
-        mask_np = self.participation.mask(epoch, m, n)
-        a_np = self.topology_schedule.mixing(self.topo, epoch)
-        sigma_prod = self._tracker.update(a_np, self.topo.t_server)
-        batches = batch_fn(epoch, tuple(self.alive))
-        lam2 = (jnp.float32(tp.lambda_2(a_np)) if self._needs_spectral
-                else None)
-        byz_np = None
-        if self.cfg.byzantine is not None and self.cfg.byzantine.attacks:
-            # per-row attack codes over the CURRENT federation: original
-            # attacker ids (stable across surgery — drawn over the
-            # ORIGINAL size) mapped through the alive row order.  The
-            # array is passed every epoch, all-zero included, so the
-            # compiled step's operand structure never changes.
-            byz_np = self.cfg.byzantine.codes(epoch, tuple(self.alive),
-                                              self._initial_m)
-        sched = EpochSchedule(jnp.asarray(mask_np, jnp.float32),
-                              jnp.asarray(a_np, jnp.float32), lam2,
-                              None if byz_np is None
-                              else jnp.asarray(byz_np, jnp.int32))
-        epoch_wire_bytes = None
-        if self._bytes is not None:
-            row_bytes, elems = self._wire_row_bytes(state)
-            epoch_wire_bytes = self._bytes.update(
-                a_np, self.topo.t_server, row_bytes=row_bytes,
-                elems_per_row=elems)
-        state, metrics = self._step()(state, batches, sched)
-        # participant-weighted loss of the last local iteration
-        last = np.asarray(metrics.loss[-1], np.float32)
-        w = mask_np if mask_np.sum() else np.ones_like(mask_np)
-        record = {
-            "loss": float((last * w).sum() / w.sum()),
-            "disagreement": float(metrics.server_disagreement),
-            "drift": float(metrics.client_drift),
-            "participation": float(mask_np.mean()),
-            "num_servers": float(m),
-            "sigma_prod": sigma_prod,
-        }
-        if byz_np is not None:
-            # fraction of the CURRENT federation attacking this epoch —
-            # the honest-metric masks in tests/benchmarks key off this
-            record["byzantine"] = float((byz_np > 0).mean())
-        if state.psum_weight is not None:
-            # ratio-consensus conditioning: a terminal weight near 0 means
-            # that server's num/w read-out amplified rounding error
-            record["psum_min_weight"] = float(jnp.min(state.psum_weight))
-        if epoch_wire_bytes is not None:
-            # this epoch's on-wire consensus traffic + the cumulative
-            # compression ratio vs f32 replicas over the same links.
-            # THIS epoch's update() return, never history[-1]: an epoch
-            # with zero gossip rounds (t_server=0, or M==1 after drop
-            # surgery) still records its true 0.0 rather than a stale
-            # entry — and never touches an empty history
-            record["wire_mb"] = epoch_wire_bytes / 1e6
-            record["wire_ratio"] = self._bytes.ratio()
+        obs = self.obs
+        tracer = obs.tracer
+        with obs.span("epoch", epoch=epoch) as epoch_span:
+            with obs.span("fault-surgery", epoch=epoch):
+                state = self.apply_faults(state, epoch)
+            m, n = self.topo.num_servers, self.topo.clients_per_server
+            mask_np = self.participation.mask(epoch, m, n)
+            a_np = self.topology_schedule.mixing(self.topo, epoch)
+            sigma_prod = self._tracker.update(a_np, self.topo.t_server)
+            batches = batch_fn(epoch, tuple(self.alive))
+            lam2 = (jnp.float32(tp.lambda_2(a_np)) if self._needs_spectral
+                    else None)
+            byz_np = None
+            if self.cfg.byzantine is not None and self.cfg.byzantine.attacks:
+                # per-row attack codes over the CURRENT federation: original
+                # attacker ids (stable across surgery — drawn over the
+                # ORIGINAL size) mapped through the alive row order.  The
+                # array is passed every epoch, all-zero included, so the
+                # compiled step's operand structure never changes.
+                byz_np = self.cfg.byzantine.codes(epoch, tuple(self.alive),
+                                                  self._initial_m)
+            sched = EpochSchedule(jnp.asarray(mask_np, jnp.float32),
+                                  jnp.asarray(a_np, jnp.float32), lam2,
+                                  None if byz_np is None
+                                  else jnp.asarray(byz_np, jnp.int32))
+            epoch_wire_bytes = None
+            if self._bytes is not None:
+                row_bytes, elems = self._wire_row_bytes(state)
+                epoch_wire_bytes = self._bytes.update(
+                    a_np, self.topo.t_server, row_bytes=row_bytes,
+                    elems_per_row=elems)
+            m_known = m in self._steps
+            step = self._step()
+            # the tracer's sync point lives strictly OUTSIDE the compiled
+            # program and exists ONLY when a tracer is attached; the
+            # untraced path dispatches exactly as before
+            programs_before = int(step._cache_size()) if tracer else 0
+            t0 = tracer.now() if tracer else 0
+            state, metrics = step(state, batches, sched)
+            if tracer is not None:
+                jax.block_until_ready(state)
+                self._trace_step(epoch_span, epoch, m, m_known,
+                                 programs_before, t0, tracer.now(), state,
+                                 a_np, lam2)
+            with obs.span("host-aggregation", epoch=epoch):
+                # participant-weighted loss of the last local iteration
+                last = np.asarray(metrics.loss[-1], np.float32)
+                w = mask_np if mask_np.sum() else np.ones_like(mask_np)
+                record = {
+                    "loss": float((last * w).sum() / w.sum()),
+                    "disagreement": float(metrics.server_disagreement),
+                    "drift": float(metrics.client_drift),
+                    "participation": float(mask_np.mean()),
+                    "num_servers": float(m),
+                    "sigma_prod": sigma_prod,
+                }
+                if byz_np is not None:
+                    # fraction of the CURRENT federation attacking this
+                    # epoch — the honest-metric masks in tests/benchmarks
+                    # key off this
+                    record["byzantine"] = float((byz_np > 0).mean())
+                if state.psum_weight is not None:
+                    # ratio-consensus conditioning: a terminal weight near
+                    # 0 means that server's num/w read-out amplified
+                    # rounding error
+                    record["psum_min_weight"] = float(
+                        jnp.min(state.psum_weight))
+                if epoch_wire_bytes is not None:
+                    # this epoch's on-wire consensus traffic + the
+                    # cumulative compression ratio vs f32 replicas over the
+                    # same links.  THIS epoch's update() return, never
+                    # history[-1]: an epoch with zero gossip rounds
+                    # (t_server=0, or M==1 after drop surgery) still
+                    # records its true 0.0 rather than a stale entry — and
+                    # never touches an empty history
+                    record["wire_mb"] = epoch_wire_bytes / 1e6
+                    record["wire_ratio"] = self._bytes.ratio()
+                screen_per_round = None
+                if metrics.screen_rejected is not None:
+                    # robust-screen activity, normalised per gossip round;
+                    # the per-server breakdown goes to the hub as a
+                    # labelled histogram below
+                    rounds = max(self.topo.t_server, 1)
+                    screen_per_round = (np.asarray(metrics.screen_rejected,
+                                                   np.float32) / rounds)
+                    record["screen_rejected"] = float(
+                        screen_per_round.sum())
+            obs.observe(
+                epoch, record, servers=tuple(self.alive),
+                per_link=(self._bytes.per_link
+                          if self._bytes is not None else None),
+                screen_rejected=screen_per_round)
         return state, record
 
     def run(self, state: dfl.DFLState, epochs: int,
@@ -319,6 +423,7 @@ def make_engine(topology: FLTopology, loss_fn: dfl.LossFn,
                 participation: Optional[ParticipationSchedule] = None,
                 topology_schedule: Optional[TopologySchedule] = None,
                 faults: Optional[FaultSchedule] = None,
+                obs: Optional[Any] = None,
                 **cfg_kw) -> DynamicFederationEngine:
     """Convenience constructor mirroring ``DFLConfig`` defaults.
 
@@ -351,11 +456,15 @@ def make_engine(topology: FLTopology, loss_fn: dfl.LossFn,
     ``mixing="push_sum"``, wire_mb / wire_ratio under compressed
     consensus — ``DFLConfig.compression`` — and byzantine, the attacking
     fraction, under a ``byzantine=ByzantineSchedule(...)`` keyword, which
-    forwards to ``DFLConfig.byzantine`` like any other config field)."""
+    forwards to ``DFLConfig.byzantine`` like any other config field).
+
+    ``obs`` attaches a ``repro.obs.Observability`` bundle (span tracing +
+    metric sinks + convergence watchdogs); omitted, the engine runs with
+    the no-op null bundle — see docs/observability.md."""
     cfg = dfl.DFLConfig(topology=topology, consensus_mode=consensus_mode,
                         dynamic=True, **cfg_kw)
     return DynamicFederationEngine(
         cfg, loss_fn, optimizer,
         participation=participation or ParticipationSchedule(),
         topology_schedule=topology_schedule or TopologySchedule(),
-        faults=faults or FaultSchedule())
+        faults=faults or FaultSchedule(), obs=obs)

@@ -12,8 +12,7 @@ and Lemma 3 quantities) every epoch, with checkpointing.
 from __future__ import annotations
 
 import argparse
-import time
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,11 +22,13 @@ from repro.checkpoint import Checkpointer
 from repro.configs import get_arch, get_smoke
 from repro.core import (DFLConfig, FLTopology, build_dfl_epoch_step,
                         init_dfl_state, make_engine, ByzantineSchedule,
-                        FaultSchedule, ParticipationSchedule,
+                        FaultSchedule, ParticipationSchedule, SigmaTracker,
                         TopologySchedule, load_participation_trace)
 from repro.data import DataConfig, FLDataPipeline
 from repro.launch import sharding as shd
 from repro.models import transformer as tf
+from repro.obs import (ConsoleSink, JSONLSink, MetricsHub, Observability,
+                       Tracer)
 from repro.optim import sgd
 
 CONSENSUS_BACKENDS = ("auto", "einsum", "blocked", "shard_map")
@@ -111,6 +112,47 @@ def _setup_lm(arch_id, smoke, servers, clients, t_client, t_server, graph,
     return cfg, topo, loss_fn, optimizer, pipe
 
 
+def _make_observability(*, log_every: int = 1,
+                        telemetry_jsonl: Optional[str] = None,
+                        chrome_trace: Optional[str] = None,
+                        run_info: Optional[dict] = None) -> Observability:
+    """The trainers' standard obs bundle: a ConsoleSink (the one place the
+    old ``epoch ... loss=...`` prints now live), an optional JSONL
+    telemetry stream, an optional span tracer for a Chrome trace export,
+    and the convergence watchdogs — see docs/observability.md."""
+    hub = MetricsHub([ConsoleSink(log_every=log_every)])
+    if telemetry_jsonl:
+        hub.add_sink(JSONLSink(telemetry_jsonl, run_info=run_info))
+    return Observability(hub=hub,
+                         tracer=Tracer() if chrome_trace else None,
+                         monitor=True)
+
+
+def _run_epochs(epochs: int, run_one: Callable[[int], dict],
+                obs: Observability, *, observe: bool,
+                ckpt_save: Optional[Callable[[int], None]] = None) -> dict:
+    """The ONE trainer loop both drivers share (previously each hand-rolled
+    its own history accumulation and print formatting): ``run_one(epoch)``
+    returns the epoch's record dict, every record flows through the obs
+    bundle, and the returned ``history`` keeps its historical shape —
+    metric name -> per-epoch list.  ``observe=False`` when ``run_one``
+    already observes internally (the dynamic engine's ``run_epoch`` does,
+    with per-link / per-server labels and spans the static path lacks)."""
+    history: dict = {}
+    for epoch in range(epochs):
+        if observe:
+            with obs.span("epoch", epoch=epoch):
+                rec = run_one(epoch)
+            obs.observe(epoch, rec)
+        else:
+            rec = run_one(epoch)
+        for k, v in rec.items():
+            history.setdefault(k, []).append(v)
+        if ckpt_save is not None:
+            ckpt_save(epoch)
+    return history
+
+
 def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
           clients: int = 2, t_client: int = 4, t_server: int = 5,
           epochs: int = 3, seq_len: int = 128, per_client_batch: int = 2,
@@ -120,7 +162,9 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
           compression: str = "none", error_feedback: bool = False,
           wire: str = "simulated",
           ckpt_dir: Optional[str] = None, seed: int = 0,
-          log_every: int = 1, attn_impl: str = "reference") -> dict:
+          log_every: int = 1, attn_impl: str = "reference",
+          telemetry_jsonl: Optional[str] = None,
+          chrome_trace: Optional[str] = None) -> dict:
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
         arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
         seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
@@ -137,31 +181,51 @@ def train(arch_id: str, *, smoke: bool = True, servers: int = 2,
 
     state = init_dfl_state(dfl_cfg, params, optimizer, jax.random.key(seed + 1))
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
-    history = {"loss": [], "disagreement": [], "drift": []}
-    tracker = _make_bytes_tracker(dfl_cfg, params)
-    t0 = time.time()
-    for epoch in range(epochs):
+    ledger = _make_bytes_tracker(dfl_cfg, params)
+    obs = _make_observability(
+        log_every=log_every, telemetry_jsonl=telemetry_jsonl,
+        chrome_trace=chrome_trace,
+        run_info={"arch": cfg.name, "driver": "train", "servers": servers})
+    # metric-key parity with the dynamic engine's record (documented in the
+    # JSONL schema, docs/observability.md): the static path is the dynamic
+    # path with full participation, the fixed graph, and no surgery
+    sigma = SigmaTracker(topo.num_servers,
+                         mode="push_sum" if mixing == "push_sum"
+                         else "average")
+    a_np = (topo.mixing_matrix() if topo.num_servers > 1
+            else np.ones((1, 1)))
+
+    def run_one(epoch: int) -> dict:
+        nonlocal state
         batches = pipe.epoch_batches(epoch)
         state, metrics = step(state, batches)
-        loss = float(metrics.loss[-1].mean())
-        dis = float(metrics.server_disagreement)
-        drift = float(metrics.client_drift)
-        history["loss"].append(loss)
-        history["disagreement"].append(dis)
-        history["drift"].append(drift)
-        wire_log = ""
-        if tracker is not None:
-            mb = tracker.update() / 1e6
-            history.setdefault("wire_mb", []).append(mb)
-            wire_log = f"wire={mb:.2f}MB(x{tracker.tracker.ratio():.2f})  "
-        if epoch % log_every == 0:
-            print(f"epoch {epoch:4d}  loss={loss:.4f}  "
-                  f"server_disagreement={dis:.3e}  client_drift={drift:.3e}  "
-                  f"{wire_log}({time.time() - t0:.1f}s)")
+        record = {
+            "loss": float(metrics.loss[-1].mean()),
+            "disagreement": float(metrics.server_disagreement),
+            "drift": float(metrics.client_drift),
+            "participation": 1.0,
+            "num_servers": float(topo.num_servers),
+            "sigma_prod": sigma.update(a_np, topo.t_server),
+        }
+        if state.psum_weight is not None:
+            record["psum_min_weight"] = float(jnp.min(state.psum_weight))
+        if ledger is not None:
+            record["wire_mb"] = ledger.update() / 1e6
+            record["wire_ratio"] = ledger.tracker.ratio()
+        return record
+
+    def ckpt_save(epoch: int) -> None:
         if ckpt is not None:
             ckpt.save(epoch, state.client_params,
                       meta={"arch": cfg.name, "epoch": epoch})
-    return {"state": state, "history": history, "topology": topo, "cfg": cfg}
+
+    history = _run_epochs(epochs, run_one, obs, observe=True,
+                          ckpt_save=ckpt_save)
+    obs.close()
+    if chrome_trace:
+        obs.tracer.save_chrome(chrome_trace)
+    return {"state": state, "history": history, "topology": topo,
+            "cfg": cfg, "obs": obs}
 
 
 class _StaticWireLedger:
@@ -226,7 +290,9 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                   participation_trace: str = "",
                   ckpt_dir: Optional[str] = None,
                   seed: int = 0, log_every: int = 1,
-                  attn_impl: str = "reference") -> dict:
+                  attn_impl: str = "reference",
+                  telemetry_jsonl: Optional[str] = None,
+                  chrome_trace: Optional[str] = None) -> dict:
     """Dynamic-federation LM training: the same Algorithm-1 cycle driven by
     the scenario engine — partial client participation, per-epoch degraded
     server graphs, scheduled server failure/rejoin (``faults`` is the
@@ -279,6 +345,11 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                                   seed=seed + 1)
     else:
         tsched = TopologySchedule()                        # static
+    obs = _make_observability(
+        log_every=log_every, telemetry_jsonl=telemetry_jsonl,
+        chrome_trace=chrome_trace,
+        run_info={"arch": cfg.name, "driver": "train_dynamic",
+                  "servers": servers})
     engine = make_engine(topo, loss_fn, optimizer,
                          consensus_mode=consensus_mode, mixing=mixing,
                          consensus_backend=backend,
@@ -288,7 +359,8 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                          faults=FaultSchedule.parse(faults),
                          byzantine=(ByzantineSchedule.parse(byzantine,
                                                             seed=seed)
-                                    if byzantine else None))
+                                    if byzantine else None),
+                         obs=obs)
 
     state = init_dfl_state(engine.cfg, params, optimizer,
                            jax.random.key(seed + 1))
@@ -297,27 +369,27 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
         return pipe.epoch_batches(epoch, server_ids=alive)
 
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
-    history: dict = {}
-    t0 = time.time()
-    for epoch in range(epochs):
+
+    def run_one(epoch: int) -> dict:
+        nonlocal state
         state, rec = engine.run_epoch(state, epoch, batch_fn)
-        for k, v in rec.items():
-            history.setdefault(k, []).append(v)
+        return rec
+
+    def ckpt_save(epoch: int) -> None:
         if ckpt is not None:
             ckpt.save(epoch, state.client_params,
                       meta={"arch": cfg.name, "epoch": epoch,
                             "alive": list(engine.alive)})
-        if epoch % log_every == 0:
-            wire = (f"wire={rec['wire_mb']:.2f}MB"
-                    f"(x{rec['wire_ratio']:.2f})  "
-                    if "wire_mb" in rec else "")
-            print(f"epoch {epoch:4d}  loss={rec['loss']:.4f}  "
-                  f"M={int(rec['num_servers'])}  "
-                  f"part={rec['participation']:.2f}  "
-                  f"disagreement={rec['disagreement']:.3e}  "
-                  f"sigma_prod={rec['sigma_prod']:.3e}  "
-                  f"{wire}({time.time() - t0:.1f}s)")
-    return {"state": state, "history": history, "engine": engine, "cfg": cfg}
+
+    # observe=False: run_epoch observes internally, with the per-link /
+    # per-server labels and span structure the host loop cannot see
+    history = _run_epochs(epochs, run_one, obs, observe=False,
+                          ckpt_save=ckpt_save)
+    obs.close()
+    if chrome_trace:
+        obs.tracer.save_chrome(chrome_trace)
+    return {"state": state, "history": history, "engine": engine,
+            "cfg": cfg, "obs": obs}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -374,6 +446,15 @@ def build_parser() -> argparse.ArgumentParser:
                         "gossip hop (quantizers + gossip/gossip_blocked/"
                         "shard_map backends only)")
     p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--log-every", type=int, default=1,
+                   help="console epoch-line cadence (ConsoleSink log_every)")
+    p.add_argument("--telemetry-jsonl", default=None,
+                   help="write the full metric-event stream (schema v1, "
+                        "docs/observability.md) to this JSONL path")
+    p.add_argument("--chrome-trace", default=None,
+                   help="record host-side spans and write a Chrome "
+                        "trace-event JSON (load in Perfetto / "
+                        "chrome://tracing) to this path")
     dyn = p.add_argument_group(
         "dynamic federation (any of these switches to the scenario engine)")
     dyn.add_argument("--participation-rate", type=float, default=1.0,
@@ -420,7 +501,9 @@ def main() -> None:
               consensus_backend=args.consensus_backend,
               mixing=args.mixing, compression=args.compression,
               error_feedback=args.error_feedback, wire=args.wire,
-              ckpt_dir=args.ckpt_dir)
+              ckpt_dir=args.ckpt_dir, log_every=args.log_every,
+              telemetry_jsonl=args.telemetry_jsonl,
+              chrome_trace=args.chrome_trace)
     dynamic = (args.participation_rate < 1.0 or args.edge_drop_prob > 0.0
                or args.straggler_weaken > 0.0
                or args.asymmetric_drop_prob > 0.0 or bool(args.faults)

@@ -1,0 +1,16 @@
+"""Fixture: bare print() calls in library code (print-in-library)."""
+
+
+def log_progress(epoch, loss):
+    print(f"epoch {epoch}: loss={loss:.4f}")      # finding 1
+
+
+def debug_dump(tree):
+    for leaf in tree:
+        print(leaf)                               # finding 2
+    return tree
+
+
+def suppressed_without_reason(x):
+    print(x)  # repro: ignore[print-in-library]
+    return x

@@ -34,11 +34,14 @@ BAD_FIXTURES = {
     "bad_donation.py": {"undonated-jit": 1},
     "bad_qmax.py": {"qmax-division": 2},
     "bad_misc.py": {"mutable-default": 1, "dead-schedule-operand": 1},
+    # two bare prints flag; the reasonless suppression silences its print
+    # but surfaces as bare-suppression (fixtures are in-scope by design)
+    "bad_print.py": {"print-in-library": 2, "bare-suppression": 1},
 }
 
 GOOD_FIXTURES = ["good_key_reuse.py", "good_host_sync.py",
                  "good_traced_branch.py", "good_donation.py",
-                 "good_qmax.py", "good_misc.py"]
+                 "good_qmax.py", "good_misc.py", "good_print.py"]
 
 
 @pytest.mark.parametrize("name", sorted(BAD_FIXTURES))

@@ -20,7 +20,7 @@ DOC_FILES = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
 
 TOKEN = re.compile(r"`([A-Za-z_]\w*(?:\.[A-Za-z_]\w*)+)`")
 PACKAGES = {"repro", "core", "kernels", "launch", "models", "configs",
-            "data", "checkpoint", "optim", "comm", "analysis"}
+            "data", "checkpoint", "optim", "comm", "analysis", "obs"}
 
 
 def _has_attr(obj, attr: str) -> bool:
@@ -93,8 +93,9 @@ def test_docs_exist_and_are_checked():
         tokens = set(TOKEN.findall(path.read_text()))
         counts[path.name] = sum(1 for t in tokens if _checkable(t))
     assert {"README.md", "paper_map.md", "dynamic_federation.md",
-            "static_analysis.md"} <= set(counts), counts
+            "static_analysis.md", "observability.md"} <= set(counts), counts
     assert counts["paper_map.md"] >= 20, counts
     assert counts["dynamic_federation.md"] >= 10, counts
     assert counts["static_analysis.md"] >= 12, counts
+    assert counts["observability.md"] >= 12, counts
     assert counts["README.md"] >= 5, counts
