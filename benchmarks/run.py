@@ -39,6 +39,13 @@ theory quantities the paper derives and our beyond-paper claims):
                         on BOTH the simulated and the physical wire, and
                         that the metadata byte counts match the analytic
                         forms
+  overlapped_consensus  the epoch-barrier kill: per-epoch barrier engine
+                        vs the K=8 fused superepoch megastep vs the
+                        megastep with staleness-1 gossip on one dynamic
+                        scenario — epochs/s + peak RSS per config, the
+                        megastep speedup, and the CI-gated
+                        staleness0_bitwise degeneration boolean (sha256
+                        over final server params)
   byzantine_consensus   attack x defense grid: sign-flip / scaled-noise /
                         inlier-shift attackers vs plain gossip and the
                         robust screens (trimmed mean, median, clipped) —
@@ -542,6 +549,113 @@ print("BENCH_JSON " + json.dumps(out))
                        bool(diff < 1e-4 and ck_ok))
 
 
+def bench_overlapped_consensus():
+    """The epoch-barrier kill: the SAME dynamic scenario (bernoulli
+    participation + edge_drop schedule on a gossip-bound model) run by the
+    per-epoch barrier engine, by the K=8 fused superepoch megastep, and by
+    the megastep with bounded-staleness (s=1) gossip.  Each config runs in
+    its own subprocess (clean ru_maxrss, fresh compile caches); the parent
+    records epochs/s + peak RSS per config, the megastep's speedup over
+    the barrier, and the `staleness0_bitwise` boolean — a sha256 over the
+    final server parameters proving the K=8 / staleness=0 megastep is
+    BITWISE the barrier engine (the degeneration oracle, CI-gated)."""
+    import json
+    import subprocess
+    import sys
+
+    child = r'''
+import os, sys, json, time, hashlib, resource
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (FLTopology, TopologySchedule, ParticipationSchedule,
+                        init_dfl_state, make_engine)
+from repro.optim import sgd
+
+superepoch, staleness, epochs, d = (int(sys.argv[1]), int(sys.argv[2]),
+                                    int(sys.argv[3]), int(sys.argv[4]))
+m, n, t_c, t_s = 4, 2, 2, 10
+topo = FLTopology(num_servers=m, clients_per_server=n, t_client=t_c,
+                  t_server=t_s, graph_kind="ring")
+
+def loss_fn(w, batch, rng):
+    # toy objective sized so per-epoch device work is SMALL: the per-epoch
+    # HOST barrier (dispatch + readback sync) is what the configs differ
+    # in, which is exactly the regime the megastep targets
+    return 0.5 * jnp.mean(w * w) + 0.0 * batch.sum(), {}
+
+def batch_fn(epoch, alive):
+    # hands over HOST numpy, like a real data loader: the device put is
+    # part of the metered path (once per epoch vs once per block)
+    return np.zeros((t_c, len(alive), n, 1), np.float32)
+
+engine = make_engine(topo, loss_fn, sgd(1e-3),
+                     participation=ParticipationSchedule(
+                         kind="bernoulli", rate=0.8, seed=3),
+                     topology_schedule=TopologySchedule(
+                         kind="edge_drop", drop_prob=0.3, seed=7),
+                     superepoch=superepoch, staleness=staleness)
+
+def fresh():
+    params = jax.random.normal(jax.random.key(0), (d,), jnp.float32)
+    return init_dfl_state(engine.cfg, params, sgd(1e-3), jax.random.key(1))
+
+# warm outside timing: the compiled (M, K) step donates its state operand,
+# so the timed run gets a FRESH state (warm buffers are consumed)
+engine.run(fresh(), max(superepoch, 1), batch_fn)
+state = fresh()
+t0 = time.time()
+state, hist = engine.run(state, epochs, batch_fn)
+wall = time.time() - t0
+servers = np.asarray(state.client_params[:, 0], np.float32)
+out = {
+    "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024,
+    "epochs_per_s": epochs / wall,
+    # bitwise fingerprint: digest equality <=> final-params bit equality
+    "params_sha256": hashlib.sha256(servers.tobytes()).hexdigest(),
+    "loss_last": float(hist["loss"][-1]),
+}
+# sentinel-prefixed result line: the parent parses by prefix, so stray
+# stdout from jax/engine logging can never masquerade as the datapoint
+print("BENCH_JSON " + json.dumps(out))
+'''
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    epochs, d = S(256, 32), S(10_000, 4_000)
+    configs = (("barrier", 1, 0), ("superepoch8", 8, 0),
+               ("superepoch8_stale1", 8, 1))
+    sentinel = "BENCH_JSON "
+    results = {}
+    for tag, k, s in configs:
+        r = subprocess.run([sys.executable, "-c", child, str(k), str(s),
+                            str(epochs), str(d)],
+                           capture_output=True, text=True, timeout=900,
+                           env={**os.environ, "PYTHONPATH": src})
+        line = next((ln for ln in reversed(r.stdout.splitlines())
+                     if ln.startswith(sentinel)), None)
+        if r.returncode != 0 or line is None:
+            err = (r.stderr.strip().splitlines()[-1][:120]
+                   if r.stderr.strip() else "no BENCH_JSON line")
+            record("overlapped_consensus", f"{tag}_error",
+                   err.replace(",", ";"))
+            continue
+        results[tag] = json.loads(line[len(sentinel):])
+        record("overlapped_consensus", f"{tag}_epochs_per_s",
+               round(results[tag]["epochs_per_s"], 3))
+        record("overlapped_consensus", f"{tag}_peak_rss_mb",
+               round(results[tag]["peak_rss_mb"], 1))
+    if "barrier" in results and "superepoch8" in results:
+        record("overlapped_consensus", "superepoch8_speedup_vs_barrier",
+               round(results["superepoch8"]["epochs_per_s"]
+                     / results["barrier"]["epochs_per_s"], 3))
+        # the degeneration oracle: K=8 + staleness=0 must be the barrier
+        # engine BITWISE, not merely allclose — CI asserts this boolean
+        record("overlapped_consensus", "staleness0_bitwise",
+               bool(results["superepoch8"]["params_sha256"]
+                    == results["barrier"]["params_sha256"]))
+    if "superepoch8_stale1" in results:
+        record("overlapped_consensus", "stale1_loss_last",
+               f"{results['superepoch8_stale1']['loss_last']:.3e}")
+
+
 def bench_lm_epoch_throughput():
     from repro.launch.train import train
     epochs, t_c, seq = S(3, 1), S(3, 2), S(128, 32)
@@ -801,6 +915,7 @@ BENCHES = {
     "consensus_backends": bench_consensus_backends,
     "compressed_consensus": bench_compressed_consensus,
     "byzantine_consensus": bench_byzantine_consensus,
+    "overlapped_consensus": bench_overlapped_consensus,
     "obs_phases": bench_obs_phases,
     "kernel_micro": bench_kernel_micro,
     "lm_epoch_throughput": bench_lm_epoch_throughput,
@@ -862,7 +977,7 @@ def write_bench_consensus_json() -> None:
     import json
 
     tracked = ("consensus_backends", "compressed_consensus",
-               "byzantine_consensus", "obs_phases")
+               "byzantine_consensus", "overlapped_consensus", "obs_phases")
     per_bench = {name: {m: v for n, m, v in RESULTS if n == name}
                  for name in tracked}
     per_bench = {k: v for k, v in per_bench.items() if v}

@@ -63,6 +63,8 @@ class ContractCell:
     dynamic: bool = False
     donate: bool = True            # claim: jit with donate_argnums=(0,)
     max_host_callbacks: int = 0    # claim: the step never re-enters Python
+    superepoch: int = 1            # K > 1: lower the fused K-epoch megastep
+    staleness: int = 0             # s > 0: bounded-staleness gossip
 
 
 CONTRACT_TABLE: Tuple[ContractCell, ...] = (
@@ -87,6 +89,22 @@ CONTRACT_TABLE: Tuple[ContractCell, ...] = (
     ContractCell("dynamic_gossip", dynamic=True),
     ContractCell("dynamic_int8_wire", dynamic=True, compression="int8:8",
                  error_feedback=True, wire="physical"),
+    # PR-10 overlap cells: the fused K-epoch megastep must keep donation,
+    # zero host callbacks, and the rolled collective structure (<= 2 T_S
+    # sites per superepoch — lax.scan reuses the epoch body's sites, an
+    # unrolled K-fold explosion is the regression); bounded staleness must
+    # not change any of those claims
+    ContractCell("superepoch_gossip", dynamic=True, superepoch=4),
+    ContractCell("superepoch_int8_wire", dynamic=True, superepoch=4,
+                 compression="int8:8", error_feedback=True,
+                 wire="physical"),
+    ContractCell("stale_gossip", dynamic=True, staleness=1),
+    ContractCell("stale_int8_wire", dynamic=True, staleness=1,
+                 compression="int8:8", error_feedback=True,
+                 wire="physical"),
+    ContractCell("superepoch_stale_int8_wire", dynamic=True, superepoch=4,
+                 staleness=1, compression="int8:8", error_feedback=True,
+                 wire="physical"),
 )
 
 
@@ -112,9 +130,12 @@ def lower_cell(cell: ContractCell, *, m: int = 4, n: int = 2,
     """Build the cell's epoch step at smoke size, jit it exactly the way
     the shipping paths do (donating the carried state iff the cell claims
     it — ``drop_donation=True`` is the tests' deliberate regression), and
-    return the compiled HLO text."""
-    from repro.core import (DFLConfig, EpochSchedule, FLTopology,
-                            build_dfl_epoch_step, init_dfl_state)
+    return the compiled HLO text.  Cells with ``superepoch=K > 1`` lower
+    the fused K-epoch megastep over stacked operands instead, exactly as
+    the engine dispatches it."""
+    from repro.core import (DFLConfig, EpochSchedule, EpochScheduleBatch,
+                            FLTopology, build_dfl_epoch_step,
+                            build_dfl_superepoch_step, init_dfl_state)
     from repro.data import RegressionSpec, make_regression_task
     from repro.optim import sgd
 
@@ -129,16 +150,26 @@ def lower_cell(cell: ContractCell, *, m: int = 4, n: int = 2,
     cfg = DFLConfig(topology=topo, consensus_mode=cell.consensus_mode,
                     mixing=cell.mixing, compression=cell.compression,
                     error_feedback=cell.error_feedback, wire=cell.wire,
-                    dynamic=cell.dynamic)
+                    dynamic=cell.dynamic, staleness=cell.staleness)
     opt = sgd(1e-3)
-    step = build_dfl_epoch_step(cfg, task["loss_fn"], opt)
     state = init_dfl_state(cfg, jnp.zeros((2,)), opt, jax.random.key(0))
-    args: Tuple = (state, task["batches"])
-    if cell.dynamic:
-        sched = EpochSchedule(
-            mask=jnp.ones((m, n), jnp.float32),
-            mixing=jnp.asarray(topo.mixing_matrix(), jnp.float32))
-        args = args + (sched,)
+    a = jnp.asarray(topo.mixing_matrix(), jnp.float32)
+    if cell.superepoch > 1:
+        k = cell.superepoch
+        step = build_dfl_superepoch_step(cfg, task["loss_fn"], opt, k)
+        batches = jax.tree.map(lambda x: jnp.stack([x] * k),
+                               task["batches"])
+        sched_b = EpochScheduleBatch(
+            mask=jnp.ones((k, m, n), jnp.float32),
+            mixing=jnp.stack([a] * k))
+        args: Tuple = (state, batches, sched_b)
+    else:
+        step = build_dfl_epoch_step(cfg, task["loss_fn"], opt)
+        args = (state, task["batches"])
+        if cell.dynamic:
+            sched = EpochSchedule(
+                mask=jnp.ones((m, n), jnp.float32), mixing=a)
+            args = args + (sched,)
     donate = () if (not cell.donate or drop_donation) else (0,)
     return jax.jit(step, donate_argnums=donate).lower(
         *args).compile().as_text()
@@ -172,6 +203,17 @@ def audit_cell(cell: ContractCell, hlo: Optional[str] = None,
                 f"{cell.name}: physical-wire program moves "
                 f"{', '.join(bad)} through a collective — only the "
                 f"quantized codes (s8/u32) and f32 scales may cross")
+        # per-SUPEREPOCH site bound: the gossip rounds stay rolled (fori /
+        # scan), so however many epochs one program fuses, at most 2 T_S
+        # collective sites may appear in its text — K x that means the
+        # scan unrolled the wire (compile time and code size scale with K)
+        t_server = size_kw.get("t_server", 3)
+        if len(sites) > 2 * t_server:
+            violations.append(
+                f"{cell.name}: {len(sites)} collective sites in one "
+                f"program (superepoch={cell.superepoch}) — the rolled-"
+                f"round contract is <= 2*T_S = {2 * t_server} per "
+                f"superepoch, regardless of K")
     return CellResult(cell, violations, {
         "aliased": aliased, "host_callbacks": len(callbacks),
         "collective_sites": len(sites)})

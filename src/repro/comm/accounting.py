@@ -224,6 +224,23 @@ class BytesTracker:
                              "baseline": float(epoch_baseline)})
         return float(epoch_bytes)
 
+    def update_many(self, a_stack, t_server: int, *, row_bytes: int,
+                    elems_per_row: int) -> List[tuple]:
+        """Account one SUPEREPOCH: K sequential per-epoch updates in one
+        call (the engine dispatches K epochs per compiled megastep, but the
+        ledger's history stays per-epoch).  ``a_stack`` is an iterable of K
+        per-epoch mixing matrices; returns ``[(epoch_bytes, cumulative
+        ratio after that epoch, that epoch's per-link matrix), ...]`` — the
+        same values K individual ``update``/``ratio``/``per_link`` reads
+        would have produced, so the superepoch engine's history columns
+        match the barrier engine's exactly."""
+        out = []
+        for a_np in a_stack:
+            b = self.update(a_np, t_server, row_bytes=row_bytes,
+                            elems_per_row=elems_per_row)
+            out.append((b, self.ratio(), self.per_link))
+        return out
+
     def ratio(self) -> float:
         """Cumulative compression ratio: uncompressed-f32 bytes of the same
         traffic over actually-shipped bytes (>= 1 for real compressors)."""

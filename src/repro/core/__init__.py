@@ -11,6 +11,7 @@ from repro.core.topology import (FLTopology, build_graph, is_connected,
                                  push_sum_deviation, sigma_push_sum,
                                  lambda_2, weaken_directed_links)
 from repro.core.consensus import (mix_pytree, gossip_scan, gossip_scan_tv,
+                                  gossip_scan_stale,
                                   gossip_scan_blocked, gossip_collapsed,
                                   gossip_chebyshev, collapse_mixing,
                                   chebyshev_coefficients, make_ring_gossip,
@@ -40,5 +41,7 @@ from repro.core.schedule import (EpochSchedule, ParticipationSchedule,
                                  diurnal_trace, save_participation_trace,
                                  load_participation_trace)
 from repro.core.engine import DynamicFederationEngine, make_engine
+from repro.core.overlap import (EpochScheduleBatch, stack_epoch_schedules,
+                                build_dfl_superepoch_step)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

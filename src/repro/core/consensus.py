@@ -147,6 +147,39 @@ def gossip_scan(a: jax.Array, tree: Any, t_server: int) -> Any:
     return jax.tree.map(leaf_loop, tree)
 
 
+def gossip_scan_stale(a: jax.Array, tree: Any, t_server: int,
+                      staleness: int) -> Any:
+    """Bounded-staleness consensus: round ``t`` mixes the ``s``-round-old
+    iterate, ``W_(t+1) = A W_(t-s)``, freezing ``W_(t+1) = W_t`` while no
+    delayed iterate exists yet (``t < s``) — the overlap model where a
+    server consumes neighbor state that left ``s`` rounds ago while its own
+    round-``t`` send is still in flight.  In exact arithmetic the period
+    composes to ``A^(T_S // (s+1))``: of every ``s+1`` rounds only one
+    advances the chain (the rest re-mix the same delayed iterate), which is
+    the staleness-augmented contraction ``schedule.SigmaTracker`` monitors.
+    ``staleness=0`` IS ``gossip_scan`` — the call branches to the literally
+    unchanged synchronous body, so the degeneration is bitwise."""
+    if staleness <= 0:
+        return gossip_scan(a, tree, t_server)
+    if t_server == 0:
+        return tree
+
+    def leaf_loop(leaf):
+        # carry the last s+1 iterates: hist[u] = W_(t-s+u) at the start of
+        # round t (clamped to W_0 before round s)
+        def one_round(t, hist):
+            new = jax.lax.cond(t >= staleness,
+                               lambda: _mix_leaf(a, hist[0]),
+                               lambda: hist[-1])
+            return hist[1:] + (new,)
+
+        hist = jax.lax.fori_loop(0, t_server, one_round,
+                                 (leaf,) * (staleness + 1))
+        return hist[-1]
+
+    return jax.tree.map(leaf_loop, tree)
+
+
 def gossip_scan_tv(a_rounds: jax.Array, tree: Any) -> Any:
     """Time-varying consensus: round t applies ``a_rounds[t]``.
 
@@ -400,7 +433,8 @@ def _bucket_dither_rows(codec, key, m: int, d_pad: int, *, rnd):
 
 def gossip_scan_wire_bucketed(a: jax.Array, tree: Any, t_server: int,
                               codec, key: Optional[jax.Array] = None, *,
-                              block: int = DEFAULT_GOSSIP_BLOCK) -> Any:
+                              block: int = DEFAULT_GOSSIP_BLOCK,
+                              staleness: int = 0) -> Any:
     """BUCKETED quantized-wire gossip, in-graph: the reference numerics of
     the physical collective paths since PR 6.  Same innovation recursion as
     ``gossip_scan_wire`` (delta-coded against the receivers' shared decoded
@@ -433,9 +467,28 @@ def gossip_scan_wire_bucketed(a: jax.Array, tree: Any, t_server: int,
     Zero padding of the bucket tail is harmless for the same reason as in
     ``gossip_scan_wire``: pad deltas quantize to zero codes and never
     perturb a real chunk's absmax scale (pads occupy whole chunks — the
-    bucket block is a chunk multiple)."""
+    bucket block is a chunk multiple).
+
+    **Bounded staleness** (``staleness=s > 0``): round ``t`` consumes the
+    gathered code+scale buffers of round ``t - s`` while its own round-``t``
+    encode is issued — the carry grows a ring of the last ``s`` in-flight
+    gathered buffers (the software-pipelined / double-buffered form: the
+    collective that ships round ``t`` overlaps the decode+mix work of round
+    ``t - s``).  The sender encodes against its up-to-date SENT reference
+    (own decodes fold in at production time), so innovations never
+    double-ship; receivers need no per-neighbor reference at all — the
+    accumulator telescopes over whatever decoded deltas have arrived, which
+    is exactly why delta codes tolerate lateness: the sum over rounds
+    commutes.  The iterate freezes until the first delayed buffer lands
+    (``t < s``) and the last ``s`` rounds' codes are never consumed
+    (bounded staleness discards the tail), composing to ``A^(T_S//(s+1))``
+    in exact arithmetic.  ``staleness=0`` takes the literally unchanged
+    synchronous body above — bitwise degeneration, the PR-5/6 oracle
+    pattern."""
     if t_server == 0:
         return tree
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
     leaves, treedef = jax.tree.flatten(tree)
     m = leaves[0].shape[0]
     dtype = leaves[0].dtype
@@ -446,30 +499,67 @@ def gossip_scan_wire_bucketed(a: jax.Array, tree: Any, t_server: int,
     if d_pad != d_tot:
         flat = jnp.pad(flat, ((0, 0), (0, d_pad - d_tot)))
     a32 = a.astype(jnp.float32)
+    zeros = jnp.zeros((m, d_pad), jnp.float32)
 
-    def one_round(t, carry):
-        w, ref, acc = carry        # (m, d_pad): wire dtype, f32, f32
-        delta = w.astype(jnp.float32) - ref
+    if staleness == 0:
+        def one_round(t, carry):
+            w, ref, acc = carry        # (m, d_pad): wire dtype, f32, f32
+            delta = w.astype(jnp.float32) - ref
+            dither = _bucket_dither_rows(codec, key, m, d_pad, rnd=t)
+            codes, scales = codec.encode_block(delta, dither)
+            # fused dequantize-and-mix, folded exactly like the shard_map
+            # round body: per-chunk scales (and the mixing weight) broadcast
+            # onto raw f32 codes, one server term at a time — the same
+            # scale-times-code and weight-times-scale products in the same
+            # order, which is what keeps the simulation bit-identical to the
+            # physical program
+            c3 = codec.code_chunks(codes, d_pad)       # (m, nc, chunk)
+            ref = ref + (c3 * scales[..., None]).reshape(m, d_pad)
+            ws = a32[:, :, None] * scales              # (m, m, nc): ws[i, j]
+            acc3 = acc.reshape(m, -1, codec.chunk)
+            for j in range(m):
+                acc3 = acc3 + ws[:, j, :, None] * c3[j]
+            acc = acc3.reshape(m, d_pad)
+            return acc.astype(dtype), ref, acc
+
+        out, _, _ = jax.lax.fori_loop(0, t_server, one_round,
+                                      (flat, zeros, zeros))
+        return _bucket_split(out, leaves, treedef)
+
+    # ring of the last `staleness` in-flight (codes, scales) buffers; zero
+    # codes + unit scales decode to nothing, so the pre-fill consumed
+    # before round s is inert
+    code_abs = jax.eval_shape(
+        lambda x: codec.encode_block(x, 0.5)[0],
+        jax.ShapeDtypeStruct((m, d_pad), jnp.float32))
+    ring_c = jnp.zeros((staleness,) + code_abs.shape, code_abs.dtype)
+    ring_s = jnp.ones((staleness, m, d_pad // codec.chunk), jnp.float32)
+
+    def one_round_stale(t, carry):
+        w, sref, acc, rc, rs = carry
+        # produce round t: encode against the SENT reference, fold the own
+        # decode in immediately (the next innovation must not re-ship it)
+        delta = w.astype(jnp.float32) - sref
         dither = _bucket_dither_rows(codec, key, m, d_pad, rnd=t)
         codes, scales = codec.encode_block(delta, dither)
-        # fused dequantize-and-mix, folded exactly like the shard_map
-        # round body: per-chunk scales (and the mixing weight) broadcast
-        # onto raw f32 codes, one server term at a time — the same
-        # scale-times-code and weight-times-scale products in the same
-        # order, which is what keeps the simulation bit-identical to the
-        # physical program
-        c3 = codec.code_chunks(codes, d_pad)       # (m, nc, chunk)
-        ref = ref + (c3 * scales[..., None]).reshape(m, d_pad)
-        ws = a32[:, :, None] * scales              # (m, m, nc): ws[i, j]
+        own3 = codec.code_chunks(codes, d_pad)     # (m, nc, chunk)
+        sref = sref + (own3 * scales[..., None]).reshape(m, d_pad)
+        # consume round t - s: the oldest gathered buffer in the ring
+        old_c, old_s = rc[0], rs[0]
+        c3 = codec.code_chunks(old_c, d_pad)
+        ws = a32[:, :, None] * old_s               # (m, m, nc): ws[i, j]
         acc3 = acc.reshape(m, -1, codec.chunk)
         for j in range(m):
             acc3 = acc3 + ws[:, j, :, None] * c3[j]
         acc = acc3.reshape(m, d_pad)
-        return acc.astype(dtype), ref, acc
+        rc = jnp.concatenate([rc[1:], codes[None]], axis=0)
+        rs = jnp.concatenate([rs[1:], scales[None]], axis=0)
+        # the iterate advances only once a delayed buffer has landed
+        w = jnp.where(t >= staleness, acc.astype(dtype), w)
+        return w, sref, acc, rc, rs
 
-    zeros = jnp.zeros((m, d_pad), jnp.float32)
-    out, _, _ = jax.lax.fori_loop(0, t_server, one_round,
-                                  (flat, zeros, zeros))
+    out, _, _, _, _ = jax.lax.fori_loop(
+        0, t_server, one_round_stale, (flat, zeros, zeros, ring_c, ring_s))
     return _bucket_split(out, leaves, treedef)
 
 
@@ -746,7 +836,8 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
                           block: int = 16_777_216, codec=None,
                           stochastic: bool = True,
                           gather_codes: bool = True,
-                          with_shipped: bool = False) -> Callable:
+                          with_shipped: bool = False,
+                          staleness: int = 0) -> Callable:
     """T_S-round gossip as an explicit shard_map program, returned as
     ``run(operator, tree)`` with the ``(M, M)`` mixing ``operator`` a
     *traced operand* — one compiled program serves every per-epoch graph
@@ -807,12 +898,33 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
     program, with the exact local-shard bucket/chunk/dither layout that
     crossed the wire (an outside ``bucketed_roundtrip_tree`` would only
     reproduce it for unsharded rows).
+
+    **Bounded staleness** (``staleness=s > 0``, codec mode only): the round
+    body becomes software-pipelined — round ``t``'s code+scale gather is
+    issued at production time and pushed into an in-flight ring carried by
+    the loop, while the mix consumes the gathered buffers of round
+    ``t - s`` popped from the ring head.  Nothing on the FMA path depends
+    on this round's collective, so the gather overlaps the decode+mix work
+    (double buffering at ``s=1``).  Semantics, freeze-before-``s``, and the
+    per-period contraction ``A^(T_S//(s+1))`` match
+    ``gossip_scan_wire_bucketed(staleness=s)`` bitwise; ``staleness=0``
+    compiles the literally unchanged synchronous body.  The plain
+    (``codec=None``) path REFUSES staleness: without the delta-coded wire
+    there is no innovation stream whose lateness telescopes away.
     """
     from jax.sharding import PartitionSpec as P
 
     if with_shipped and codec is None:
         raise ValueError("with_shipped is the wire codec's error-feedback "
                          "hook; it needs codec=")
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    if staleness and codec is None:
+        raise ValueError(
+            "bounded staleness needs the delta-coded wire (codec=): the "
+            "plain shard_map path gossips raw state, which has no "
+            "innovation stream to consume late — build with a quantizer "
+            "codec or use staleness=0")
     other_axes = [ax for ax in mesh.axis_names if ax != axis_name]
     n_other = int(np.prod([mesh.shape[ax] for ax in other_axes],
                           dtype=np.int64)) if other_axes else 1
@@ -920,6 +1032,44 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
                 acc = acc3.reshape(d_pad)
                 return to_wire(acc.astype(dtype)), ref, acc
 
+            def round_fn_wire_stale(t, carry):
+                """Software-pipelined bounded-staleness round: ISSUE round
+                ``t``'s gather here (pushed onto the in-flight ring) while
+                the mix consumes the ring head — round ``t - staleness``'s
+                buffers.  No data path connects this round's collective to
+                this round's FMA work, so the gather overlaps the
+                decode+mix.  The sender's reference advances with its OWN
+                codes, computed locally rather than sliced from the gather
+                (same values — the gather round-trips code integers
+                exactly — but keeps the reference update off the
+                collective's critical path), so innovations stay
+                single-shipped; the iterate freezes until the first
+                delayed buffer lands (``t < staleness``)."""
+                w, ref, acc, rc, rs = carry
+                delta = from_wire(w).astype(jnp.float32) - ref
+                codes, scales = encode_round(t, delta)
+                if gather_codes:
+                    g_codes = jax.lax.all_gather(codes, axis_name)
+                else:
+                    g_codes = jax.lax.all_gather(
+                        codes.astype(jnp.float32),
+                        axis_name).astype(codes.dtype)
+                g_scales = jax.lax.all_gather(scales, axis_name)
+                own3 = codec.code_chunks(codes, d_pad)   # (nc, chunk)
+                ref = ref + (own3 * scales[:, None]).reshape(d_pad)
+                old_c, old_s = rc[0], rs[0]
+                c3 = codec.code_chunks(old_c, d_pad)     # (M, nc, chunk)
+                ws = row[:, None] * old_s                # (M, nc) folded
+                acc3 = acc.reshape(-1, codec.chunk)
+                for j in range(m):
+                    acc3 = acc3 + ws[j][:, None] * c3[j]
+                acc = acc3.reshape(d_pad)
+                rc = jnp.concatenate([rc[1:], g_codes[None]], axis=0)
+                rs = jnp.concatenate([rs[1:], g_scales[None]], axis=0)
+                w = jnp.where(t >= staleness,
+                              to_wire(acc.astype(dtype)), w)
+                return w, ref, acc, rc, rs
+
             zeros = jnp.zeros((d_pad,), jnp.float32)
             if with_shipped:
                 # what this device shipped of its own model (the EF hook)
@@ -938,8 +1088,23 @@ def make_gossip_shard_map(mesh, t_server: int, leaf_specs: Any, *,
                 shipped = codec.decode_block(codes0, scales0, d_pad)
             else:
                 shipped = zeros
-            w, _, _ = jax.lax.fori_loop(
-                0, t_server, round_fn_wire, (flat, zeros, zeros))
+            if staleness == 0:
+                w, _, _ = jax.lax.fori_loop(
+                    0, t_server, round_fn_wire, (flat, zeros, zeros))
+            else:
+                # in-flight ring pre-filled with zero codes + unit scales
+                # (decode to nothing), so consumption is unconditional and
+                # inert before round ``staleness``
+                code_abs = jax.eval_shape(
+                    lambda x: codec.encode_block(x, 0.5)[0],
+                    jax.ShapeDtypeStruct((d_pad,), jnp.float32))
+                ring_c = jnp.zeros((staleness, m) + code_abs.shape,
+                                   code_abs.dtype)
+                ring_s = jnp.ones(
+                    (staleness, m, d_pad // codec.chunk), jnp.float32)
+                w, _, _, _, _ = jax.lax.fori_loop(
+                    0, t_server, round_fn_wire_stale,
+                    (flat, zeros, zeros, ring_c, ring_s))
             out = from_wire(w)
             new_leaves, shipped_leaves, off = [], [], 0
             for leaf in leaves:
@@ -1199,6 +1364,17 @@ class ConsensusBackend:
       clipped): must see every neighbor's plaintext values, so it cannot
       ride the quantized physical wire, and its update is not the literal
       ``W <- A W``, so no push-sum analogue exists.
+
+    ``staleness`` (instance attribute, default 0) is the bounded-staleness
+    depth ``s``: round ``t`` mixes with round ``t - s``'s messages
+    (``gossip_scan_stale`` / the software-pipelined wire bodies), composing
+    to ``A^(T_S // (s+1))`` per period in exact arithmetic — the
+    staleness-augmented contraction ``schedule.SigmaTracker`` monitors.
+    Only the literal T_S-round schedules carry it (gossip, gossip_blocked,
+    the shard_map codec wire); every other backend refuses at build, and
+    push-sum refuses at call time (the exact ``(M,)`` weight recursion has
+    no delayed twin, so a stale numerator over a fresh weight would be
+    inconsistent).
     """
 
     name = "?"
@@ -1208,6 +1384,7 @@ class ConsensusBackend:
     needs_spectral = False
     compressed = False
     robust = False
+    staleness = 0
 
     def __init__(self, a_static: Optional[np.ndarray], t_server: int):
         self.a_static = (None if a_static is None
@@ -1252,6 +1429,14 @@ class ConsensusBackend:
                 f"analogue: its value update is not the literal W <- A W, "
                 f"so a numerator/weight pair mixed by it would be "
                 f"inconsistent")
+        if self.staleness:
+            raise ValueError(
+                f"consensus backend {self.name!r} has staleness="
+                f"{self.staleness}, but ratio consensus mixes a "
+                f"numerator/weight PAIR and the exact (M,) weight "
+                f"recursion has no delayed twin — a stale numerator over "
+                f"a fresh weight breaks the mass-conservation invariant; "
+                f"use staleness=0 with push-sum")
         p = jnp.swapaxes(self._resolve(a_p), 0, 1)
         return PushSumState(self._mix(state.values, p),
                             self._mix_weight(state.weight, p))
@@ -1266,27 +1451,43 @@ class ConsensusBackend:
 
 
 class GossipBackend(ConsensusBackend):
-    """The reference per-leaf einsum schedule (``gossip_scan``)."""
+    """The reference per-leaf einsum schedule (``gossip_scan``; with
+    ``staleness=s > 0``, ``gossip_scan_stale`` — whose ``s=0`` branch IS
+    ``gossip_scan``, so the default construction is bitwise unchanged)."""
 
     name = "gossip"
 
+    def __init__(self, a_static, t_server, *, staleness: int = 0):
+        super().__init__(a_static, t_server)
+        self.staleness = staleness
+
     def _mix(self, tree, a):
-        return gossip_scan(a, tree, self.t_server)
+        return gossip_scan_stale(a, tree, self.t_server, self.staleness)
 
 
 class BlockedGossipBackend(ConsensusBackend):
     """``gossip_scan_blocked``: fixed-block streaming — the pjit production
-    path whose live working set is one (M, block) gather, not a full leaf."""
+    path whose live working set is one (M, block) gather, not a full leaf.
+
+    Under ``staleness=s > 0`` the plain (uncompressed) mix delegates to
+    ``gossip_scan_stale``: the delayed-iterate history would multiply the
+    blocked path's live set by ``s+1`` for no wire benefit — only the
+    delta-coded wire (``gossip_scan_wire_bucketed``) pipelines; the
+    physical-wire wrap (``CompressedBackend``) keeps the bucketed stale
+    body either way."""
 
     name = "gossip_blocked"
 
     def __init__(self, a_static, t_server, *, block: int = 4_194_304,
-                 flat_sharding=None):
+                 flat_sharding=None, staleness: int = 0):
         super().__init__(a_static, t_server)
         self.block = block
         self.flat_sharding = flat_sharding
+        self.staleness = staleness
 
     def _mix(self, tree, a):
+        if self.staleness:
+            return gossip_scan_stale(a, tree, self.t_server, self.staleness)
         return gossip_scan_blocked(a, tree, self.t_server, block=self.block,
                                    flat_sharding=self.flat_sharding)
 
@@ -1728,17 +1929,24 @@ class ShardMapBackend(ConsensusBackend):
     mesh_bound = True
 
     def __init__(self, mesh, a_static, t_server, leaf_specs, *,
-                 axis_name: str = "server", block: int = 16_777_216):
+                 axis_name: str = "server", block: int = 16_777_216,
+                 staleness: int = 0):
         super().__init__(a_static, t_server)
         self.mesh = mesh
         self.leaf_specs = leaf_specs
         self.axis_name = axis_name
         self.block = block
+        self.staleness = staleness
         self._run = make_gossip_shard_map(mesh, t_server, leaf_specs,
                                           axis_name=axis_name, block=block)
         self._wire_runners = {}
 
     def _mix(self, tree, a):
+        if self.staleness:
+            raise ValueError(
+                "shard_map bounded staleness rides the delta-coded wire "
+                "only (make_gossip_shard_map refuses codec=None): wrap "
+                "with a physical-wire CompressedBackend or use staleness=0")
         return self._run(a, tree)
 
     def wire_runner(self, codec, *, stochastic: bool = True,
@@ -1751,15 +1959,16 @@ class ShardMapBackend(ConsensusBackend):
         decoded transmission (the error-feedback hook, computed inside the
         program with the exact local-shard wire layout).  Built on demand
         and cached per (codec, mode); ``CompressedBackend(wire='physical')``
-        is the caller."""
+        is the caller.  The backend's ``staleness`` threads through to the
+        software-pipelined wire body."""
         k = (codec, bool(stochastic), bool(gather_codes),
-             bool(with_shipped))
+             bool(with_shipped), self.staleness)
         if k not in self._wire_runners:
             self._wire_runners[k] = make_gossip_shard_map(
                 self.mesh, self.t_server, self.leaf_specs,
                 axis_name=self.axis_name, block=self.block, codec=codec,
                 stochastic=stochastic, gather_codes=gather_codes,
-                with_shipped=with_shipped)
+                with_shipped=with_shipped, staleness=self.staleness)
         return self._wire_runners[k]
 
 
@@ -1844,6 +2053,13 @@ class CompressedBackend(ConsensusBackend):
                     f"it needs the literal T_S-round W <- A W schedule; "
                     f"backend {inner.name!r} has no per-round wire — use "
                     f"'gossip', 'gossip_blocked' or the shard_map backend")
+        if getattr(inner, "staleness", 0) and wire != "physical":
+            raise ValueError(
+                "bounded staleness + wire='simulated' is incoherent: the "
+                "simulated wire quantizes ONCE per period (no per-round "
+                "in-flight buffers exist to be late), so the delayed-"
+                "consumption model has nothing physical to model — use "
+                "wire='physical' or staleness=0")
         self.inner = inner
         self.compressor = compressor
         self.error_feedback = error_feedback
@@ -1858,6 +2074,7 @@ class CompressedBackend(ConsensusBackend):
         self.flat_sharding = flat_sharding
         self.a_static = inner.a_static
         self.t_server = inner.t_server
+        self.staleness = getattr(inner, "staleness", 0)
         self.name = f"compressed[{inner.name}+{compressor.name}" + (
             "+wire" if wire == "physical" else "") + "]"
         self.supports_traced = inner.supports_traced
@@ -1910,7 +2127,7 @@ class CompressedBackend(ConsensusBackend):
             residual = jax.tree.map(lambda c, q: c - q, tree, shipped)
         return gossip_scan_wire_bucketed(
             a, tree, self.inner.t_server, codec, key,
-            block=self.wire_block), residual
+            block=self.wire_block, staleness=self.staleness), residual
 
     # -- the EF-threading entry points the epoch step calls ------------------
     def mix_compressed(self, tree: Any, a_p: Optional[jax.Array] = None, *,
@@ -1965,7 +2182,8 @@ def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
                  block: int = DEFAULT_GOSSIP_BLOCK,
                  compression: str = "none",
                  error_feedback: bool = False,
-                 wire: str = "simulated") -> ConsensusBackend:
+                 wire: str = "simulated",
+                 staleness: int = 0) -> ConsensusBackend:
     """Map a ``DFLConfig.consensus_mode`` string to a ``ConsensusBackend``.
 
     The robust screens take an optional spec argument after a colon:
@@ -1980,13 +2198,27 @@ def make_backend(mode: str, a_static: Optional[np.ndarray], t_server: int, *,
     see ``CompressedBackend``.  ``shard_map`` is absent on purpose: it
     needs a mesh and per-leaf PartitionSpecs, so the launcher builds it
     directly (``launch.sharding.fl_consensus_backend``, which applies the
-    same compression wrap)."""
+    same compression wrap).
+
+    ``staleness`` (bounded-staleness depth, see ``gossip_scan_stale``)
+    threads into the literal T_S-round schedules only — every other mode
+    has no per-round message stream to delay and refuses loudly."""
     base, _, arg = mode.partition(":")
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    if staleness and base not in ("gossip", "gossip_blocked"):
+        raise ValueError(
+            f"bounded staleness needs the literal T_S-round W <- A W "
+            f"schedule (round t consumes round t-s's messages); mode "
+            f"{mode!r} has no per-round message stream to delay — use "
+            f"'gossip'/'gossip_blocked' (or the launcher's shard_map "
+            f"backend) or staleness=0")
     if mode == "gossip":
-        backend = GossipBackend(a_static, t_server)
+        backend = GossipBackend(a_static, t_server, staleness=staleness)
     elif mode == "gossip_blocked":
         backend = BlockedGossipBackend(a_static, t_server, block=block,
-                                       flat_sharding=gossip_flat_sharding)
+                                       flat_sharding=gossip_flat_sharding,
+                                       staleness=staleness)
     elif mode == "collapsed":
         backend = CollapsedBackend(a_static, t_server)
     elif mode == "chebyshev":

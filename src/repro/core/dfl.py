@@ -187,6 +187,17 @@ class DFLConfig:
     #                (gossip / gossip_blocked / shard_map).
     # Ignored when compression == "none".
     wire: str = "simulated"
+    # Bounded-staleness consensus (consensus.gossip_scan_stale and the
+    # software-pipelined wire bodies): gossip round t mixes with neighbor
+    # messages from round t - staleness, so the round-t collective overlaps
+    # the round-t compute instead of serializing in front of it.  In exact
+    # arithmetic the period contracts as A^(T_S // (staleness+1)) — the
+    # augmented operator schedule.SigmaTracker(staleness=...) monitors.
+    # staleness=0 is BITWISE today's synchronous path (the build branches
+    # to the literally unchanged code).  Carried by the literal T_S-round
+    # schedules only (gossip / gossip_blocked / the shard_map codec wire);
+    # incompatible with mixing="push_sum" and with robust/spectral modes.
+    staleness: int = 0
     # Adversarial-server scenario (schedule.ByzantineSchedule or None):
     # marked servers replace their Eq.-4 aggregate with an attack
     # (apply_byzantine) BEFORE the consensus period, so the robust
@@ -412,7 +423,8 @@ def resolve_backend(cfg: "DFLConfig"):
         gossip_flat_sharding=cfg.gossip_flat_sharding,
         compression=cfg.compression,
         error_feedback=cfg.error_feedback,
-        wire=cfg.wire)
+        wire=cfg.wire,
+        staleness=cfg.staleness)
 
 
 def active_wire(cfg: "DFLConfig") -> Tuple[str, int]:
@@ -461,7 +473,27 @@ def build_dfl_epoch_step(
             "Perron-weighted average — choose DFLConfig(mixing='push_sum') "
             "(unbiased) or mixing='row_stochastic' (the explicit biased "
             "baseline)")
+    if cfg.staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {cfg.staleness}")
+    if cfg.staleness and cfg.mixing == "push_sum":
+        raise ValueError(
+            "bounded staleness is undefined under mixing='push_sum': the "
+            "exact (M,) weight recursion has no delayed twin, so a stale "
+            "numerator over a fresh weight breaks mass conservation — use "
+            "staleness=0 or a symmetric/row_stochastic mixing")
+    if cfg.staleness and cfg.consensus_mode == "none" \
+            and cfg.consensus_backend is None:
+        raise ValueError("staleness > 0 with consensus_mode='none' is "
+                         "meaningless: there are no gossip rounds to delay")
     backend = resolve_backend(cfg)
+    if backend is not None and cfg.consensus_backend is not None \
+            and getattr(backend, "staleness", 0) != cfg.staleness:
+        raise ValueError(
+            f"DFLConfig.staleness={cfg.staleness} disagrees with the "
+            f"injected consensus backend's staleness="
+            f"{getattr(backend, 'staleness', 0)}: the SigmaTracker "
+            f"contraction and the compiled wire program must see the same "
+            f"depth — build the backend with the same staleness")
     if backend is not None:
         if cfg.mixing != "symmetric" and not backend.supports_directed:
             raise ValueError(

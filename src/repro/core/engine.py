@@ -19,6 +19,19 @@ from it, exactly like an end-of-epoch broadcast.
 The engine reports per-epoch history including the participating-client
 loss, Lemma-1/3 diagnostics, and the host-side product contraction
 ``sigma_prod`` (``schedule.SigmaTracker``) of the time-varying gossip.
+
+Superepoch dispatch (``superepoch=K > 1``): ``run`` becomes an event-driven
+scheduler over K-epoch blocks — host-side schedules (participation masks,
+mixing matrices, byzantine codes, batches) are pre-materialized per block,
+stacked into one ``overlap.EpochScheduleBatch``, and dispatched through the
+fused K-epoch megastep (``overlap.build_dfl_superepoch_step``, jitted with
+donation and cached per (M, K)); the stacked ``DFLMetrics`` come back in
+ONE ``jax.device_get``.  Blocks split at fault epochs, where graph surgery
+changes shapes.  History is element-identical to the barrier loop — the
+scan body is the unchanged epoch step (``tests/test_overlap.py``).  All
+host metric readbacks (at any K, including the K=1 barrier path) flow
+through the injectable ``_device_get`` hook, so tests can count device
+syncs per dispatch.
 """
 from __future__ import annotations
 
@@ -33,6 +46,7 @@ from repro.comm.accounting import (BytesTracker,
                                    tree_bucketed_wire_bytes_per_server)
 from repro.comm.compressors import tree_wire_bytes_per_server
 from repro.core import dfl
+from repro.core import overlap
 from repro.core import topology as tp
 from repro.core.schedule import (EpochSchedule, FaultSchedule,
                                  ParticipationSchedule, SigmaTracker,
@@ -64,10 +78,17 @@ class DynamicFederationEngine:
     # (asserted in tests/test_obs.py), and the tracer's block_until_ready
     # sync points exist only when a tracer is attached.
     obs: Any = None
+    # superepoch length K: run() dispatches K epochs per compiled program
+    # (overlap.build_dfl_superepoch_step) and reads K epochs of metrics
+    # back in one transfer.  1 = the per-epoch barrier loop (unchanged).
+    superepoch: int = 1
 
     def __post_init__(self):
         if self.obs is None:
             self.obs = OBS_OFF
+        if self.superepoch < 1:
+            raise ValueError(
+                f"superepoch must be >= 1, got {self.superepoch}")
         if not self.cfg.dynamic:
             self.cfg = dataclasses.replace(self.cfg, dynamic=True)
         if (self.topology_schedule.kind == "asymmetric"
@@ -96,6 +117,13 @@ class DynamicFederationEngine:
         self.alive: List[int] = list(range(self.topo.num_servers))
         self._initial_m: int = self.topo.num_servers
         self._steps: Dict[int, Callable] = {}
+        # fused K-epoch megasteps, cached per (M, K) — K varies at block
+        # boundaries (fault epochs and the run tail)
+        self._super_steps: Dict[Tuple[int, int], Callable] = {}
+        # ALL host metric readbacks flow through this injectable hook —
+        # one call per dispatch (run_epoch or superepoch block), which the
+        # device-sync regression test counts by swapping it out
+        self._device_get: Callable = jax.device_get
         self._tracker = self._fresh_tracker()
         # compressed-gossip wire accounting (None when the wire is exact):
         # one ledger across the whole run — bytes accumulate through fault
@@ -113,6 +141,11 @@ class DynamicFederationEngine:
         # built lazily per M and ONLY when a span tracer is attached
         self._probes: Dict[int, Optional[Callable]] = {}
         self._probe_warm: set = set()
+        # one-time per-M gossip-period wall-time calibration (ns), measured
+        # by timing the consensus-replay probe ONCE per federation size —
+        # superepoch spans attribute per-epoch/per-round from this instead
+        # of re-executing the probe every epoch
+        self._probe_cal: Dict[int, Optional[int]] = {}
         # spectral backends (chebyshev) consume a host-side per-epoch
         # |lambda_2(A_p)| alongside the traced matrix
         backend = self.cfg.consensus_backend
@@ -121,7 +154,8 @@ class DynamicFederationEngine:
 
     def _fresh_tracker(self) -> SigmaTracker:
         mode = "push_sum" if self.cfg.mixing == "push_sum" else "average"
-        return SigmaTracker(self.topo.num_servers, mode=mode)
+        return SigmaTracker(self.topo.num_servers, mode=mode,
+                            staleness=self.cfg.staleness)
 
     def _reset_psum_weight(self, state: dfl.DFLState) -> dfl.DFLState:
         """Push-sum weights are per-server mass fractions of the CURRENT
@@ -186,6 +220,20 @@ class DynamicFederationEngine:
                 cfg, self.loss_fn, self.optimizer), donate_argnums=(0,))
         return self._steps[m]
 
+    def _super_step(self, k: int) -> Callable:
+        """The jitted fused K-epoch megastep for the current federation
+        size, cached per (M, K) — same donation as ``_step`` (the carried
+        state is consumed by the scan)."""
+        m = self.topo.num_servers
+        key = (m, k)
+        if key not in self._super_steps:
+            cfg = dataclasses.replace(self.cfg, topology=self.topo)
+            self._super_steps[key] = jax.jit(
+                overlap.build_dfl_superepoch_step(
+                    cfg, self.loss_fn, self.optimizer, k),
+                donate_argnums=(0,))
+        return self._super_steps[key]
+
     def compile_counts(self) -> Dict[int, int]:
         """Per federation size M, how many distinct programs the cached
         epoch step has traced.  The dynamic-mode contract is EXACTLY 1:
@@ -197,6 +245,14 @@ class DynamicFederationEngine:
         on this surface."""
         return {m: int(step._cache_size())
                 for m, step in self._steps.items()}
+
+    def superepoch_compile_counts(self) -> Dict[Tuple[int, int], int]:
+        """Per (M, K), how many distinct programs the cached megastep has
+        traced — the superepoch twin of ``compile_counts`` with the same
+        EXACTLY-1 contract: the stacked ``EpochScheduleBatch`` is traced,
+        so no block's operand values may change the trace signature."""
+        return {key: int(step._cache_size())
+                for key, step in self._super_steps.items()}
 
     # -- fault surgery -------------------------------------------------------
     def _drop(self, state: dfl.DFLState, server: int) -> dfl.DFLState:
@@ -310,6 +366,83 @@ class DynamicFederationEngine:
                         epoch=epoch, method="consensus-replay",
                         t_server=self.topo.t_server)
 
+    def _gossip_cal_ns(self, m: int, state: dfl.DFLState, a_np,
+                       lam2) -> Optional[int]:
+        """ONE-TIME per-M calibration of the gossip-period wall share: time
+        the consensus-replay probe once (after an untimed warm-up) and
+        cache the result.  Superepoch span attribution reuses this number
+        for every epoch of every block at this M instead of re-executing
+        the probe per epoch — K probe re-executions per block would cost
+        more wall time than the barrier they replace.  ``None`` when there
+        is no consensus period to time."""
+        if m not in self._probe_cal:
+            probe = self._consensus_probe(m)
+            if probe is None:
+                self._probe_cal[m] = None
+            else:
+                tracer = self.obs.tracer
+                server_tree = jax.tree.map(lambda x: x[:, 0],
+                                           state.client_params)
+                a_j = jnp.asarray(a_np, jnp.float32)
+                jax.block_until_ready(probe(server_tree, a_j, lam2))
+                p0 = tracer.now()
+                jax.block_until_ready(probe(server_tree, a_j, lam2))
+                self._probe_cal[m] = int(tracer.now() - p0)
+        return self._probe_cal[m]
+
+    def _trace_superepoch(self, se_span, epoch0: int, k: int, m: int,
+                          m_known: bool, programs_before: int, t0: int,
+                          t1: int, state: dfl.DFLState, a_np, lam2) -> None:
+        """Tracer-only post-dispatch attribution of one fused K-epoch
+        megastep: compile event if this dispatch traced a new program, then
+        the [t0, t1] wall interval split uniformly into K per-epoch spans,
+        each split into local-period / gossip-period via the cached
+        ``_gossip_cal_ns`` calibration, and the gossip period further into
+        T_S equal ``gossip-round`` child spans (``method=
+        "calibrated-round"`` — attribution, not per-round measurement:
+        rounds cannot be timed individually inside one compiled program
+        without host syncs that would destroy the very overlap being
+        measured)."""
+        tracer = self.obs.tracer
+        programs_after = int(self._super_steps[(m, k)]._cache_size())
+        if programs_after > programs_before:
+            if not m_known and len(self._super_steps) == 1:
+                cause = "first_trace"
+            elif not m_known:
+                cause = "federation_size_change"
+            else:
+                cause = "retrace"
+            tracer.compile_event(cause, m=m, programs=programs_after,
+                                 epoch=epoch0, superepoch=k)
+        gossip_ns = self._gossip_cal_ns(m, state, a_np, lam2)
+        t_server = self.topo.t_server
+        dt = max((t1 - t0) // k, 1)
+        for i in range(k):
+            e0 = min(t0 + i * dt, t1)
+            e1 = t1 if i == k - 1 else min(t0 + (i + 1) * dt, t1)
+            ep_span = tracer.add_span("epoch", e0, e1, parent=se_span,
+                                      epoch=epoch0 + i,
+                                      method="uniform-split")
+            if gossip_ns is None:
+                tracer.add_span("local-period", e0, e1, parent=ep_span,
+                                epoch=epoch0 + i)
+                continue
+            g = min(gossip_ns, e1 - e0)
+            split = e1 - g
+            tracer.add_span("local-period", e0, split, parent=ep_span,
+                            epoch=epoch0 + i, method="calibrated")
+            gp = tracer.add_span("gossip-period", split, e1, parent=ep_span,
+                                 epoch=epoch0 + i, method="calibrated",
+                                 t_server=t_server)
+            rdt = max(g // max(t_server, 1), 1)
+            for r in range(t_server):
+                r0 = min(split + r * rdt, e1)
+                r1 = e1 if r == t_server - 1 else min(split + (r + 1) * rdt,
+                                                      e1)
+                tracer.add_span("gossip-round", r0, r1, parent=gp,
+                                epoch=epoch0 + i, round=r,
+                                method="calibrated-round")
+
     # -- the loop ------------------------------------------------------------
     def run_epoch(self, state: dfl.DFLState, epoch: int,
                   batch_fn: BatchFn) -> Tuple[dfl.DFLState, Dict[str, float]]:
@@ -358,13 +491,19 @@ class DynamicFederationEngine:
                                  programs_before, t0, tracer.now(), state,
                                  a_np, lam2)
             with obs.span("host-aggregation", epoch=epoch):
+                # ONE device->host transfer for the whole metrics struct:
+                # the old per-field float(...)/np.asarray reads each issued
+                # their own blocking transfer (5 syncs per epoch on the
+                # push-sum + screen path) — everything below is numpy
+                metrics_h, psw_h = self._device_get(
+                    (metrics, state.psum_weight))
                 # participant-weighted loss of the last local iteration
-                last = np.asarray(metrics.loss[-1], np.float32)
+                last = np.asarray(metrics_h.loss[-1], np.float32)
                 w = mask_np if mask_np.sum() else np.ones_like(mask_np)
                 record = {
                     "loss": float((last * w).sum() / w.sum()),
-                    "disagreement": float(metrics.server_disagreement),
-                    "drift": float(metrics.client_drift),
+                    "disagreement": float(metrics_h.server_disagreement),
+                    "drift": float(metrics_h.client_drift),
                     "participation": float(mask_np.mean()),
                     "num_servers": float(m),
                     "sigma_prod": sigma_prod,
@@ -374,12 +513,11 @@ class DynamicFederationEngine:
                     # epoch — the honest-metric masks in tests/benchmarks
                     # key off this
                     record["byzantine"] = float((byz_np > 0).mean())
-                if state.psum_weight is not None:
+                if psw_h is not None:
                     # ratio-consensus conditioning: a terminal weight near
                     # 0 means that server's num/w read-out amplified
                     # rounding error
-                    record["psum_min_weight"] = float(
-                        jnp.min(state.psum_weight))
+                    record["psum_min_weight"] = float(np.min(psw_h))
                 if epoch_wire_bytes is not None:
                     # this epoch's on-wire consensus traffic + the
                     # cumulative compression ratio vs f32 replicas over the
@@ -391,13 +529,14 @@ class DynamicFederationEngine:
                     record["wire_mb"] = epoch_wire_bytes / 1e6
                     record["wire_ratio"] = self._bytes.ratio()
                 screen_per_round = None
-                if metrics.screen_rejected is not None:
+                if metrics_h.screen_rejected is not None:
                     # robust-screen activity, normalised per gossip round;
                     # the per-server breakdown goes to the hub as a
                     # labelled histogram below
                     rounds = max(self.topo.t_server, 1)
-                    screen_per_round = (np.asarray(metrics.screen_rejected,
-                                                   np.float32) / rounds)
+                    screen_per_round = (
+                        np.asarray(metrics_h.screen_rejected, np.float32)
+                        / rounds)
                     record["screen_rejected"] = float(
                         screen_per_round.sum())
             obs.observe(
@@ -407,13 +546,151 @@ class DynamicFederationEngine:
                 screen_rejected=screen_per_round)
         return state, record
 
+    # -- superepoch dispatch -------------------------------------------------
+    def _plan_blocks(self, epochs: int) -> List[Tuple[int, int]]:
+        """Cut ``[0, epochs)`` into superepoch dispatch blocks: maximal runs
+        of at most ``self.superepoch`` epochs that contain no fault epoch in
+        their interior.  Fault surgery changes array shapes, so a fault
+        epoch must sit at a block START (where ``run_superepoch`` applies
+        surgery before materializing the block's operands) — the tail block
+        and the pre-fault remainder are simply shorter, hitting a smaller-K
+        megastep cache entry."""
+        cuts = {0, epochs}
+        cuts.update(ev.epoch for ev in self.faults.events
+                    if 0 < ev.epoch < epochs)
+        blocks: List[Tuple[int, int]] = []
+        ordered = sorted(cuts)
+        for lo, hi in zip(ordered[:-1], ordered[1:]):
+            e = lo
+            while e < hi:
+                k = min(self.superepoch, hi - e)
+                blocks.append((e, k))
+                e += k
+        return blocks
+
+    def run_superepoch(
+            self, state: dfl.DFLState, epoch0: int, k: int,
+            batch_fn: BatchFn) -> Tuple[dfl.DFLState, List[Dict[str, float]]]:
+        """Dispatch epochs ``[epoch0, epoch0 + k)`` as ONE fused megastep.
+
+        Host-side schedule generation runs up front for the whole block —
+        participation masks, mixing matrices, byzantine codes, contraction
+        tracking, batches — then the stacked operands cross to the device
+        once, K epochs execute inside one compiled program, and the stacked
+        metrics come back in one ``_device_get``.  The per-epoch records
+        are built from the SAME formulas as ``run_epoch`` over the stacked
+        arrays, so ``run(superepoch=K)`` history is element-identical to
+        the barrier loop's (``tests/test_overlap.py``)."""
+        obs = self.obs
+        tracer = obs.tracer
+        with obs.span("superepoch", epoch=epoch0, k=k) as se_span:
+            with obs.span("fault-surgery", epoch=epoch0):
+                state = self.apply_faults(state, epoch0)
+            m, n = self.topo.num_servers, self.topo.clients_per_server
+            # pre-materialize the block: one host-side pass per epoch, no
+            # device work — the schedules are plain numpy until stacked
+            scheds: List[EpochSchedule] = []
+            batch_list: List[Any] = []
+            sigma_list: List[float] = []
+            lam2_last = None
+            for i in range(k):
+                e = epoch0 + i
+                mask_np = self.participation.mask(e, m, n)
+                a_np = self.topology_schedule.mixing(self.topo, e)
+                sigma_list.append(self._tracker.update(a_np,
+                                                       self.topo.t_server))
+                lam2 = (np.float32(tp.lambda_2(a_np))
+                        if self._needs_spectral else None)
+                lam2_last = lam2
+                byz_np = None
+                if (self.cfg.byzantine is not None
+                        and self.cfg.byzantine.attacks):
+                    byz_np = self.cfg.byzantine.codes(
+                        e, tuple(self.alive), self._initial_m)
+                scheds.append(EpochSchedule(mask_np, a_np, lam2, byz_np))
+                batch_list.append(batch_fn(e, tuple(self.alive)))
+            sb = overlap.stack_epoch_schedules(scheds)
+            sched = overlap.EpochScheduleBatch(
+                jnp.asarray(sb.mask), jnp.asarray(sb.mixing),
+                None if sb.lam2 is None else jnp.asarray(sb.lam2),
+                None if sb.byz is None else jnp.asarray(sb.byz))
+            batches = jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)
+            wire = None
+            if self._bytes is not None:
+                row_bytes, elems = self._wire_row_bytes(state)
+                wire = self._bytes.update_many(
+                    [s.mixing for s in scheds], self.topo.t_server,
+                    row_bytes=row_bytes, elems_per_row=elems)
+            m_known = (m, k) in self._super_steps
+            step = self._super_step(k)
+            programs_before = int(step._cache_size()) if tracer else 0
+            t0 = tracer.now() if tracer else 0
+            state, metrics, psw = step(state, batches, sched)
+            if tracer is not None:
+                jax.block_until_ready(state)
+                self._trace_superepoch(
+                    se_span, epoch0, k, m, m_known, programs_before, t0,
+                    tracer.now(), state, scheds[-1].mixing,
+                    None if lam2_last is None else jnp.float32(lam2_last))
+            records: List[Tuple[Dict[str, float], Optional[np.ndarray]]] = []
+            with obs.span("host-aggregation", epoch=epoch0, k=k):
+                # the block's ONLY device->host transfer: K epochs of
+                # stacked metrics + the (K, M) push-sum weight trace
+                metrics_h, psw_h = self._device_get((metrics, psw))
+                rounds = max(self.topo.t_server, 1)
+                for i in range(k):
+                    mask_np = scheds[i].mask
+                    byz_np = scheds[i].byz
+                    last = np.asarray(metrics_h.loss[i][-1], np.float32)
+                    w = (mask_np if mask_np.sum()
+                         else np.ones_like(mask_np))
+                    record = {
+                        "loss": float((last * w).sum() / w.sum()),
+                        "disagreement": float(
+                            metrics_h.server_disagreement[i]),
+                        "drift": float(metrics_h.client_drift[i]),
+                        "participation": float(mask_np.mean()),
+                        "num_servers": float(m),
+                        "sigma_prod": sigma_list[i],
+                    }
+                    if byz_np is not None:
+                        record["byzantine"] = float((byz_np > 0).mean())
+                    if psw_h is not None:
+                        record["psum_min_weight"] = float(
+                            np.min(psw_h[i]))
+                    if wire is not None:
+                        epoch_bytes, ratio_after, _ = wire[i]
+                        record["wire_mb"] = epoch_bytes / 1e6
+                        record["wire_ratio"] = ratio_after
+                    screen_per_round = None
+                    if metrics_h.screen_rejected is not None:
+                        screen_per_round = (
+                            np.asarray(metrics_h.screen_rejected[i],
+                                       np.float32) / rounds)
+                        record["screen_rejected"] = float(
+                            screen_per_round.sum())
+                    records.append((record, screen_per_round))
+            for i, (record, screen_per_round) in enumerate(records):
+                obs.observe(
+                    epoch0 + i, record, servers=tuple(self.alive),
+                    per_link=(wire[i][2] if wire is not None else None),
+                    screen_rejected=screen_per_round)
+        return state, [r for r, _ in records]
+
     def run(self, state: dfl.DFLState, epochs: int,
             batch_fn: BatchFn) -> Tuple[dfl.DFLState, Dict[str, List[float]]]:
         history: Dict[str, List[float]] = {}
-        for epoch in range(epochs):
-            state, rec = self.run_epoch(state, epoch, batch_fn)
-            for k, v in rec.items():
-                history.setdefault(k, []).append(v)
+        if self.superepoch <= 1:
+            for epoch in range(epochs):
+                state, rec = self.run_epoch(state, epoch, batch_fn)
+                for key, v in rec.items():
+                    history.setdefault(key, []).append(v)
+            return state, history
+        for epoch0, k in self._plan_blocks(epochs):
+            state, recs = self.run_superepoch(state, epoch0, k, batch_fn)
+            for rec in recs:
+                for key, v in rec.items():
+                    history.setdefault(key, []).append(v)
         return state, history
 
 
@@ -424,6 +701,7 @@ def make_engine(topology: FLTopology, loss_fn: dfl.LossFn,
                 topology_schedule: Optional[TopologySchedule] = None,
                 faults: Optional[FaultSchedule] = None,
                 obs: Optional[Any] = None,
+                superepoch: int = 1,
                 **cfg_kw) -> DynamicFederationEngine:
     """Convenience constructor mirroring ``DFLConfig`` defaults.
 
@@ -460,11 +738,17 @@ def make_engine(topology: FLTopology, loss_fn: dfl.LossFn,
 
     ``obs`` attaches a ``repro.obs.Observability`` bundle (span tracing +
     metric sinks + convergence watchdogs); omitted, the engine runs with
-    the no-op null bundle — see docs/observability.md."""
+    the no-op null bundle — see docs/observability.md.
+
+    ``superepoch=K`` is an ENGINE knob, not a ``DFLConfig`` field: it fuses
+    K epochs per compiled dispatch (``overlap.build_dfl_superepoch_step``)
+    without changing the per-epoch math — history is element-identical at
+    any K.  Contrast ``staleness`` (a ``DFLConfig`` field forwarded through
+    ``cfg_kw``), which DOES change the consensus operator."""
     cfg = dfl.DFLConfig(topology=topology, consensus_mode=consensus_mode,
                         dynamic=True, **cfg_kw)
     return DynamicFederationEngine(
         cfg, loss_fn, optimizer,
         participation=participation or ParticipationSchedule(),
         topology_schedule=topology_schedule or TopologySchedule(),
-        faults=faults or FaultSchedule(), obs=obs)
+        faults=faults or FaultSchedule(), obs=obs, superepoch=superepoch)

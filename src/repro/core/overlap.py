@@ -1,0 +1,153 @@
+"""Overlapped execution of Algorithm 1: the superepoch megastep.
+
+The barrier engine (``engine.DynamicFederationEngine.run_epoch``) dispatches
+ONE compiled epoch step per epoch and immediately blocks on host-side metric
+readbacks, so every epoch costs a full host round trip: dispatch latency,
+a device->host transfer, and Python schedule generation all serialize in
+front of the next epoch's compute.  At the paper's scales the per-epoch
+device work is small enough that this host loop — not FLOPs — dominates
+wall clock.
+
+This module removes the barrier without changing a single bit of the math:
+
+* ``build_dfl_superepoch_step`` wraps the UNCHANGED dynamic epoch step
+  (``dfl.build_dfl_epoch_step``) in a ``jax.lax.scan`` over ``K`` epochs,
+  so one compiled program runs K full cycles of Algorithm 1 and the host
+  loop runs once per K epochs.  The scan body IS the per-epoch program —
+  same operands, same order — so the K-epoch history is exactly the
+  barrier engine's (asserted element-bitwise in ``tests/test_overlap.py``).
+* ``EpochScheduleBatch`` is the stacked traced operand: the K per-epoch
+  ``schedule.EpochSchedule`` tuples pre-materialized host-side and stacked
+  along a leading K axis (``(K, M, N)`` masks, ``(K, M, M)`` mixing
+  matrices, ``(K,)`` lam2, ``(K, M)`` byzantine codes), which the scan
+  slices one epoch at a time.  ``stack_epoch_schedules`` builds it.
+* ``DFLMetrics`` comes back STACKED (leading K axis on every leaf) plus a
+  per-epoch ``(K, M)`` push-sum weight trace, so the engine reads the
+  whole block back in ONE ``jax.device_get`` instead of 2K+ blocking
+  scalar transfers.
+
+Staleness (``dfl.DFLConfig.staleness``) composes orthogonally: it lives
+INSIDE the consensus period (``consensus.gossip_scan_stale`` / the
+software-pipelined wire bodies), so the scan body picks it up through the
+ordinary epoch step — the superepoch overlaps epochs against the host,
+bounded staleness overlaps gossip rounds against each other.
+
+Host-side schedule generation (participation masks, per-epoch mixing
+matrices, fault surgery, byzantine codes) stays on the host: the engine
+pre-materializes one K-block of operands per dispatch and splits blocks at
+fault epochs, where array shapes change (``engine.DynamicFederationEngine
+.run`` with ``superepoch > 1``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import dfl
+from repro.core.schedule import EpochSchedule
+from repro.optim import Optimizer
+
+
+class EpochScheduleBatch(NamedTuple):
+    """K stacked ``schedule.EpochSchedule`` operands — the traced input of
+    one superepoch dispatch.  Field-for-field the per-epoch tuple with a
+    leading K axis; ``lam2``/``byz`` are ``None`` exactly when the
+    per-epoch schedules carry ``None`` (the scan then passes the empty
+    pytree node through and the compiled step contains no code for it,
+    matching the barrier engine's operand structure).
+
+    ``mask``:   (K, M, N) float32 participation masks.
+    ``mixing``: (K, M, M) float32 mixing matrices A_p.
+    ``lam2``:   optional (K,) float32 per-epoch spectral estimates.
+    ``byz``:    optional (K, M) int32 per-epoch attack codes.
+    """
+
+    mask: Any
+    mixing: Any
+    lam2: Optional[Any] = None
+    byz: Optional[Any] = None
+
+    @property
+    def k(self) -> int:
+        return int(self.mask.shape[0])
+
+
+def stack_epoch_schedules(
+        scheds: Sequence[EpochSchedule]) -> EpochScheduleBatch:
+    """Stack K per-epoch ``EpochSchedule`` tuples (host-side numpy) into
+    one ``EpochScheduleBatch``.  Optional fields must be all-``None`` or
+    all-present across the block — a mixed block would change the compiled
+    step's operand structure mid-scan."""
+    if not scheds:
+        raise ValueError("cannot stack an empty schedule block")
+    for field in ("lam2", "byz"):
+        vals = [getattr(s, field) for s in scheds]
+        if any(v is None for v in vals) and not all(v is None for v in vals):
+            raise ValueError(
+                f"EpochSchedule.{field} is set for some epochs of the block "
+                f"but not others — one compiled superepoch program needs a "
+                f"uniform operand structure")
+    return EpochScheduleBatch(
+        mask=np.stack([np.asarray(s.mask, np.float32) for s in scheds]),
+        mixing=np.stack([np.asarray(s.mixing, np.float32) for s in scheds]),
+        lam2=(None if scheds[0].lam2 is None else
+              np.stack([np.asarray(s.lam2, np.float32) for s in scheds])),
+        byz=(None if scheds[0].byz is None else
+             np.stack([np.asarray(s.byz, np.int32) for s in scheds])))
+
+
+def build_dfl_superepoch_step(
+    cfg: dfl.DFLConfig,
+    loss_fn: dfl.LossFn,
+    optimizer: Optimizer,
+    k: int,
+) -> Callable[[dfl.DFLState, Any, EpochScheduleBatch],
+              Tuple[dfl.DFLState, dfl.DFLMetrics, Optional[jax.Array]]]:
+    """Return ``superepoch_step(state, batches, sched_batch) -> (state,
+    stacked_metrics, psum_weights)``: K epochs of Algorithm 1 fused into
+    one compiled program via ``jax.lax.scan`` over the UNCHANGED dynamic
+    epoch step.
+
+    ``batches`` leaves are ``(K, T_C, M, N, *per_client_batch)`` — the
+    per-epoch batch pytrees stacked along a leading K axis; ``sched_batch``
+    is the matching ``EpochScheduleBatch``.  ``stacked_metrics`` is
+    ``dfl.DFLMetrics`` with a leading K axis on every leaf;
+    ``psum_weights`` is the ``(K, M)`` per-epoch terminal push-sum weight
+    trace under ``mixing='push_sum'`` (the end-state only keeps the LAST
+    epoch's weight — the engine needs every epoch's for its
+    ``psum_min_weight`` history column), ``None`` otherwise.
+
+    K=1 is the degenerate superepoch: a scan of length 1 around the very
+    program the barrier engine jits, bitwise-identical history (the
+    K∈{1,2,4} parity tests in ``tests/test_overlap.py``).  Like the epoch
+    step, the returned function is NOT jitted — the engine wraps it with
+    donation (``donate_argnums=(0,)``), cached per (M, K)."""
+    if k < 1:
+        raise ValueError(f"superepoch length must be >= 1, got {k}")
+    if not cfg.dynamic:
+        # the superepoch exists to amortize the dynamic engine's host loop;
+        # its scan body consumes the EpochSchedule operand, so the static
+        # step (no schedule argument) has nothing to batch
+        raise ValueError("build_dfl_superepoch_step needs "
+                         "DFLConfig(dynamic=True) — the scan body consumes "
+                         "per-epoch EpochSchedule operands")
+    epoch_step = dfl.build_dfl_epoch_step(cfg, loss_fn, optimizer)
+
+    def superepoch_step(state: dfl.DFLState, batches: Any,
+                        sched_batch: EpochScheduleBatch):
+        def body(st, operands):
+            bt, sb = operands
+            st, metrics = epoch_step(
+                st, bt, EpochSchedule(sb.mask, sb.mixing, sb.lam2, sb.byz))
+            # ys carry the per-epoch terminal push-sum weight alongside the
+            # metrics: the carried state only retains epoch K-1's weight,
+            # but the engine's psum_min_weight history column is per-epoch
+            return st, (metrics, st.psum_weight)
+
+        state, (metrics, psw) = jax.lax.scan(
+            body, state, (batches, sched_batch), length=k)
+        return state, metrics, psw
+
+    return superepoch_step

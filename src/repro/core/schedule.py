@@ -27,11 +27,13 @@ given shape:
   ``dfl.apply_byzantine`` on the pre-gossip server tree, defended by the
   robust consensus backends (``consensus.TrimmedMeanBackend`` & co).
 * trace-driven participation — ``ParticipationSchedule(kind="trace")``
-  replays an explicit ``(E, M, N)`` availability trace verbatim (diurnal
-  cycles, correlated churn — everything i.i.d. Bernoulli masks cannot
-  express).  ``diurnal_trace`` synthesises one;
-  ``save_participation_trace`` / ``load_participation_trace`` round-trip
-  it through a JSONL availability log bitwise.
+  replays an explicit ``(E, M, N)`` 0/1 availability trace verbatim
+  (diurnal cycles, correlated churn — everything i.i.d. Bernoulli masks
+  cannot express), or interprets a float trace as per-epoch per-client
+  Bernoulli RATES (fleet telemetry exports probabilities, not outcomes).
+  ``diurnal_trace`` synthesises one; ``save_participation_trace`` /
+  ``load_participation_trace`` round-trip either through a JSONL
+  availability log bitwise.
 
 All sampling is deterministic in ``(seed, epoch)`` so runs are reproducible
 and a schedule can be replayed or sliced without storing mask traces.
@@ -87,13 +89,22 @@ class ParticipationSchedule:
       ``fixed_k``     exactly ``k`` uniformly-sampled clients per server.
       ``round_robin`` deterministic rotation of ``k`` clients per server —
                       the scheduling-policy baseline of Abdelghany et al.
-      ``trace``       replay an explicit ``(E, M, N)`` 0/1 availability
-                      trace VERBATIM (epoch ``p`` uses row ``p mod E``) —
-                      diurnal cycles and correlated churn instead of i.i.d.
-                      masks.  The trace is authoritative: no min_per_server
-                      top-up is applied (a replayed log must reproduce
-                      bitwise — ``load_participation_trace`` round-trip),
-                      so a fully-idle server simply carries its model.
+      ``trace``       replay an explicit ``(E, M, N)`` availability trace
+                      (epoch ``p`` uses row ``p mod E``).  A 0/1 trace is
+                      replayed VERBATIM — diurnal cycles and correlated
+                      churn instead of i.i.d. masks.  A trace with ANY
+                      fractional entry in [0, 1] is instead a per-epoch
+                      per-client sampling-RATE schedule: epoch ``p`` draws
+                      ``mask[i, j] ~ Bernoulli(trace[p mod E, i, j])``,
+                      deterministic in ``(seed, epoch)`` — logged
+                      availability PROBABILITIES (fleet telemetry exports
+                      rates, not outcomes) drive participation directly.
+                      Either way the trace is authoritative: no
+                      min_per_server top-up is applied (a replayed 0/1 log
+                      must reproduce bitwise —
+                      ``load_participation_trace`` round-trip; a rate row
+                      must realise its exact Bernoulli law), so a
+                      fully-idle server simply carries its model.
 
     ``min_per_server`` forces at least that many participants per server
     (sampled uniformly from the idle ones) so the masked Eq. 4 mean stays
@@ -129,8 +140,10 @@ class ParticipationSchedule:
             if t.ndim != 3 or t.shape[0] < 1:
                 raise ValueError(f"trace must be (E, M, N) with E >= 1, "
                                  f"got shape {t.shape}")
-            if not np.isin(t, (0, 1)).all():
-                raise ValueError("trace entries must be 0/1 availability")
+            if t.min() < 0.0 or t.max() > 1.0:
+                raise ValueError(
+                    "trace entries must be 0/1 availability or Bernoulli "
+                    "rates in [0, 1]")
         elif self.trace is not None:
             raise ValueError(f"kind={self.kind!r} does not take a trace")
 
@@ -147,7 +160,16 @@ class ParticipationSchedule:
                     f"({t.shape[1]}, {t.shape[2]}) federation but this run "
                     f"has (M, N) = ({m}, {n}) — traces replay availability "
                     f"of SPECIFIC clients and cannot be resized")
-            return t[epoch % t.shape[0]].astype(np.float32)
+            row = t[epoch % t.shape[0]]
+            if np.isin(t, (0, 1)).all():
+                # binary availability log: replayed verbatim (bitwise)
+                return row.astype(np.float32)
+            # sampling-RATE trace: per-client Bernoulli draw against this
+            # epoch's rate row, deterministic in (seed, epoch) like every
+            # other sampled kind
+            rng = np.random.default_rng((self.seed, epoch))
+            return (rng.random((m, n)) < np.asarray(row, np.float64)
+                    ).astype(np.float32)
         rng = np.random.default_rng((self.seed, epoch))
         if self.kind == "bernoulli":
             mask = (rng.random((m, n)) < self.rate)
@@ -171,8 +193,10 @@ class ParticipationSchedule:
 
     def expected_rate(self, n: int) -> float:
         """Mean fraction of participating clients (for reporting).  For
-        kind='trace' this is EXACT — the empirical mean of the replayed
-        trace, since the trace is authoritative (no top-up)."""
+        kind='trace' this is EXACT — the empirical mean of a replayed 0/1
+        trace, and the exact Bernoulli expectation (mean of the rates) of
+        a sampling-rate trace — since the trace is authoritative (no
+        top-up)."""
         if self.kind == "full":
             return 1.0
         if self.kind == "trace":
@@ -219,21 +243,29 @@ def save_participation_trace(path: str, trace: np.ndarray) -> None:
     """Write an availability trace as a JSONL log: one line per epoch,
     ``{"epoch": p, "mask": [[0/1 x N] x M]}`` — the interchange format for
     replaying real fleet availability logs through
-    ``ParticipationSchedule(kind="trace")``."""
+    ``ParticipationSchedule(kind="trace")``.  A 0/1 trace serialises as
+    integer lists (the original format, byte-stable); a sampling-RATE
+    trace (any fractional entry) serialises its rates as f32-exact floats,
+    so the round trip through ``load_participation_trace`` reproduces the
+    float32 rates bitwise."""
     t = np.asarray(trace)
     if t.ndim != 3:
         raise ValueError(f"trace must be (E, M, N), got shape {t.shape}")
+    binary = np.isin(t, (0, 1)).all()
     with open(path, "w") as f:
         for p in range(t.shape[0]):
-            f.write(json.dumps({"epoch": p,
-                                "mask": t[p].astype(int).tolist()}) + "\n")
+            row = (t[p].astype(int) if binary
+                   else t[p].astype(np.float32)).tolist()
+            f.write(json.dumps({"epoch": p, "mask": row}) + "\n")
 
 
 def load_participation_trace(path: str) -> np.ndarray:
-    """Read a JSONL availability log back into an ``(E, M, N)`` uint8
-    trace.  Lines must cover epochs 0..E-1 contiguously and in order (a
-    replayed log with a hole would silently shift every later epoch), and
-    every mask must share one (M, N) shape."""
+    """Read a JSONL availability log back into an ``(E, M, N)`` trace —
+    uint8 for a 0/1 availability log, float32 for a sampling-rate log
+    (any fractional entry; see ``ParticipationSchedule`` kind='trace').
+    Lines must cover epochs 0..E-1 contiguously and in order (a replayed
+    log with a hole would silently shift every later epoch), and every
+    mask must share one (M, N) shape."""
     rows = []
     with open(path) as f:
         for lineno, line in enumerate(filter(str.strip, f)):
@@ -243,12 +275,15 @@ def load_participation_trace(path: str) -> np.ndarray:
                     f"availability log {path!r} is not contiguous: line "
                     f"{lineno} carries epoch {rec.get('epoch')!r} (expected "
                     f"{lineno}) — a hole would shift every later epoch")
-            rows.append(np.asarray(rec["mask"], np.uint8))
+            rows.append(np.asarray(rec["mask"], np.float64))
     if not rows:
         raise ValueError(f"availability log {path!r} is empty")
     if any(r.shape != rows[0].shape or r.ndim != 2 for r in rows):
         raise ValueError(f"availability log {path!r} mixes mask shapes")
-    return np.stack(rows)
+    stack = np.stack(rows)
+    if np.isin(stack, (0, 1)).all():
+        return stack.astype(np.uint8)
+    return stack.astype(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -363,20 +398,33 @@ class SigmaTracker:
     read-out, which -> 0 under joint strong connectivity even though P
     itself converges to a skewed rank-one ``v 1'``.
 
+    ``staleness`` is the bounded-staleness depth of the consensus period
+    (``dfl.DFLConfig.staleness``): with round ``t`` mixing round
+    ``t - s``'s messages, only one round in every ``s+1`` advances the
+    chain (the rest re-mix the same delayed iterate), so the EXACT
+    per-epoch operator is ``A_p^(T_S // (s+1))`` — the tracker raises the
+    per-epoch power accordingly, keeping Theorem-1 monitoring
+    (``obs.monitor.ConvergenceMonitor``'s ``contraction_bound``) honest
+    rather than optimistically assuming all T_S synchronous rounds.
+
     Reset on topology surgery (M changes)."""
 
-    def __init__(self, m: int, mode: str = "average"):
+    def __init__(self, m: int, mode: str = "average", *, staleness: int = 0):
         if mode not in ("average", "push_sum"):
             raise ValueError(f"unknown SigmaTracker mode {mode!r}")
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
         self.m = m
         self.mode = mode
+        self.staleness = staleness
         self.prod = np.eye(m)
 
     def update(self, a: np.ndarray, t_server: int) -> float:
         op = np.asarray(a, np.float64)
         if self.mode == "push_sum":
             op = op.T
-        self.prod = np.linalg.matrix_power(op, t_server) @ self.prod
+        rounds = t_server // (self.staleness + 1)
+        self.prod = np.linalg.matrix_power(op, rounds) @ self.prod
         return self.sigma()
 
     def sigma(self) -> float:

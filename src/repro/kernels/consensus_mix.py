@@ -518,3 +518,143 @@ def bucketed_gossip_round_2d(a: jax.Array, codes: jax.Array,
     )(a, codes, scales, ref, acc, dither)
     return (out_a[:, :d], out_r[:, :d], out_q[:, :d],
             out_s[:, :d // chunk])
+
+
+# ---------------------------------------------------------------------------
+# software-pipelined bucketed round: the bounded-staleness wire body
+# ---------------------------------------------------------------------------
+
+
+def _bucketed_round_pipelined_kernel(a_ref, q_ref, s_ref, w_ref, r_ref,
+                                     c_ref, u_ref, oa_ref, or_ref, oq_ref,
+                                     os_ref, *, block_d: int, chunk: int,
+                                     qmax: float):
+    """One (M, block_d) tile of a PIPELINED bucketed round: the send side
+    (encode this round's innovation, advance the own sent-reference band)
+    runs first and depends only on local state, so its codes can leave on
+    the wire while the consume side folds the DELAYED codes (round t-s)
+    into the accumulator — the in-kernel order mirrors the data-dependence
+    split that lets XLA overlap the collective with the round's FMA work
+    in ``core.consensus``'s stale bodies."""
+    a = a_ref[...].astype(jnp.float32)                 # (M, M) resident
+    q = q_ref[...].astype(jnp.float32)                 # DELAYED codes
+    s = s_ref[...]                                     # delayed scales
+    w = w_ref[...].astype(jnp.float32)                 # current iterates
+    r = r_ref[...]                                     # sent-reference band
+    acc = c_ref[...]                                   # (M, block_d) f32
+    u = u_ref[...].astype(jnp.float32)                 # dither in [0, 1)
+    m = q.shape[0]
+    nc = block_d // chunk
+    # SEND side: encode w - r against the up-to-date sent reference
+    wc = (w - r).reshape(m, nc, chunk)
+    absmax = jnp.max(jnp.abs(wc), axis=-1, keepdims=True)
+    # multiply by the reciprocal CONSTANT, never divide: XLA's
+    # simplifier rewrites float division by a constant to a
+    # reciprocal multiply in SOME programs and not others (a 1-ulp
+    # scale skew between compilations of the same formula); an
+    # explicit literal leaves it nothing to rewrite, and matches
+    # ``comm.compressors.StochasticQuantizer._scales`` bitwise
+    scale = jnp.where(absmax > 0, absmax * (1.0 / qmax), 1.0)
+    q2 = jnp.clip(jnp.floor(wc * (1.0 / scale) + u.reshape(m, nc, chunk)),
+                  -qmax, qmax)
+    # own-decode: the sent reference advances by what just shipped, from
+    # LOCAL codes — never waits on the gather of this round's codes
+    r = r + (q2 * scale).reshape(m, block_d)
+    # CONSUME side: fold the delayed deltas.  (a · scale) folded per chunk
+    # BEFORE the code multiply, unrolled left-to-right — the exact product
+    # order of ``gossip_scan_wire_bucketed``'s stale body, which is what
+    # keeps the kernel bit-identical to it
+    c3 = q.reshape(m, nc, chunk)
+    acc3 = acc.reshape(m, nc, chunk)
+    for j in range(m):
+        acc3 = acc3 + (a[:, j:j + 1] * s[j])[:, :, None] * c3[j]
+    oa_ref[...] = acc3.reshape(m, block_d)
+    or_ref[...] = r
+    oq_ref[...] = q2.reshape(m, block_d).astype(jnp.int8)
+    os_ref[...] = scale[..., 0]
+
+
+def bucketed_gossip_round_pipelined_2d(a: jax.Array, codes: jax.Array,
+                                       scales: jax.Array, w: jax.Array,
+                                       ref: jax.Array, acc: jax.Array,
+                                       dither: jax.Array, *, bits: int = 8,
+                                       chunk: int = 256, block_d: int = 2048,
+                                       interpret: bool = True):
+    """Fused SOFTWARE-PIPELINED bucketed round: one round of
+    ``core.consensus.gossip_scan_wire_bucketed``'s bounded-staleness
+    recursion (``staleness >= 1``) in one HBM pass.
+
+    Implements (rows = servers; ``codes``/``scales`` are the DELAYED
+    payload from round ``t - s``, pulled off the staleness ring)::
+
+        codes', scales' = C(w - ref; dither)   (this round's innovation)
+        ref'  = ref + D(codes', scales')       (own-decode, local codes)
+        acc'  = acc + A · D(codes, scales)     (consume the stale deltas)
+
+    The send side (first two lines) has no data dependence on the delayed
+    payload, so round t's collective overlaps round t's accumulate — the
+    double-buffering the stale wire bodies express with their code/scale
+    ring carry.  The iterate gate ``w <- where(t >= s, acc', w)`` stays
+    OUTSIDE the kernel: it is ring-phase control, not tile math.
+
+    ``w``: (M, D) iterates (any float dtype; cast to f32 in-tile);
+    ``codes``: (M, D) int8 delayed delta codes (int4 UNPACKED into int8);
+    ``scales``: (M, D/chunk) f32 delayed scales; ``ref`` / ``acc``: the
+    (M, D) f32 band state; ``dither``: (M, D) uniform [0, 1) noise.
+    Returns ``(acc', ref', codes', scales')`` — ``codes'``/``scales'`` are
+    what this round SHIPS (push to the staleness ring), ``acc'`` the
+    consume result.  Bit-identical to the stale jnp oracle (encode →
+    own-decode → folded left-to-right accumulate) under jit — asserted in
+    ``tests/test_overlap.py``."""
+    m, d = codes.shape
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    if d % chunk:
+        raise ValueError(f"chunk={chunk} must divide D={d} (pad the wire "
+                         f"buffer to the bucket grid first, as the gossip "
+                         f"paths do)")
+    block_d = max(chunk, min(block_d, d))
+    if block_d % chunk:
+        raise ValueError(f"chunk={chunk} must divide block_d={block_d}")
+    nb = pl.cdiv(d, block_d)
+    pad = nb * block_d - d
+    if pad:     # ragged tile grid: zero codes / unit scales are inert
+        codes = jnp.pad(codes, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // chunk)),
+                         constant_values=1.0)
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        ref = jnp.pad(ref, ((0, 0), (0, pad)))
+        acc = jnp.pad(acc, ((0, 0), (0, pad)))
+        dither = jnp.pad(dither, ((0, 0), (0, pad)))
+    qmax = float(2 ** (bits - 1) - 1)
+    nc_blk = block_d // chunk
+    kernel = functools.partial(_bucketed_round_pipelined_kernel,
+                               block_d=block_d, chunk=chunk, qmax=qmax)
+    out_a, out_r, out_q, out_s = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),        # A resident
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, nc_blk), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m, nc_blk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.float32),
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.float32),
+            jax.ShapeDtypeStruct((m, nb * block_d), jnp.int8),
+            jax.ShapeDtypeStruct((m, nb * nc_blk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, codes, scales, w, ref, acc, dither)
+    return (out_a[:, :d], out_r[:, :d], out_q[:, :d],
+            out_s[:, :d // chunk])

@@ -191,6 +191,7 @@ def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
                          compression: str = "none",
                          error_feedback: bool = False,
                          wire: str = "simulated",
+                         staleness: int = 0,
                          compression_flat_sharding=None) -> Any:
     """Mesh-aware consensus-backend construction (the production path).
 
@@ -208,8 +209,13 @@ def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
     layout: the device's whole local tree rides as one padded code buffer,
     one s8 + one f32 all-gather per round regardless of leaf count
     (``consensus.gossip_scan_wire_bucketed`` is the bit-exact in-graph
-    reference; both int8 and packed int4 ship at engine level).  Inject
-    the result via
+    reference; both int8 and packed int4 ship at engine level).
+    ``staleness=s > 0`` software-pipelines the wire rounds (consume codes
+    from round ``t - s``, so round t's gather overlaps round t's mix) —
+    it requires the delta-coded physical wire, i.e. a non-"none"
+    ``compression`` AND ``wire="physical"``; the wrapped backends raise
+    otherwise (``consensus.ShardMapBackend`` / ``CompressedBackend``).
+    Inject the result via
     ``DFLConfig.consensus_backend``; selection between this,
     'gossip_blocked' and plain 'gossip' is per deployment plan
     (``launch.plans.DeploymentPlan.consensus_backend``)."""
@@ -221,7 +227,8 @@ def fl_consensus_backend(topo: Any, mesh: Mesh, server_tree: Any, *,
             else np.ones((1, 1)))
     specs = fl_server_specs(server_tree, mesh, tp_axis=tp_axis)
     kw = {} if block is None else {"block": block}
-    backend = cns.ShardMapBackend(mesh, a_np, topo.t_server, specs, **kw)
+    backend = cns.ShardMapBackend(mesh, a_np, topo.t_server, specs,
+                                  staleness=staleness, **kw)
     if compression != "none":
         from repro.comm.compressors import make_compressor
         backend = cns.CompressedBackend(

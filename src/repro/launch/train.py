@@ -39,6 +39,7 @@ def resolve_consensus_backend(backend: str, consensus_mode: str,
                               compression: str = "none",
                               error_feedback: bool = False,
                               wire: str = "simulated",
+                              staleness: int = 0,
                               ) -> Tuple[str, Optional[object]]:
     """Map the ``--consensus-backend`` CLI flag to the DFLConfig pair
     ``(consensus_mode, consensus_backend)``.
@@ -85,7 +86,8 @@ def resolve_consensus_backend(backend: str, consensus_mode: str,
                                               tp_axis=None,
                                               compression=compression,
                                               error_feedback=error_feedback,
-                                              wire=wire)
+                                              wire=wire,
+                                              staleness=staleness)
 
 
 def _setup_lm(arch_id, smoke, servers, clients, t_client, t_server, graph,
@@ -280,6 +282,7 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                   consensus_backend: str = "auto",
                   compression: str = "none", error_feedback: bool = False,
                   wire: str = "simulated",
+                  superepoch: int = 1, staleness: int = 0,
                   participation_rate: float = 1.0,
                   participation_kind: str = "bernoulli",
                   edge_drop_prob: float = 0.0,
@@ -305,14 +308,21 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
     ``consensus_mode`` (``trimmed_mean[:f]`` | ``median`` | ``clipped[:mult]``)
     to keep the honest servers converging.  ``participation_trace`` replays a
     recorded JSONL availability log (``load_participation_trace``) instead of
-    sampling participation stochastically."""
+    sampling participation stochastically.
+
+    ``superepoch=K > 1`` fuses K epochs per compiled dispatch (history
+    element-identical at any K; checkpoint cadence coarsens to block
+    boundaries); ``staleness=s > 0`` lets gossip round t mix codes from
+    round t-s, overlapping each round's collective with its compute
+    (changes the consensus operator — see docs/dynamic_federation.md)."""
     cfg, topo, loss_fn, optimizer, pipe = _setup_lm(
         arch_id, smoke, servers, clients, t_client, t_server, graph, gamma,
         seq_len, per_client_batch, seed, attn_impl, mixing=mixing)
     params = tf.init_params(jax.random.key(seed), cfg)
     consensus_mode, backend = resolve_consensus_backend(
         consensus_backend, consensus_mode, topo, params,
-        compression=compression, error_feedback=error_feedback, wire=wire)
+        compression=compression, error_feedback=error_feedback, wire=wire,
+        staleness=staleness)
 
     if participation_trace:
         part = ParticipationSchedule(
@@ -360,7 +370,8 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                          byzantine=(ByzantineSchedule.parse(byzantine,
                                                             seed=seed)
                                     if byzantine else None),
-                         obs=obs)
+                         obs=obs, superepoch=superepoch,
+                         staleness=staleness)
 
     state = init_dfl_state(engine.cfg, params, optimizer,
                            jax.random.key(seed + 1))
@@ -381,10 +392,24 @@ def train_dynamic(arch_id: str, *, smoke: bool = True, servers: int = 2,
                       meta={"arch": cfg.name, "epoch": epoch,
                             "alive": list(engine.alive)})
 
-    # observe=False: run_epoch observes internally, with the per-link /
-    # per-server labels and span structure the host loop cannot see
-    history = _run_epochs(epochs, run_one, obs, observe=False,
-                          ckpt_save=ckpt_save)
+    if superepoch > 1:
+        # superepoch dispatch: the engine runs K-epoch blocks, observing
+        # each epoch internally; checkpoint cadence coarsens to block
+        # boundaries (the state only materializes host-side post-block —
+        # per-epoch saves would all snapshot the block-final state)
+        history = {}
+        for epoch0, kblk in engine._plan_blocks(epochs):
+            state, recs = engine.run_superepoch(state, epoch0, kblk,
+                                                batch_fn)
+            for rec in recs:
+                for k, v in rec.items():
+                    history.setdefault(k, []).append(v)
+            ckpt_save(epoch0 + kblk - 1)
+    else:
+        # observe=False: run_epoch observes internally, with the per-link /
+        # per-server labels and span structure the host loop cannot see
+        history = _run_epochs(epochs, run_one, obs, observe=False,
+                              ckpt_save=ckpt_save)
     obs.close()
     if chrome_trace:
         obs.tracer.save_chrome(chrome_trace)
@@ -445,6 +470,17 @@ def build_parser() -> argparse.ArgumentParser:
                         "the collectives themselves, re-quantizing every "
                         "gossip hop (quantizers + gossip/gossip_blocked/"
                         "shard_map backends only)")
+    p.add_argument("--superepoch", type=int, default=1,
+                   help="epochs fused per compiled dispatch (the megastep "
+                        "K): the host loop, schedule generation, and the "
+                        "metric readback run once per K epochs; history is "
+                        "element-identical at any K (dynamic engine only)")
+    p.add_argument("--staleness", type=int, default=0,
+                   help="bounded gossip staleness s: round t mixes peer "
+                        "codes from round t-s, so each round's collective "
+                        "overlaps the next rounds' compute; 0 = the "
+                        "synchronous path, bitwise (gossip/gossip_blocked "
+                        "modes, and the delta-coded physical wire)")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--log-every", type=int, default=1,
                    help="console epoch-line cadence (ConsoleSink log_every)")
@@ -507,9 +543,13 @@ def main() -> None:
     dynamic = (args.participation_rate < 1.0 or args.edge_drop_prob > 0.0
                or args.straggler_weaken > 0.0
                or args.asymmetric_drop_prob > 0.0 or bool(args.faults)
-               or bool(args.byzantine) or bool(args.participation_trace))
+               or bool(args.byzantine) or bool(args.participation_trace)
+               # superepoch fusion and bounded staleness live in the
+               # dynamic engine / its consensus backends
+               or args.superepoch > 1 or args.staleness > 0)
     if dynamic:
         train_dynamic(args.arch,
+                      superepoch=args.superepoch, staleness=args.staleness,
                       participation_rate=args.participation_rate,
                       participation_kind=args.participation_kind,
                       edge_drop_prob=args.edge_drop_prob,

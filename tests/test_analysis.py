@@ -240,7 +240,8 @@ def test_audit_wire_hlo_catches_float_payload():
 def test_contract_table_covers_matrix_and_is_green():
     assert len(CONTRACT_TABLE) >= 12
     axes = {(c.consensus_mode, c.mixing, c.compression, c.error_feedback,
-             c.wire, c.dynamic) for c in CONTRACT_TABLE}
+             c.wire, c.dynamic, c.superepoch, c.staleness)
+            for c in CONTRACT_TABLE}
     assert len(axes) == len(CONTRACT_TABLE), "duplicate contract cells"
     results = audit_table()
     bad = [r for r in results if not r.ok]

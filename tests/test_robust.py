@@ -258,6 +258,63 @@ def test_trace_schedule_drives_engine():
     np.testing.assert_allclose(hist["participation"], expect, atol=1e-6)
 
 
+def test_rate_trace_bernoulli_semantics_and_expected_rate():
+    """A float-rate (E, M, N) trace is interpreted as per-epoch Bernoulli
+    RATES: the mask is the deterministic (seed, epoch) draw against the
+    epoch's rate row, and expected_rate is the exact mean of the rates."""
+    rng = np.random.default_rng(11)
+    trace = rng.uniform(0.0, 1.0, size=(5, 3, 4)).astype(np.float32)
+    sched = ParticipationSchedule(kind="trace", trace=trace, seed=7)
+    for epoch in range(10):                     # wraps past the trace length
+        row = trace[epoch % 5]
+        draw = np.random.default_rng((7, epoch)).random((3, 4))
+        np.testing.assert_array_equal(
+            sched.mask(epoch, 3, 4),
+            (draw < row.astype(np.float64)).astype(np.float32))
+        # deterministic in (seed, epoch): independent of call order
+        np.testing.assert_array_equal(sched.mask(epoch, 3, 4),
+                                      sched.mask(epoch, 3, 4))
+    assert sched.expected_rate(4) == pytest.approx(
+        float(np.asarray(trace, np.float64).mean()))
+    # the empirical mean over many epochs concentrates on the rate mean
+    empirical = np.mean([sched.mask(e, 3, 4) for e in range(400)])
+    assert empirical == pytest.approx(float(trace.mean()), abs=0.03)
+
+
+def test_rate_trace_jsonl_roundtrip_float32(tmp_path):
+    """Rate traces round-trip through the JSONL log f32-bitwise, while a
+    0/1 availability log keeps the original integer-list format."""
+    rng = np.random.default_rng(3)
+    rates = rng.uniform(0.0, 1.0, size=(4, 2, 3)).astype(np.float32)
+    path = tmp_path / "rates.jsonl"
+    save_participation_trace(path, rates)
+    loaded = load_participation_trace(path)
+    assert loaded.dtype == np.float32
+    np.testing.assert_array_equal(loaded, rates)          # bitwise
+    # loaded trace drives the same masks as the in-memory one
+    a = ParticipationSchedule(kind="trace", trace=rates, seed=1)
+    b = ParticipationSchedule(kind="trace", trace=loaded, seed=1)
+    for epoch in range(4):
+        np.testing.assert_array_equal(a.mask(epoch, 2, 3),
+                                      b.mask(epoch, 2, 3))
+    # binary logs stay integer lists (byte-stable interchange format)
+    binary = diurnal_trace(3, 2, 2, seed=0)
+    bpath = tmp_path / "binary.jsonl"
+    save_participation_trace(bpath, binary)
+    rec = json.loads(bpath.read_text().splitlines()[0])
+    assert all(isinstance(v, int) for row in rec["mask"] for v in row)
+    assert load_participation_trace(bpath).dtype == np.uint8
+
+
+def test_rate_trace_rejects_out_of_range():
+    bad = np.full((2, 2, 2), 1.5, np.float32)
+    with pytest.raises(ValueError, match="Bernoulli"):
+        ParticipationSchedule(kind="trace", trace=bad)
+    with pytest.raises(ValueError, match="Bernoulli"):
+        ParticipationSchedule(kind="trace",
+                              trace=-0.1 * np.ones((1, 2, 2), np.float32))
+
+
 # ---------------------------------------------------------------------------
 # refusal surface
 # ---------------------------------------------------------------------------
